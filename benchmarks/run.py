@@ -1,0 +1,38 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (plus the §Roofline pointer:
+the 40-cell roofline table comes from ``repro.launch.dryrun`` because it
+needs 512 placeholder devices — run separately).
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (fig2_snr, fig3_efficiency, fig4_breakdown,
+                            kernels_micro, table12_lm, table34_niah)
+    mods = [fig2_snr, table12_lm, table34_niah, fig3_efficiency,
+            fig4_breakdown, kernels_micro]
+    rows = []
+    failed = []
+    for mod in mods:
+        name = mod.__name__.split(".")[-1]
+        print(f"=== {name} ===", file=sys.stderr)
+        try:
+            rows.extend(mod.bench())
+        except Exception as e:
+            failed.append((name, repr(e)))
+            traceback.print_exc()
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    if failed:
+        print(f"{len(failed)} benchmark(s) FAILED: {failed}",
+              file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

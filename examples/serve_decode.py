@@ -1,0 +1,27 @@
+"""Serving example: batched prefill + greedy decode with MoBA KV routing.
+
+    PYTHONPATH=src python examples/serve_decode.py --arch qwen3-0.6b
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch.serve import serve
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args()
+    toks = serve(args.arch, batch=args.batch, prompt_len=args.prompt_len,
+                 gen=args.gen, smoke=True)
+    print("generated token ids (greedy):")
+    print(toks)
+
+
+if __name__ == "__main__":
+    main()

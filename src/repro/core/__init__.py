@@ -1,0 +1,1 @@
+from repro.core import attention, key_conv, moba, routing, snr  # noqa: F401

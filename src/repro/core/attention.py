@@ -1,0 +1,94 @@
+"""Dense and sliding-window attention + the per-layer dispatcher.
+
+These are the baselines the paper compares against (dense) and interleaves
+with (SWA, window 256, odd layers).  All math in fp32, inputs bf16.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import AttentionConfig
+from repro.core.moba import moba_attention, moba_decode_attention
+
+NEG_INF = -1e30
+
+
+def _grouped_scores(q, k, scale):
+    b, h, nq, d = q.shape
+    hkv = k.shape[1]
+    qg = q.reshape(b, hkv, h // hkv, nq, d).astype(jnp.float32)
+    s = jnp.einsum("bhgqd,bhsd->bhgqs", qg, k.astype(jnp.float32)) * scale
+    return s.reshape(b, h, nq, k.shape[2])
+
+
+def _apply_and_project(p, v, out_dtype):
+    b, h, nq, n = p.shape
+    hkv = v.shape[1]
+    pg = p.reshape(b, hkv, h // hkv, nq, n)
+    o = jnp.einsum("bhgqs,bhsd->bhgqd", pg, v.astype(jnp.float32))
+    return o.reshape(b, h, nq, v.shape[-1]).astype(out_dtype)
+
+
+def dense_attention(q, k, v, causal: bool = True,
+                    q_positions: Optional[jax.Array] = None,
+                    kv_len: Optional[jax.Array] = None,
+                    window: int = 0,
+                    scale: Optional[float] = None) -> jax.Array:
+    """Dense (optionally sliding-window) attention with GQA grouping.
+
+    window > 0 keeps keys with q_pos - window < s <= q_pos.
+    """
+    b, h, nq, d = q.shape
+    n = k.shape[2]
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    if q_positions is None:
+        q_positions = jnp.arange(nq) + (n - nq)
+    s = _grouped_scores(q, k, scale)
+    spos = jnp.arange(n)
+    mask = jnp.ones((nq, n), bool)
+    if causal:
+        mask &= q_positions[:, None] >= spos[None, :]
+    if window:
+        mask &= q_positions[:, None] - spos[None, :] < window
+    if kv_len is not None:
+        mask &= spos[None, :] < kv_len
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(mask.any(-1)[None, None, :, None], p, 0.0)
+    return _apply_and_project(p, v, q.dtype)
+
+
+def attention_dispatch(cfg: AttentionConfig, kind: str, q, k, v,
+                       key_conv_weights=None,
+                       q_positions=None, kv_len=None,
+                       moba_impl: str = "reference",
+                       causal: bool = True,
+                       centroids=None) -> jax.Array:
+    """Route to dense / swa / moba according to the layer kind."""
+    if kind == "dense":
+        return dense_attention(q, k, v, causal=causal,
+                               q_positions=q_positions, kv_len=kv_len,
+                               scale=cfg.scale)
+    if kind == "swa":
+        return dense_attention(q, k, v, causal=causal,
+                               q_positions=q_positions, kv_len=kv_len,
+                               window=cfg.window, scale=cfg.scale)
+    if kind == "moba":
+        assert cfg.moba is not None
+        if q.shape[2] == 1 and kv_len is not None:
+            if moba_impl.startswith("sp"):
+                from repro.distributed.moba_sp import moba_decode_cp
+                return moba_decode_cp(q, k, v, kv_len, cfg.moba,
+                                      scale=cfg.scale, centroids=centroids)
+            return moba_decode_attention(q, k, v, kv_len, cfg.moba,
+                                         scale=cfg.scale,
+                                         centroids=centroids)
+        return moba_attention(q, k, v, cfg.moba,
+                              key_conv_weights=key_conv_weights,
+                              impl=moba_impl, q_positions=q_positions,
+                              scale=cfg.scale)
+    raise ValueError(f"unknown attention kind {kind!r}")

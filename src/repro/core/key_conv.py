@@ -1,0 +1,69 @@
+"""Short depthwise causal convolution on keys (paper Appendix B).
+
+``k'_t = k_t + SiLU( sum_{l=0}^{W-1} W_l ⊙ k_{t-l} )``
+
+Depthwise over every key channel (per kv-head, per head-dim), causal
+(left-padded), SiLU activation, residual.  Applied to keys *before* both
+routing (centroid computation) and attention, so router gradients flow
+through it and encourage within-block clustering (raising Δμ_eff).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_key_conv(key: jax.Array, width: int, num_kv_heads: int,
+                  head_dim: int, dtype=jnp.float32) -> jax.Array:
+    """Weights shaped (W, num_kv_heads, head_dim); small init so the
+    residual branch starts near identity."""
+    w = jax.random.normal(key, (width, num_kv_heads, head_dim), dtype)
+    return w * (0.02 / max(1, width))
+
+
+def apply_key_conv(weights: jax.Array, k: jax.Array) -> jax.Array:
+    """Apply depthwise causal conv.
+
+    weights: (W, Hkv, d); k: (..., Hkv, N, d)  ->  same shape as k.
+
+    Implemented as a sum of W shifted copies — W is 3 or 5, so this is a
+    handful of cheap vector ops that XLA fuses; no kernel needed.
+    """
+    width = weights.shape[0]
+    conv = jnp.zeros_like(k, dtype=jnp.float32)
+    kf = k.astype(jnp.float32)
+    for lag in range(width):
+        shifted = kf if lag == 0 else jnp.roll(kf, lag, axis=-2)
+        if lag > 0:
+            # causal: zero the wrapped-around prefix
+            n = k.shape[-2]
+            mask = (jnp.arange(n) >= lag).astype(kf.dtype)
+            shifted = shifted * mask[:, None]
+        conv = conv + shifted * weights[lag].astype(jnp.float32)[..., None, :]
+    out = kf + jax.nn.silu(conv)
+    return out.astype(k.dtype)
+
+
+def key_conv_state_init(width: int, batch: int, num_kv_heads: int,
+                        head_dim: int, dtype=jnp.bfloat16) -> jax.Array:
+    """Decode-time ring buffer of the last W-1 raw keys."""
+    return jnp.zeros((batch, num_kv_heads, max(width - 1, 0), head_dim), dtype)
+
+
+def apply_key_conv_decode(weights: jax.Array, k_new: jax.Array,
+                          state: jax.Array):
+    """One-step causal conv for decode.
+
+    k_new: (B, Hkv, 1, d); state: (B, Hkv, W-1, d) holding previous raw keys
+    (most recent last).  Returns (k_conv, new_state).
+    """
+    width = weights.shape[0]
+    hist = jnp.concatenate([state, k_new], axis=-2)  # (B,Hkv,W,d) raw keys
+    kf = hist.astype(jnp.float32)
+    # conv at the current position: sum_l W_l * k_{t-l}
+    taps = kf[..., ::-1, :][..., :width, :]  # most recent first
+    w = weights.astype(jnp.float32)[:, None, :, :].transpose(1, 2, 0, 3)
+    conv = jnp.sum(taps * w, axis=-2, keepdims=True)
+    out = kf[..., -1:, :] + jax.nn.silu(conv)
+    new_state = hist[..., 1:, :] if width > 1 else state
+    return out.astype(k_new.dtype), new_state

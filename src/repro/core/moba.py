@@ -1,0 +1,197 @@
+"""Mixture of Block Attention — pure-JAX reference + public entry point.
+
+The reference path materializes the N×N mask and is the correctness oracle
+for the Pallas kernels (`repro.kernels`).  The public `moba_attention`
+dispatches between implementations.
+
+Shapes: q (B, H, Nq, d); k, v (B, Hkv, N, d) with H % Hkv == 0 (GQA —
+query heads grouped onto kv heads, paper App. C: no KV duplication, only
+index remapping; here expressed via reshape).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoBAConfig
+from repro.core import routing
+from repro.core.key_conv import apply_key_conv
+
+NEG_INF = routing.NEG_INF
+
+
+def _group_queries(q: jax.Array, num_kv_heads: int) -> jax.Array:
+    b, h, n, d = q.shape
+    g = h // num_kv_heads
+    return q.reshape(b, num_kv_heads, g, n, d)
+
+
+def moba_selection(q: jax.Array, k: jax.Array, cfg: MoBAConfig,
+                   q_positions: Optional[jax.Array] = None) -> jax.Array:
+    """Routing only: returns selected block ids (B, H, Nq, top_k).
+
+    ``k`` must already be key-conv'd if key conv is enabled.
+    """
+    b, hkv, n, d = k.shape
+    nq = q.shape[2]
+    if q_positions is None:
+        q_positions = jnp.arange(nq) + (n - nq)  # suffix alignment (decode)
+    cents = routing.block_centroids(k, cfg.block_size)      # (B,Hkv,nb,d)
+    qg = _group_queries(q, hkv)                              # (B,Hkv,G,Nq,d)
+    scores = jnp.einsum("bhgqd,bhnd->bhgqn", qg.astype(jnp.float32),
+                        cents.astype(jnp.float32))
+    sel = routing.select_blocks(scores, cfg.top_k, cfg.block_size,
+                                q_positions, causal=cfg.causal)
+    return sel.reshape(b, -1, nq, cfg.top_k)
+
+
+def moba_attention_reference(q: jax.Array, k: jax.Array, v: jax.Array,
+                             cfg: MoBAConfig,
+                             q_positions: Optional[jax.Array] = None,
+                             kv_len: Optional[jax.Array] = None,
+                             scale: Optional[float] = None) -> jax.Array:
+    """Oracle implementation: O(N^2) masked softmax attention where the
+    mask is derived from MoBA block selection.
+
+    mask[t, s] = selected[t, block(s)] AND s <= t (causal)   [causal mode]
+    mask[t, s] = selected[t, block(s)]                       [bidirectional]
+    """
+    b, h, nq, d = q.shape
+    _, hkv, n, _ = k.shape
+    nb = -(-n // cfg.block_size)
+    if q_positions is None:
+        q_positions = jnp.arange(nq) + (n - nq)
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+
+    sel = moba_selection(q, k, cfg, q_positions)             # (B,H,Nq,k)
+    sel_mask = routing.selection_mask(sel, nb)               # (B,H,Nq,nb)
+    key_block = jnp.arange(n) // cfg.block_size              # (N,)
+    tok_sel = jnp.take_along_axis(
+        sel_mask, key_block[None, None, None, :].repeat(nq, 2), axis=-1
+    )                                                        # (B,H,Nq,N)
+    mask = tok_sel
+    if cfg.causal:
+        causal = q_positions[:, None] >= jnp.arange(n)[None, :]
+        mask = mask & causal[None, None]
+    if kv_len is not None:
+        mask = mask & (jnp.arange(n)[None, None, None, :] < kv_len)
+
+    qg = _group_queries(q, hkv).astype(jnp.float32)
+    s = jnp.einsum("bhgqd,bhsd->bhgqs", qg, k.astype(jnp.float32)) * scale
+    s = s.reshape(b, h, nq, n)
+    s = jnp.where(mask, s, NEG_INF)
+    # guard fully-masked rows (cannot happen causally: own block present)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(mask.any(-1, keepdims=True), p, 0.0)
+    pg = p.reshape(b, hkv, -1, nq, n)
+    o = jnp.einsum("bhgqs,bhsd->bhgqd", pg, v.astype(jnp.float32))
+    return o.reshape(b, h, nq, d).astype(q.dtype)
+
+
+def moba_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                   cfg: MoBAConfig,
+                   key_conv_weights: Optional[jax.Array] = None,
+                   impl: str = "reference",
+                   q_positions: Optional[jax.Array] = None,
+                   scale: Optional[float] = None,
+                   interpret: bool = True) -> jax.Array:
+    """Public MoBA attention entry point.
+
+    impl: 'reference' (O(N^2) oracle), 'kernel' (Pallas FlashMoBA path),
+          'sparse' (pure-XLA gather-and-densify, production fallback).
+    """
+    if key_conv_weights is not None:
+        k = apply_key_conv(key_conv_weights, k)
+    if impl == "reference":
+        return moba_attention_reference(q, k, v, cfg, q_positions,
+                                        scale=scale)
+    if impl == "kernel":
+        from repro.kernels import ops
+        return ops.flash_moba(q, k, v, cfg, q_positions=q_positions,
+                              scale=scale, interpret=interpret)
+    if impl in ("sparse", "sparse_unrolled"):
+        from repro.kernels import ref
+        return ref.moba_sparse_xla(q, k, v, cfg, q_positions=q_positions,
+                                   scale=scale,
+                                   use_scan=(impl == "sparse"))
+    if impl in ("sp", "sp_unrolled"):
+        from repro.distributed.moba_sp import moba_attention_sp
+        return moba_attention_sp(q, k, v, cfg, scale=scale,
+                                 q_positions=q_positions,
+                                 use_scan=(impl == "sp"))
+    raise ValueError(f"unknown impl {impl!r}")
+
+
+def moba_decode_attention(q: jax.Array, k_cache: jax.Array,
+                          v_cache: jax.Array, kv_len: jax.Array,
+                          cfg: MoBAConfig,
+                          scale: Optional[float] = None,
+                          centroids: Optional[jax.Array] = None
+                          ) -> jax.Array:
+    """Single-step decode: q (B, H, 1, d) against a (B, Hkv, Nmax, d) cache
+    of which the first ``kv_len`` positions are valid.
+
+    Reads only centroids + the k selected blocks: O(Nmax/B · d + k·B·d) per
+    query head — the sub-quadratic decode path MoBA exists for.
+    """
+    b, h, _, d = q.shape
+    _, hkv, nmax, _ = k_cache.shape
+    bs = cfg.block_size
+    nb = -(-nmax // bs)
+    if nb * bs != nmax:  # ragged cache tail: pad (padded tokens are
+        # masked out by the kv_len check below)
+        k_cache = routing.pad_to_blocks(k_cache, bs, axis=-2)
+        v_cache = routing.pad_to_blocks(v_cache, bs, axis=-2)
+        nmax = nb * bs
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+
+    # incremental centroid cache (N/B·d reads) when available; otherwise
+    # recompute from the full cache (N·d reads — the baseline cost)
+    cents = (centroids if centroids is not None
+             else routing.block_centroids(k_cache, bs, kv_len=kv_len))
+    qg = _group_queries(q, hkv).astype(jnp.float32)          # (B,Hkv,G,1,d)
+    scores = jnp.einsum("bhgqd,bhnd->bhgqn", qg,
+                        cents.astype(jnp.float32))
+    # causal over blocks: block j valid iff it contains any position < kv_len
+    blk_start = jnp.arange(nb) * bs
+    valid = blk_start < kv_len                               # (nb,) or (B,1..)
+    valid = jnp.broadcast_to(valid, scores.shape[:-1] + (nb,))
+    own = jnp.maximum(kv_len - 1, 0) // bs
+    is_own = jnp.arange(nb) == own
+    is_own = jnp.broadcast_to(is_own, scores.shape[:-1] + (nb,))
+    masked = jnp.where(valid, scores, NEG_INF)
+    masked = jnp.where(is_own, routing.POS_INF, masked)
+    top_s, top_idx = jax.lax.top_k(masked, min(cfg.top_k, nb))  # (...,k)
+    if top_idx.shape[-1] < cfg.top_k:
+        padw = cfg.top_k - top_idx.shape[-1]
+        top_s = jnp.concatenate(
+            [top_s, jnp.full(top_s.shape[:-1] + (padw,), NEG_INF)], -1)
+        top_idx = jnp.concatenate(
+            [top_idx, jnp.zeros(top_idx.shape[:-1] + (padw,),
+                                top_idx.dtype)], -1)
+    sel_valid = top_s > NEG_INF / 2
+
+    # gather the k selected blocks: (B,Hkv,G,1,k,bs,d)
+    kb = k_cache.reshape(b, hkv, nb, bs, d)
+    vb = v_cache.reshape(b, hkv, nb, bs, d)
+    idx = jnp.where(sel_valid, top_idx, 0)
+
+    def gather_blocks(blocks, sel):     # blocks (nb,bs,d), sel (G,1,k)
+        return blocks[sel]              # (G,1,k,bs,d)
+
+    kg = jax.vmap(jax.vmap(gather_blocks))(kb, idx)
+    vg = jax.vmap(jax.vmap(gather_blocks))(vb, idx)
+    s = jnp.einsum("bhgqd,bhgqkld->bhgqkl", qg, kg.astype(jnp.float32))
+    s = s * scale
+    pos = idx[..., :, None] * bs + jnp.arange(bs)            # (...,k,bs)
+    tok_valid = (pos < kv_len) & sel_valid[..., None]
+    s = jnp.where(tok_valid, s, NEG_INF)
+    sf = s.reshape(*s.shape[:-2], -1)
+    p = jax.nn.softmax(sf, axis=-1).reshape(s.shape)
+    o = jnp.einsum("bhgqkl,bhgqkld->bhgqd", p, vg.astype(jnp.float32))
+    return o.reshape(b, h, 1, d).astype(q.dtype)

@@ -1,0 +1,50 @@
+"""Pallas kernel: fused key-block centroid computation (paper Alg. 2).
+
+Grid (heads, n_blocks); each step loads one (B, d) key block into VMEM and
+reduces it to its (1, d) mean.  Output is B× smaller than K — the point of
+the fusion is that subsequent routing reads K̃, not K.
+
+TPU notes: block shapes are (1, B, d) with d MXU-lane-aligned; reduction
+runs on the VPU in fp32.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _centroid_kernel(k_ref, out_ref, *, block_size: int, n_tokens: int):
+    j = pl.program_id(1)
+    kb = k_ref[0].astype(jnp.float32)                     # (B, d)
+    # mask the ragged tail block (positions >= n_tokens)
+    pos = j * block_size + jax.lax.broadcasted_iota(
+        jnp.int32, (block_size, 1), 0)
+    valid = (pos < n_tokens).astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(valid), 1.0)
+    out_ref[0] = (jnp.sum(kb * valid, axis=0, keepdims=True)
+                  / denom).astype(out_ref.dtype)
+
+
+def block_centroids_kernel(k: jax.Array, block_size: int,
+                           interpret: bool = True) -> jax.Array:
+    """k: (H, N, d) -> (H, nb, d).  N padded to a block multiple by caller
+    or handled via the ragged-tail mask here."""
+    h, n, d = k.shape
+    nb = -(-n // block_size)
+    pad = nb * block_size - n
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0)))
+    return pl.pallas_call(
+        functools.partial(_centroid_kernel, block_size=block_size,
+                          n_tokens=n),
+        grid=(h, nb),
+        in_specs=[pl.BlockSpec((1, block_size, d),
+                               lambda hh, j: (hh, j, 0))],
+        out_specs=pl.BlockSpec((1, 1, d), lambda hh, j: (hh, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, nb, d), k.dtype),
+        interpret=interpret,
+    )(k)

@@ -1,0 +1,128 @@
+"""Pallas kernel: Flash TopK (paper Alg. 3, TPU adaptation).
+
+Streams tiles of Q against tiles of the centroid matrix K̃ and maintains a
+running per-query top-k (scores, block ids) in VMEM scratch — the full
+(Nq × nb) score matrix never exists in HBM.
+
+GPU→TPU adaptation: the paper's per-thread bubble sort becomes a k-pass
+masked max-extraction over the (running ∪ candidate) score tile — each pass
+is one VPU-wide max + compare, with a cumsum tie-break; no per-lane
+data-dependent control flow.
+
+Selection semantics (must match `repro.core.routing.select_blocks`):
+  * future blocks masked to −inf
+  * own block forced to +inf (always selected, counts toward k)
+  * slots with score ≤ −inf/2 are sentinels (block id = nb)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30       # mask level (matches core.routing)
+EXTRACTED = -2e30     # strictly below mask level: never re-picked as valid
+INIT = -3e30
+POS_INF = 1e30
+
+
+def _topk_update(run_s, run_i, cand_s, cand_i, top_k: int):
+    """Merge candidates into the running top-k. All (Tq, ·) fp32/int32."""
+    comb_s = jnp.concatenate([run_s, cand_s], axis=1)
+    comb_i = jnp.concatenate([run_i, cand_i], axis=1)
+    new_s, new_i = [], []
+    for _ in range(top_k):
+        m = jnp.max(comb_s, axis=1, keepdims=True)          # (Tq, 1)
+        hit = comb_s == m
+        first = (jnp.cumsum(hit.astype(jnp.int32), axis=1) == 1) & hit
+        idx = jnp.sum(jnp.where(first, comb_i, 0), axis=1)
+        new_s.append(m[:, 0])
+        new_i.append(idx)
+        comb_s = jnp.where(first, EXTRACTED, comb_s)
+    return jnp.stack(new_s, axis=1), jnp.stack(new_i, axis=1)
+
+
+def _flash_topk_kernel(q_ref, c_ref, idx_ref, s_run, i_run, *,
+                       top_k: int, block_size: int, cent_tile: int,
+                       n_blocks: int, n_cent_tiles: int, q_tile: int,
+                       causal: bool, q_pos_offset: int):
+    ct = pl.program_id(2)
+
+    @pl.when(ct == 0)
+    def _init():
+        s_run[...] = jnp.full_like(s_run, INIT)
+        i_run[...] = jnp.zeros_like(i_run)
+
+    q = q_ref[0].astype(jnp.float32)                       # (Tq, d)
+    cents = c_ref[0].astype(jnp.float32)                   # (C, d)
+    s = jax.lax.dot_general(q, cents, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (Tq, C)
+
+    qt = pl.program_id(1)
+    qpos = (qt * q_tile + q_pos_offset
+            + jax.lax.broadcasted_iota(jnp.int32, (q_tile, cent_tile), 0))
+    cand = (ct * cent_tile
+            + jax.lax.broadcasted_iota(jnp.int32, (q_tile, cent_tile), 1))
+    own = qpos // block_size
+    valid = cand < n_blocks
+    if causal:
+        s = jnp.where(cand > own, NEG_INF, s)
+        s = jnp.where((cand == own) & valid, POS_INF, s)
+    s = jnp.where(valid, s, NEG_INF)
+
+    ns, ni = _topk_update(s_run[...], i_run[...], s, cand, top_k)
+    s_run[...] = ns
+    i_run[...] = ni
+
+    @pl.when(ct == n_cent_tiles - 1)
+    def _emit():
+        final = jnp.where(s_run[...] <= NEG_INF / 2, n_blocks, i_run[...])
+        idx_ref[0] = final.astype(jnp.int32)
+
+
+def flash_topk(q: jax.Array, centroids: jax.Array, top_k: int,
+               block_size: int, *, group: int = 1,
+               num_q_heads: int = 0, causal: bool = True,
+               q_pos_offset: int = 0, q_tile: int = 128,
+               cent_tile: int = 128, interpret: bool = True) -> jax.Array:
+    """q: (BH, Nq, d); centroids: (BKV, nb, d) where the leading dims are
+    flattened (batch · heads) and BH = batch*H, BKV = batch*Hkv,
+    H = Hkv*group.  ``num_q_heads`` is H (defaults to BH: single batch).
+
+    Returns (BH, Nq, top_k) int32 selected block ids (sentinel nb).
+    """
+    bh, nq, d = q.shape
+    bkv, nb, _ = centroids.shape
+    h = num_q_heads or bh
+    assert bh // h * (h // group) == bkv
+    q_tile = min(q_tile, nq)
+    assert nq % q_tile == 0, (nq, q_tile)
+    n_cent_tiles = -(-nb // cent_tile)
+    pad = n_cent_tiles * cent_tile - nb
+    if pad:
+        centroids = jnp.pad(centroids, ((0, 0), (0, pad), (0, 0)))
+
+    def kv_index(hh, qt, ct):
+        return ((hh // h) * (h // group) + (hh % h) // group, ct, 0)
+
+    kernel = functools.partial(
+        _flash_topk_kernel, top_k=top_k, block_size=block_size,
+        cent_tile=cent_tile, n_blocks=nb, n_cent_tiles=n_cent_tiles,
+        q_tile=q_tile, causal=causal, q_pos_offset=q_pos_offset)
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, nq // q_tile, n_cent_tiles),
+        in_specs=[
+            pl.BlockSpec((1, q_tile, d), lambda hh, qt, ct: (hh, qt, 0)),
+            pl.BlockSpec((1, cent_tile, d), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, q_tile, top_k),
+                               lambda hh, qt, ct: (hh, qt, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, nq, top_k), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((q_tile, top_k), jnp.float32),
+                        pltpu.VMEM((q_tile, top_k), jnp.int32)],
+        interpret=interpret,
+    )(q, centroids)

@@ -1,0 +1,138 @@
+"""Pallas kernel: FlashMoBA backward (paper Alg. 5, TPU adaptation).
+
+Key-block-parallel with recomputation: each tile re-derives its attention
+probabilities from (Q_sorted, K_j, lse) — the attention matrix is never
+stored.  dK_j/dV_j accumulate in the *output VMEM buffer* across the
+consecutive tiles of block j (the sorted layout guarantees a block's tiles
+are contiguous, which is the TPU-native replacement for the paper's
+per-thread-block ownership), and partial dQ is written per-slot and
+segment-summed by the wrapper — the deterministic replacement for CUDA
+atomicAdd into dQ_accum.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _bwd_kernel(tb_ref, qs_ref, qpos_ref, do_ref, lse_ref, delta_ref,
+                k_ref, v_ref, dq_ref, dk_ref, dv_ref, *,
+                scale: float, block_size: int, n_blocks: int,
+                n_tokens: int, causal: bool):
+    bh = pl.program_id(0)
+    t = pl.program_id(1)
+    blk = tb_ref[bh, t]
+    prev_blk = tb_ref[bh, jnp.maximum(t - 1, 0)]
+    mapped = jnp.minimum(blk, n_blocks - 1)
+    prev_mapped = jnp.minimum(prev_blk, n_blocks - 1)
+    is_first = (t == 0) | (mapped != prev_mapped)
+
+    q = qs_ref[0].astype(jnp.float32)            # (Tq, d)
+    do = do_ref[0].astype(jnp.float32)           # (Tq, d)
+    kb = k_ref[0, 0].astype(jnp.float32)         # (B, d)
+    vb = v_ref[0, 0].astype(jnp.float32)
+    qpos = qpos_ref[0]
+    lse = lse_ref[0]
+    delta = delta_ref[0]
+    tq = q.shape[0]
+
+    s = jax.lax.dot_general(q, kb, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    kpos = (blk * block_size
+            + jax.lax.broadcasted_iota(jnp.int32, (tq, block_size), 1))
+    mask = (qpos[:, None] >= 0) & (blk < n_blocks) & (kpos < n_tokens)
+    if causal:
+        mask &= kpos <= qpos[:, None]
+    # true post-merge probabilities: exp(s - lse_q)
+    p = jnp.where(mask, jnp.exp(s - lse[:, None]), 0.0)     # (Tq, B)
+
+    dv_c = jax.lax.dot_general(p, do, (((0,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32)  # (B, d)
+    dp = jax.lax.dot_general(do, vb, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)    # (Tq, B)
+    ds = p * (dp - delta[:, None]) * scale
+    dq_c = jax.lax.dot_general(ds, kb, (((1,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32)  # (Tq, d)
+    dk_c = jax.lax.dot_general(ds, q, (((0,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32)  # (B, d)
+
+    dq_ref[0] = dq_c
+
+    @pl.when(is_first)
+    def _init():
+        dk_ref[0, 0] = dk_c
+        dv_ref[0, 0] = dv_c
+
+    @pl.when(jnp.logical_not(is_first))
+    def _accum():
+        dk_ref[0, 0] += dk_c
+        dv_ref[0, 0] += dv_c
+
+
+def moba_bwd(tile_block: jax.Array, q_sorted: jax.Array, q_pos: jax.Array,
+             do_sorted: jax.Array, lse_sorted: jax.Array,
+             delta_sorted: jax.Array, k_blocks: jax.Array,
+             v_blocks: jax.Array, *, scale: float, block_size: int,
+             n_tokens: int, num_q_heads: int, group: int,
+             causal: bool = True, q_tile: int = 128,
+             interpret: bool = True
+             ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Backward over flattened (batch·head) layouts.
+
+    Returns (dq_sorted (BH,L,d), dk (BH,nb,B,d), dv (BH,nb,B,d)) — all f32;
+    dk/dv are per *query head* and must be (a) masked by per-block visit
+    flags (unvisited blocks hold garbage) and (b) reduced over the GQA
+    group by the wrapper.
+    """
+    bh, L, d = q_sorted.shape
+    bkv, nb, bs, _ = k_blocks.shape
+    n_tiles = L // q_tile
+    h = num_q_heads
+
+    def kv_index(bhi, t, tb_ref):
+        kv = (bhi // h) * (h // group) + (bhi % h) // group
+        blk = jnp.minimum(tb_ref[bhi, t], nb - 1)
+        return (kv, blk, 0, 0)
+
+    def dkv_index(bhi, t, tb_ref):
+        return (bhi, jnp.minimum(tb_ref[bhi, t], nb - 1), 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(bh, n_tiles),
+        in_specs=[
+            pl.BlockSpec((1, q_tile, d), lambda bhi, t, tb: (bhi, t, 0)),
+            pl.BlockSpec((1, q_tile), lambda bhi, t, tb: (bhi, t)),
+            pl.BlockSpec((1, q_tile, d), lambda bhi, t, tb: (bhi, t, 0)),
+            pl.BlockSpec((1, q_tile), lambda bhi, t, tb: (bhi, t)),
+            pl.BlockSpec((1, q_tile), lambda bhi, t, tb: (bhi, t)),
+            pl.BlockSpec((1, 1, bs, d), kv_index),
+            pl.BlockSpec((1, 1, bs, d), kv_index),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, q_tile, d), lambda bhi, t, tb: (bhi, t, 0)),
+            pl.BlockSpec((1, 1, bs, d), dkv_index),
+            pl.BlockSpec((1, 1, bs, d), dkv_index),
+        ],
+    )
+    kernel = functools.partial(
+        _bwd_kernel, scale=scale, block_size=block_size, n_blocks=nb,
+        n_tokens=n_tokens, causal=causal)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, L, d), jnp.float32),
+            jax.ShapeDtypeStruct((bh, nb, bs, d), jnp.float32),
+            jax.ShapeDtypeStruct((bh, nb, bs, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(tile_block, q_sorted, q_pos, do_sorted, lse_sorted, delta_sorted,
+      k_blocks, v_blocks)

@@ -1,0 +1,117 @@
+"""Pallas kernel: FlashMoBA forward — gather-and-densify (paper Alg. 1).
+
+TPU adaptation (see DESIGN.md §2): queries routed to each key block are
+pre-gathered into the key-block-major sorted layout (`Q_sorted`) by one XLA
+take; the kernel then runs a *dense* (Tq × d) · (d × B) MXU matmul per
+tile, with the key block selected by a **scalar-prefetched** per-tile block
+id driving the K/V BlockSpec index_map.  Each tile emits un-normalized
+partial outputs + softmax stats (o, m, l); the per-query lse-merge over its
+k partials happens in the wrapper (`ops.flash_moba`).
+
+The query's own block is part of the routed pair list (selection forces
+it), so a single universal mask `key_pos <= q_pos` gives exactly MoBA
+semantics: no-op for past blocks, causal inside the own block.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fwd_kernel(tb_ref, qs_ref, qpos_ref, k_ref, v_ref,
+                o_ref, m_ref, l_ref, *,
+                scale: float, block_size: int, n_blocks: int,
+                n_tokens: int, causal: bool):
+    bh = pl.program_id(0)
+    t = pl.program_id(1)
+    blk = tb_ref[bh, t]
+
+    q = qs_ref[0].astype(jnp.float32)            # (Tq, d)
+    kb = k_ref[0, 0].astype(jnp.float32)         # (B, d)
+    vb = v_ref[0, 0].astype(jnp.float32)
+    qpos = qpos_ref[0]                           # (Tq,) int32
+    tq = q.shape[0]
+
+    s = jax.lax.dot_general(q, kb, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (Tq, B)
+    s = s * scale
+    kpos = (blk * block_size
+            + jax.lax.broadcasted_iota(jnp.int32, (tq, block_size), 1))
+    mask = (qpos[:, None] >= 0) & (blk < n_blocks) & (kpos < n_tokens)
+    if causal:
+        mask &= kpos <= qpos[:, None]
+    s = jnp.where(mask, s, NEG_INF)
+
+    m = jnp.max(s, axis=1)
+    m_safe = jnp.maximum(m, NEG_INF / 2)
+    p = jnp.exp(s - m_safe[:, None]) * mask.astype(jnp.float32)
+    l = jnp.sum(p, axis=1)
+    o = jax.lax.dot_general(p, vb, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+
+    any_valid = jnp.max(mask.astype(jnp.float32), axis=1)
+    o_ref[0] = o
+    m_ref[0] = jnp.where(any_valid > 0, m, NEG_INF)
+    l_ref[0] = l
+
+
+def moba_fwd(tile_block: jax.Array, q_sorted: jax.Array, q_pos: jax.Array,
+             k_blocks: jax.Array, v_blocks: jax.Array, *,
+             scale: float, block_size: int, n_tokens: int,
+             num_q_heads: int, group: int, causal: bool = True,
+             q_tile: int = 128, interpret: bool = True
+             ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Run the forward kernel over flattened (batch·head) layouts.
+
+    tile_block (BH, T) int32; q_sorted (BH, L, d); q_pos (BH, L) int32;
+    k_blocks/v_blocks (BKV, nb, B, d) with BKV = BH / group per batch —
+    i.e. BH = batch*H, BKV = batch*Hkv, H = Hkv*group.
+
+    Returns (o_partial (BH, L, d) f32, m (BH, L) f32, l (BH, L) f32).
+    """
+    bh, L, d = q_sorted.shape
+    bkv, nb, bs, _ = k_blocks.shape
+    n_tiles = L // q_tile
+    assert L % q_tile == 0 and tile_block.shape == (bh, n_tiles)
+    h = num_q_heads
+
+    def kv_index(bhi, t, tb_ref):
+        kv = (bhi // h) * (h // group) + (bhi % h) // group
+        blk = jnp.minimum(tb_ref[bhi, t], nb - 1)
+        return (kv, blk, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(bh, n_tiles),
+        in_specs=[
+            pl.BlockSpec((1, q_tile, d), lambda bhi, t, tb: (bhi, t, 0)),
+            pl.BlockSpec((1, q_tile), lambda bhi, t, tb: (bhi, t)),
+            pl.BlockSpec((1, 1, bs, d), kv_index),
+            pl.BlockSpec((1, 1, bs, d), kv_index),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, q_tile, d), lambda bhi, t, tb: (bhi, t, 0)),
+            pl.BlockSpec((1, q_tile), lambda bhi, t, tb: (bhi, t)),
+            pl.BlockSpec((1, q_tile), lambda bhi, t, tb: (bhi, t)),
+        ],
+    )
+    kernel = functools.partial(
+        _fwd_kernel, scale=scale, block_size=block_size, n_blocks=nb,
+        n_tokens=n_tokens, causal=causal)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, L, d), jnp.float32),
+            jax.ShapeDtypeStruct((bh, L), jnp.float32),
+            jax.ShapeDtypeStruct((bh, L), jnp.float32),
+        ],
+        interpret=interpret,
+    )(tile_block, q_sorted, q_pos, k_blocks, v_blocks)

@@ -1,0 +1,180 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+`flash_moba` is the full FlashMoBA pipeline with a `jax.custom_vjp`:
+
+  fwd:  key-block centroids (kernel) → Flash TopK (kernel) → varlen layout
+        (XLA sort/cumsum — deterministic Alg. 4) → Q gather (XLA take) →
+        gather-and-densify attention (kernel) → per-query lse merge
+  bwd:  delta = rowsum(dO∘O) → gather to sorted layout → backward kernel
+        (recompute) → segment-sum dQ, group-reduce dK/dV
+
+Routing is non-differentiable (hard top-k; matches MoBA training
+semantics) — gradients flow through attention only, which is what lets
+key convolution learn clustering (paper App. B.2).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoBAConfig
+from repro.core import routing
+from repro.kernels import ref as kref
+from repro.kernels.centroids import block_centroids_kernel
+from repro.kernels.flash_topk import flash_topk
+from repro.kernels.moba_bwd import moba_bwd
+from repro.kernels.moba_fwd import moba_fwd
+
+NEG_INF = routing.NEG_INF
+
+
+class _Meta(NamedTuple):
+    block_size: int
+    top_k: int
+    causal: bool
+    q_tile: int
+    scale: float
+    interpret: bool
+
+
+def _build_layouts(sel: jax.Array, nq: int, nb: int, tile: int):
+    """sel (BH, Nq, k) -> batched VarlenLayout."""
+    return jax.vmap(
+        lambda s: routing.build_varlen_layout(s, nq, nb, tile))(sel)
+
+
+def _flatten_kv_blocks(k: jax.Array, block_size: int):
+    b, hkv, n, d = k.shape
+    nb = -(-n // block_size)
+    kp = routing.pad_to_blocks(k, block_size, axis=-2)
+    return kp.reshape(b * hkv, nb, block_size, d), nb
+
+
+def _fwd_pipeline(q, k, v, meta: _Meta):
+    b, h, nq, d = q.shape
+    _, hkv, n, _ = k.shape
+    g = h // hkv
+    bs, tk, tile = meta.block_size, meta.top_k, meta.q_tile
+    tile = min(tile, nq)
+    assert nq % tile == 0, (nq, tile)
+
+    k_blocks, nb = _flatten_kv_blocks(k, bs)
+    v_blocks, _ = _flatten_kv_blocks(v, bs)
+
+    cents = block_centroids_kernel(
+        k.reshape(b * hkv, n, d), bs, interpret=meta.interpret)
+
+    qf = q.reshape(b * h, nq, d)
+    q_pos_offset = n - nq
+    sel = flash_topk(qf, cents, tk, bs, group=g, num_q_heads=h,
+                     causal=meta.causal, q_pos_offset=q_pos_offset,
+                     q_tile=tile, interpret=meta.interpret)  # (BH,Nq,k)
+
+    lay = _build_layouts(sel, nq, nb, tile)
+    qi = jnp.maximum(lay.q_index, 0)                          # (BH, L)
+    q_sorted = jnp.take_along_axis(qf, qi[..., None], axis=1)
+    q_pos = jnp.where(lay.q_index >= 0, qi + q_pos_offset, -1)
+
+    o_l, m_l, l_l = moba_fwd(
+        lay.tile_block, q_sorted, q_pos.astype(jnp.int32),
+        k_blocks, v_blocks, scale=meta.scale, block_size=bs,
+        n_tokens=n, num_q_heads=h, group=g, causal=meta.causal,
+        q_tile=tile, interpret=meta.interpret)
+
+    slots = lay.pair_slot.reshape(b * h, nq * tk)             # (BH, Nq*k)
+    o_parts = jnp.take_along_axis(o_l, slots[..., None], axis=1)
+    m_parts = jnp.take_along_axis(m_l, slots, axis=1)
+    l_parts = jnp.take_along_axis(l_l, slots, axis=1)
+    out, lse = kref.merge_partials(
+        o_parts.reshape(b * h, nq, tk, d),
+        m_parts.reshape(b * h, nq, tk),
+        l_parts.reshape(b * h, nq, tk))
+    return out, lse, lay, q_sorted, q_pos
+
+
+def _flash_moba_impl(q, k, v, meta: _Meta):
+    out, _, _, _, _ = _fwd_pipeline(q, k, v, meta)
+    b, h, nq, d = q.shape
+    return out.reshape(b, h, nq, d).astype(q.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _flash_moba(q, k, v, meta: _Meta):
+    return _flash_moba_impl(q, k, v, meta)
+
+
+def _flash_moba_fwd(q, k, v, meta: _Meta):
+    out, lse, lay, q_sorted, q_pos = _fwd_pipeline(q, k, v, meta)
+    b, h, nq, d = q.shape
+    res = (q, k, v, out, lse, lay.tile_block, lay.pair_slot, q_sorted,
+           q_pos)
+    return out.reshape(b, h, nq, d).astype(q.dtype), res
+
+
+def _flash_moba_bwd(meta: _Meta, res, g_out):
+    q, k, v, out, lse, tile_block, pair_slot, q_sorted, q_pos = res
+    b, h, nq, d = q.shape
+    _, hkv, n, _ = k.shape
+    g = h // hkv
+    bs, tk, tile = meta.block_size, meta.top_k, min(meta.q_tile, nq)
+
+    k_blocks, nb = _flatten_kv_blocks(k, bs)
+    v_blocks, _ = _flatten_kv_blocks(v, bs)
+
+    do = g_out.reshape(b * h, nq, d).astype(jnp.float32)
+    delta = jnp.sum(do * out, axis=-1)                        # (BH, Nq)
+
+    # scatter per-query tensors to the sorted layout
+    L = q_sorted.shape[1]
+    qi = jnp.maximum(q_pos - (n - nq), 0)                     # query index
+    valid = q_pos >= 0
+    do_sorted = jnp.take_along_axis(do, qi[..., None], axis=1)
+    lse_sorted = jnp.take_along_axis(lse, qi, axis=1)
+    delta_sorted = jnp.take_along_axis(delta, qi, axis=1)
+
+    dq_l, dk_bh, dv_bh = moba_bwd(
+        tile_block, q_sorted, q_pos, do_sorted, lse_sorted, delta_sorted,
+        k_blocks, v_blocks, scale=meta.scale, block_size=bs, n_tokens=n,
+        num_q_heads=h, group=g, causal=meta.causal, q_tile=tile,
+        interpret=meta.interpret)
+
+    # dQ: gather per-pair contributions and sum over the k slots.
+    slots = pair_slot.reshape(b * h, nq * tk)
+    dq_pairs = jnp.take_along_axis(dq_l, slots[..., None], axis=1)
+    dq = dq_pairs.reshape(b * h, nq, tk, d).sum(axis=2)
+
+    # dK/dV: zero unvisited blocks, reduce over the GQA group, un-block.
+    visited = (jax.nn.one_hot(tile_block, nb + 1, dtype=jnp.float32)
+               .sum(axis=1)[..., :nb] > 0)                    # (BH, nb)
+    dk_bh = dk_bh * visited[..., None, None]
+    dv_bh = dv_bh * visited[..., None, None]
+    dk = dk_bh.reshape(b, hkv, g, nb, bs, d).sum(axis=2)
+    dv = dv_bh.reshape(b, hkv, g, nb, bs, d).sum(axis=2)
+    dk = dk.reshape(b, hkv, nb * bs, d)[:, :, :n]
+    dv = dv.reshape(b, hkv, nb * bs, d)[:, :, :n]
+
+    return (dq.reshape(b, h, nq, d).astype(q.dtype),
+            dk.astype(k.dtype), dv.astype(v.dtype))
+
+
+_flash_moba.defvjp(_flash_moba_fwd, _flash_moba_bwd)
+
+
+def flash_moba(q: jax.Array, k: jax.Array, v: jax.Array, cfg: MoBAConfig,
+               q_positions: Optional[jax.Array] = None,
+               scale: Optional[float] = None, q_tile: int = 128,
+               interpret: bool = True) -> jax.Array:
+    """FlashMoBA attention (Pallas kernel path).
+
+    q (B,H,Nq,d); k,v (B,Hkv,N,d).  ``q_positions`` must be the contiguous
+    suffix of the kv sequence (training/prefill); decode uses
+    `core.moba.moba_decode_attention`.
+    """
+    if scale is None:
+        scale = 1.0 / (q.shape[-1] ** 0.5)
+    meta = _Meta(cfg.block_size, cfg.top_k, cfg.causal,
+                 q_tile, float(scale), interpret)
+    return _flash_moba(q, k, v, meta)

@@ -1,0 +1,228 @@
+"""Pure-jnp oracles for every Pallas kernel, plus the production XLA
+fallback path (`moba_sparse_xla`) that shares the exact varlen layout and
+tiling algorithm with the kernels but is expressed with `lax.scan` — used
+for dry-run lowering and as a second oracle.
+
+Single-(batch·head) shapes here; batching handled by callers/vmap.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoBAConfig
+from repro.core import routing
+
+NEG_INF = routing.NEG_INF
+
+
+# ---------------------------------------------------------------- centroids
+def centroids_ref(k: jax.Array, block_size: int) -> jax.Array:
+    """k: (..., N, d) -> (..., nb, d); oracle for kernels/centroids.py."""
+    return routing.block_centroids(k, block_size)
+
+
+# ---------------------------------------------------------------- flash topk
+def flash_topk_ref(q: jax.Array, centroids: jax.Array, top_k: int,
+                   block_size: int, q_positions: jax.Array,
+                   causal: bool = True) -> jax.Array:
+    """q: (Nq, d), centroids: (nb, d) -> (Nq, top_k) selected block ids
+    (sentinel = nb).  Oracle for kernels/flash_topk.py: materializes the
+    full score matrix (exactly what the kernel avoids)."""
+    scores = routing.routing_scores(q, centroids)
+    return routing.select_blocks(scores, top_k, block_size, q_positions,
+                                 causal=causal)
+
+
+# ------------------------------------------------------------- fwd partials
+class MobaPartials(NamedTuple):
+    o: jax.Array   # (L, d) fp32 un-normalized partial outputs per slot
+    m: jax.Array   # (L,) fp32 row max (NEG_INF for masked slots)
+    l: jax.Array   # (L,) fp32 sum of exp
+
+
+def moba_partials_ref(q_sorted: jax.Array, q_pos: jax.Array,
+                      slot_block: jax.Array, k_blocks: jax.Array,
+                      v_blocks: jax.Array, scale: float,
+                      block_size: int, causal: bool = True,
+                      kv_valid_len: Optional[int] = None) -> MobaPartials:
+    """Oracle for the gather-and-densify forward kernel, full precision.
+
+    q_sorted: (L, d) gathered queries; q_pos: (L,) token position (-1 pad);
+    slot_block: (L,) block id (nb sentinel); k_blocks/v_blocks: (nb, B, d).
+    """
+    nb = k_blocks.shape[0]
+    blk = jnp.minimum(slot_block, nb - 1)
+    kg = k_blocks[blk].astype(jnp.float32)      # (L, B, d)
+    vg = v_blocks[blk].astype(jnp.float32)
+    s = jnp.einsum("ld,lbd->lb", q_sorted.astype(jnp.float32), kg) * scale
+    kpos = slot_block[:, None] * block_size + jnp.arange(block_size)[None]
+    mask = (q_pos[:, None] >= 0) & (slot_block[:, None] < nb)
+    if causal:
+        mask &= kpos <= q_pos[:, None]
+    if kv_valid_len is not None:
+        mask &= kpos < kv_valid_len
+    s = jnp.where(mask, s, NEG_INF)
+    m = jnp.max(s, axis=1)
+    m_safe = jnp.maximum(m, NEG_INF / 2)
+    p = jnp.exp(s - m_safe[:, None]) * mask
+    l = p.sum(1)
+    o = jnp.einsum("lb,lbd->ld", p, vg)
+    m = jnp.where(mask.any(1), m, NEG_INF)
+    return MobaPartials(o, m, l)
+
+
+def merge_partials(o_parts: jax.Array, m_parts: jax.Array,
+                   l_parts: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Flash-style lse merge over axis -2 (the per-query `k` partials).
+
+    o_parts (..., k, d); m/l (..., k) -> (out (..., d), lse (...,)).
+    """
+    m_max = jnp.max(m_parts, axis=-1)
+    m_safe = jnp.maximum(m_max, NEG_INF / 2)
+    w = jnp.exp(m_parts - m_safe[..., None])
+    l_tot = jnp.sum(l_parts * w, axis=-1)
+    o = jnp.sum(o_parts * w[..., None], axis=-2)
+    out = o / jnp.maximum(l_tot, 1e-30)[..., None]
+    lse = m_safe + jnp.log(jnp.maximum(l_tot, 1e-30))
+    return out, lse
+
+
+# -------------------------------------------------------------- bwd oracle
+class MobaGrads(NamedTuple):
+    dq_sorted: jax.Array  # (L, d)
+    dk_blocks: jax.Array  # (nb, B, d)
+    dv_blocks: jax.Array  # (nb, B, d)
+
+
+def moba_bwd_ref(q_sorted, q_pos, slot_block, k_blocks, v_blocks,
+                 do_sorted, lse_sorted, delta_sorted, scale: float,
+                 block_size: int, causal: bool = True) -> MobaGrads:
+    """Oracle for the backward kernel (recompute + per-block grads).
+
+    lse_sorted: per-slot final logsumexp of its query's merged softmax;
+    delta_sorted: per-slot rowsum(dO ∘ O) of its query.
+    """
+    nb = k_blocks.shape[0]
+    blk = jnp.minimum(slot_block, nb - 1)
+    kg = k_blocks[blk].astype(jnp.float32)
+    vg = v_blocks[blk].astype(jnp.float32)
+    qf = q_sorted.astype(jnp.float32)
+    dof = do_sorted.astype(jnp.float32)
+    s = jnp.einsum("ld,lbd->lb", qf, kg) * scale
+    kpos = slot_block[:, None] * block_size + jnp.arange(block_size)[None]
+    mask = (q_pos[:, None] >= 0) & (slot_block[:, None] < nb)
+    if causal:
+        mask &= kpos <= q_pos[:, None]
+    p = jnp.where(mask, jnp.exp(s - lse_sorted[:, None]), 0.0)
+    dp = jnp.einsum("ld,lbd->lb", dof, vg)
+    ds = p * (dp - delta_sorted[:, None]) * scale
+    dq = jnp.einsum("lb,lbd->ld", ds, kg)
+    dkl = jnp.einsum("lb,ld->lbd", ds, qf)    # per-slot dK contribution
+    dvl = jnp.einsum("lb,ld->lbd", p, dof)    # per-slot dV contribution
+    seg = jnp.minimum(slot_block, nb)         # nb collects pad/sentinel
+    dk_blocks = jax.ops.segment_sum(dkl, seg, num_segments=nb + 1)[:-1]
+    dv_blocks = jax.ops.segment_sum(dvl, seg, num_segments=nb + 1)[:-1]
+    return MobaGrads(dq, dk_blocks, dv_blocks)
+
+
+# ------------------------------------------------- production XLA fallback
+def moba_sparse_xla(q: jax.Array, k: jax.Array, v: jax.Array,
+                    cfg: MoBAConfig,
+                    q_positions: Optional[jax.Array] = None,
+                    scale: Optional[float] = None,
+                    tile: int = 128, tile_chunk: int = 8,
+                    use_scan: bool = True) -> jax.Array:
+    """Gather-and-densify MoBA in pure XLA with the same layout/tiling as
+    the Pallas kernel — O(N·k·B) FLOPs, memory bounded by `lax.scan` over
+    tile chunks.  Differentiable (jax AD through the scan).
+
+    ``use_scan=False`` vectorizes over all tiles at once (more memory, but
+    XLA cost_analysis counts scan bodies only once — the dry-run needs the
+    unrolled form for faithful FLOP accounting).
+
+    q (B,H,Nq,d); k,v (B,Hkv,N,d).
+    """
+    b, h, nq, d = q.shape
+    _, hkv, n, _ = k.shape
+    g = h // hkv
+    bs = cfg.block_size
+    nb = -(-n // bs)
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    if q_positions is None:
+        q_positions = jnp.arange(nq) + (n - nq)
+    tile = min(tile, nq)
+
+    from repro.core.moba import moba_selection
+    sel = moba_selection(q, k, cfg, q_positions)   # (B,H,Nq,k) — no grad
+    sel = jax.lax.stop_gradient(sel)
+
+    kb = routing.pad_to_blocks(k, bs, axis=-2).reshape(b, hkv, nb, bs, d)
+    vb = routing.pad_to_blocks(v, bs, axis=-2).reshape(b, hkv, nb, bs, d)
+
+    def one_head(qh, selh, kbh, vbh):
+        """qh (Nq,d), selh (Nq,k), kbh/vbh (nb,bs,d)."""
+        lay = routing.build_varlen_layout(selh, nq, nb, tile)
+        L = lay.q_index.shape[0]
+        qi = jnp.maximum(lay.q_index, 0)
+        q_sorted = qh[qi]
+        q_pos = jnp.where(lay.q_index >= 0, q_positions[qi], -1)
+        n_tiles = L // tile
+
+        def chunk_fn(_, tids):
+            """tids: (tile_chunk,) tile indices."""
+            blk = jnp.minimum(lay.tile_block[tids], nb - 1)
+            kt = kbh[blk]                      # (tc, bs, d) input dtype
+            vt = vbh[blk]
+            rows = tids[:, None] * tile + jnp.arange(tile)[None]
+            qt = q_sorted[rows]                # (tc, tile, d)
+            qp = q_pos[rows]
+            sb = lay.slot_block[rows]
+            # bf16 operands, f32 accumulation — no f32 input copies
+            s = jnp.einsum("tqd,tbd->tqb", qt, kt,
+                           preferred_element_type=jnp.float32) * scale
+            kpos = (sb[..., None] * bs
+                    + jnp.arange(bs)[None, None, :])
+            mask = (qp[..., None] >= 0) & (sb[..., None] < nb) & (kpos < n)
+            if cfg.causal:
+                mask &= kpos <= qp[..., None]
+            s = jnp.where(mask, s, NEG_INF)
+            m = s.max(-1)
+            m_safe = jnp.maximum(m, NEG_INF / 2)
+            p = jnp.exp(s - m_safe[..., None]) * mask
+            l = p.sum(-1)
+            o = jnp.einsum("tqb,tbd->tqd", p.astype(vt.dtype), vt,
+                           preferred_element_type=jnp.float32)
+            m = jnp.where(mask.any(-1), m, NEG_INF)
+            return None, (o, m, l)
+
+        if use_scan:
+            n_chunks = -(-n_tiles // tile_chunk)
+            pad_tiles = n_chunks * tile_chunk
+            # wrapped duplicate tiles land past L and are discarded
+            tids = (jnp.arange(pad_tiles) % n_tiles).reshape(
+                n_chunks, tile_chunk)
+            _, (o_c, m_c, l_c) = jax.lax.scan(chunk_fn, None, tids)
+            o_l = o_c.reshape(pad_tiles * tile, d)[: L]
+            m_l = m_c.reshape(pad_tiles * tile)[: L]
+            l_l = l_c.reshape(pad_tiles * tile)[: L]
+        else:
+            _, (o_c, m_c, l_c) = chunk_fn(None, jnp.arange(n_tiles))
+            o_l = o_c.reshape(L, d)
+            m_l = m_c.reshape(L)
+            l_l = l_c.reshape(L)
+        # merge the k partials per query
+        slots = lay.pair_slot                  # (Nq, k)
+        out, _ = merge_partials(o_l[slots], m_l[slots], l_l[slots])
+        return out.astype(qh.dtype)
+
+    # nested vmap keeps (batch, head) dims separate so SPMD sharding over
+    # batch (dp) and heads (tp) survives without reshapes/collectives.
+    kbg = jnp.repeat(kb, g, axis=1)      # (B, H, nb, bs, d)
+    vbg = jnp.repeat(vb, g, axis=1)
+    out = jax.vmap(jax.vmap(one_head))(q, sel, kbg, vbg)
+    return out

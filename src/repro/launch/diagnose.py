@@ -1,0 +1,65 @@
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+"""Collective/buffer breakdown for one dry-run cell (hillclimb tooling)."""
+
+import argparse      # noqa: E402
+import collections   # noqa: E402
+import re            # noqa: E402
+
+import repro.launch.roofline as RL                      # noqa: E402
+from repro.launch.dryrun import build_lowered           # noqa: E402
+from repro.launch.mesh import make_production_mesh      # noqa: E402
+
+
+def collective_breakdown(arch, shape, multi_pod=False, top=14,
+                         moba_impl="sp", **kw):
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    lowered, cfg = build_lowered(arch, shape, mesh, moba_impl=moba_impl,
+                                 unroll=False, **kw)
+    compiled = lowered.compile()
+    text = compiled.as_text()
+    ma = compiled.memory_analysis()
+    print(f"temp {ma.temp_size_in_bytes/1e9:.2f} GB/dev")
+    comps, entry = RL._split_computations(text)
+
+    def trip(cond):
+        c = RL._CONST_RE.findall(comps.get(cond, ""))
+        return max(int(x) for x in c) if c else 1
+
+    agg = collections.Counter()
+
+    def visit(name, mult, seen):
+        if name in seen:
+            return
+        body = comps.get(name, "")
+        for line in body.splitlines():
+            m = RL._COLL_RE.search(line)
+            if m:
+                kind = m.group(1)
+                ty = line.split("=", 1)[1].split(kind)[0]
+                nb = RL._shape_bytes(ty) * RL._MULT[kind]
+                meta = re.search(r'op_name="[^/]*/([^"]{0,70})', line)
+                agg[(kind, ty.strip()[:44],
+                     meta.group(1)[:48] if meta else "?")] += nb * mult
+        for wm in RL._WHILE_RE.finditer(body):
+            cond, wbody = wm.groups()
+            visit(wbody, mult * trip(cond), seen | {name})
+
+    visit(entry, 1, frozenset())
+    total = sum(agg.values())
+    print(f"total collective payload {total/1e9:.1f} GB/dev "
+          f"(t={total/RL.ICI_BW:.2f}s)")
+    for (kind, ty, meta), nb in agg.most_common(top):
+        print(f"  {nb/1e9:8.2f} GB  {kind:<18} {ty:<44} {meta}")
+    return compiled
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi", action="store_true")
+    args = ap.parse_args()
+    collective_breakdown(args.arch, args.shape, args.multi)

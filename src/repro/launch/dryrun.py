@@ -1,0 +1,241 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# Multi-pod dry-run: .lower().compile() every (arch × shape × mesh) cell on
+# placeholder devices, record memory_analysis / cost_analysis / collective
+# schedule, and emit the roofline terms (launch/roofline.py).
+#
+#   PYTHONPATH=src python -m repro.launch.dryrun --archs qwen3-0.6b \
+#       --shapes train_4k --mesh single
+#
+# Two passes per cell (see EXPERIMENTS.md §Dry-run):
+#   1. PRODUCTION compile — layer-group scan + inner-scan attention →
+#      memory_analysis is the deployable footprint and the compile is the
+#      sharding-coherence proof; collectives are counted from this pass
+#      with while-body × trip-count multiplication (validated against an
+#      unrolled compile to within 1%).
+#   2. ACCOUNTING lower (no compile) — everything unrolled;
+#      ``lowered.cost_analysis()`` gives exact *global* FLOPs/bytes (XLA
+#      counts while-loop bodies only once, so scanned code can't be used
+#      for FLOP accounting — measured 10-100× undercount).
+#
+# Results land in experiments/dryrun/<arch>__<shape>__<mesh>.json.
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro import configs                      # noqa: E402
+from repro.configs.base import (ASSIGNED_SHAPES, ShardingConfig,  # noqa: E402
+                                TrainConfig)
+from repro.distributed import sharding as shmod  # noqa: E402
+from repro.launch import roofline as RL        # noqa: E402
+from repro.launch import steps as S            # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import api, transformer as T  # noqa: E402
+from repro.optim import adamw                  # noqa: E402
+
+
+# gradient-accumulation factor for train_4k (global batch 256): keeps
+# per-microbatch activations within HBM for the large archs.  The FLOP
+# accounting pass (unroll=True) runs without accumulation — identical math.
+MICROBATCH = {
+    "llama-3.2-vision-90b": 16,
+    "qwen3-14b": 8,
+    "codeqwen1.5-7b": 8,
+    "moonshot-v1-16b-a3b": 4,
+    "qwen2-moe-a2.7b": 2,
+    "internlm2-1.8b": 2,
+    "zamba2-1.2b": 2,
+    "mamba2-780m": 2,
+}
+
+
+def _sds(shape_struct, sh):
+    return jax.ShapeDtypeStruct(shape_struct.shape, shape_struct.dtype,
+                                sharding=sh)
+
+
+def build_lowered(arch: str, shape: str, mesh, *, moba_impl: str,
+                  unroll: bool, block_size: int = 128, top_k: int = 8,
+                  key_conv_width: int = 0, remat: bool = True,
+                  scfg: ShardingConfig = None, accum_in_loss: bool = False):
+    """Lower one cell with the given impl/unroll choice."""
+    cfg = configs.get_config(arch, moba=True, block_size=block_size,
+                             top_k=top_k, key_conv_width=key_conv_width)
+    info = ASSIGNED_SHAPES[shape]
+    seq, batch, kind = info["seq_len"], info["global_batch"], info["kind"]
+    scfg = scfg or ShardingConfig()
+
+    specs = api.input_specs(cfg, shape)
+    param_shapes = jax.eval_shape(
+        lambda k: T.init_lm(k, cfg), jax.random.PRNGKey(0))
+    pspecs = shmod.param_specs(param_shapes, mesh, scfg)
+    param_in = jax.tree.map(_sds, param_shapes, pspecs)
+    bsh = S.batch_shardings(cfg, mesh, batch)
+
+    with shmod.use_mesh(mesh, scfg):
+        if kind == "train":
+            tcfg = TrainConfig(global_batch_size=batch, seq_len=seq,
+                               microbatch=0 if unroll
+                               else MICROBATCH.get(arch, 0))
+            step = S.make_train_step(cfg, tcfg, moba_impl=moba_impl,
+                                     remat=remat, unroll=unroll,
+                                     accum_in_loss=accum_in_loss)
+            opt_shapes = jax.eval_shape(adamw.adamw_init, param_shapes)
+            ospecs = shmod.param_specs(opt_shapes.mu, mesh, scfg)
+            opt_in = adamw.AdamWState(
+                jax.ShapeDtypeStruct((), jnp.int32,
+                                     sharding=NamedSharding(mesh, P())),
+                jax.tree.map(_sds, opt_shapes.mu, ospecs),
+                jax.tree.map(_sds, opt_shapes.nu, ospecs))
+            batch_in = {"tokens": jax.ShapeDtypeStruct(
+                specs["tokens"].shape, jnp.int32, sharding=bsh["tokens"])}
+            for extra in ("cross_kv", "src_embeds"):
+                if extra in specs:
+                    batch_in[extra] = _sds(specs[extra], bsh[extra])
+            jitted = jax.jit(step, donate_argnums=(0, 1))
+            return jitted.lower(param_in, opt_in, batch_in), cfg
+        caches_shape = specs.get("caches") or jax.eval_shape(
+            lambda: T.init_caches(cfg, batch, seq))
+        csh = S.cache_shardings(caches_shape, cfg, mesh, batch,
+                                long_context=(shape == "long_500k"))
+        cache_in = jax.tree.map(_sds, caches_shape, csh)
+        extras = {extra: _sds(specs[extra], bsh[extra])
+                  for extra in ("cross_kv", "src_embeds") if extra in specs}
+        if kind == "prefill":
+            step = S.make_prefill_step(cfg, moba_impl=moba_impl,
+                                       unroll=unroll)
+            tok_in = jax.ShapeDtypeStruct((batch, seq), jnp.int32,
+                                          sharding=bsh["tokens"])
+        else:
+            step = S.make_decode_step(cfg, moba_impl=moba_impl,
+                                      unroll=unroll)
+            tok_in = jax.ShapeDtypeStruct((batch, 1), jnp.int32,
+                                          sharding=bsh["token"])
+        jitted = jax.jit(step, donate_argnums=(2,))
+        return jitted.lower(param_in, tok_in, cache_in, **extras), cfg
+
+
+def lower_cell(arch: str, shape: str, multi_pod: bool,
+               block_size: int = 128, top_k: int = 8,
+               key_conv_width: int = 0, remat: bool = True,
+               verbose: bool = True, accounting: bool = True):
+    """Two-pass lower+compile of one cell; returns a Roofline record."""
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "x".join(str(s) for s in mesh.devices.shape)
+    chips = mesh.devices.size
+    kw = dict(block_size=block_size, top_k=top_k,
+              key_conv_width=key_conv_width, remat=remat)
+
+    # pass 1: production compile — layer-group scan + inner-scan attention
+    # (deployable memory footprint; collectives counted with while-body ×
+    # trip-count multiplication in roofline.collective_bytes)
+    t0 = time.time()
+    lowered, cfg = build_lowered(arch, shape, mesh, moba_impl="sp",
+                                 unroll=False, **kw)
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    # pass 2: accounting lower (exact global flops; no compile)
+    flops_global = bytes_global = None
+    if accounting:
+        lowered2, _ = build_lowered(arch, shape, mesh,
+                                    moba_impl="sp_unrolled", unroll=True,
+                                    **kw)
+        ca2 = lowered2.cost_analysis()
+        ca2 = ca2[0] if isinstance(ca2, list) else ca2
+        flops_global = float(ca2.get("flops", 0.0))
+        bytes_global = float(ca2.get("bytes accessed", 0.0))
+
+    mf = S.model_flops(cfg, shape)
+    rl = RL.analyze(arch, shape, mesh_name, chips, compiled, mf)
+    if flops_global:
+        rl = RL.Roofline(**{**rl.__dict__,
+                            "flops_per_device": flops_global / chips,
+                            "bytes_per_device": bytes_global / chips})
+    if verbose:
+        ma = compiled.memory_analysis()
+        print(f"[{arch} × {shape} × {mesh_name}] compiled in {t_compile:.1f}s")
+        print(f"  memory_analysis: args={ma.argument_size_in_bytes/1e9:.2f}GB"
+              f" temp={ma.temp_size_in_bytes/1e9:.2f}GB"
+              f" out={ma.output_size_in_bytes/1e9:.2f}GB (per device)")
+        print(f"  flops/dev={rl.flops_per_device:.3e}"
+              f" bytes/dev={rl.bytes_per_device:.3e}")
+        print(f"  collectives/dev: "
+              f"{ {k: f'{v/1e6:.1f}MB' for k, v in rl.coll_breakdown.items()} }")
+        print(f"  terms: compute={rl.t_compute:.3e}s memory={rl.t_memory:.3e}s"
+              f" collective={rl.t_collective:.3e}s -> {rl.bottleneck}-bound,"
+              f" useful={rl.useful_flops_ratio:.2f},"
+              f" roofline={100*rl.roofline_fraction:.1f}%")
+    return rl
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--archs", default="all")
+    ap.add_argument("--shapes", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--block-size", type=int, default=128)
+    ap.add_argument("--top-k", type=int, default=8)
+    ap.add_argument("--key-conv", type=int, default=0)
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--stop-on-error", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true", default=True)
+    ap.add_argument("--no-accounting", action="store_true",
+                    help="skip the FLOP-accounting pass (multi-pod proof "
+                         "runs don't need it; the roofline table is "
+                         "single-pod only)")
+    args = ap.parse_args()
+
+    archs = configs.ASSIGNED if args.archs == "all" else args.archs.split(",")
+    shapes = list(ASSIGNED_SHAPES) if args.shapes == "all" \
+        else args.shapes.split(",")
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    os.makedirs(args.out, exist_ok=True)
+
+    rows, failures = [], []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch}__{shape}__{'multi' if mp else 'single'}"
+                path = os.path.join(args.out, tag + ".json")
+                if args.skip_existing and os.path.exists(path):
+                    print(f"[skip] {tag} (exists)")
+                    continue
+                try:
+                    rl = lower_cell(arch, shape, mp,
+                                    block_size=args.block_size,
+                                    top_k=args.top_k,
+                                    key_conv_width=args.key_conv,
+                                    accounting=not (args.no_accounting
+                                                    or mp))
+                    rows.append(rl)
+                    with open(path, "w") as f:
+                        json.dump(rl.to_dict(), f, indent=1)
+                except Exception as e:
+                    failures.append((tag, repr(e)))
+                    print(f"[FAIL] {tag}: {e}")
+                    traceback.print_exc()
+                    if args.stop_on_error:
+                        raise
+
+    print()
+    print(RL.format_table(rows))
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for tag, err in failures:
+            print(" ", tag, err)
+        raise SystemExit(1)
+    print(f"\nall {len(rows)} cells lowered + compiled OK")
+
+
+if __name__ == "__main__":
+    main()

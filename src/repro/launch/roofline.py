@@ -1,0 +1,221 @@
+"""Roofline term extraction from compiled dry-run artifacts.
+
+TPU v5e constants (per chip): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI.  ``cost_analysis()`` on an SPMD executable reports **per-device**
+FLOPs/bytes, so the three terms are computed on a per-chip basis:
+
+  compute   = flops_per_device / PEAK_FLOPS
+  memory    = bytes_per_device / HBM_BW
+  collective= collective_bytes_per_device / ICI_BW
+
+collective bytes are parsed from the *compiled* (post-SPMD) HLO: per-device
+operand sizes of all-reduce / all-gather / reduce-scatter / all-to-all /
+collective-permute, with ring-algorithm multipliers (all-reduce moves ~2×
+its payload per device; others ~1×).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12       # bf16 / chip
+HBM_BW = 819e9            # B/s / chip
+ICI_BW = 50e9             # B/s / link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|\S+)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_MULT = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+         "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\([^)]*\)\s*->.*\{",
+                       re.M)
+_WHILE_RE = re.compile(r"\bwhile\(.*?condition=%?([\w.\-]+), "
+                       r"body=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+
+
+_HDR_LINE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(")
+
+
+def _split_computations(text: str):
+    """HLO text -> {comp_name: body_text}, plus the entry comp name.
+
+    Line-based: computation headers are single lines ending in '{' (nested
+    parens in tuple-typed params break a regex-only approach)."""
+    comps, entry, cur, buf = {}, None, None, []
+    for line in text.splitlines():
+        if cur is None:
+            m = _HDR_LINE.match(line)
+            if m and line.rstrip().endswith("{"):
+                cur = m.group(2)
+                buf = []
+                if m.group(1):
+                    entry = cur
+        elif line.startswith("}"):
+            comps[cur] = "\n".join(buf)
+            cur = None
+        else:
+            buf.append(line)
+    return comps, entry
+
+
+def _direct_collectives(body: str) -> Dict[str, float]:
+    out: Dict[str, float] = {}
+    for line in body.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(1)
+        ty = line.split("=", 1)[1].split(m.group(1))[0]
+        nbytes = _shape_bytes(ty)
+        out[kind] = out.get(kind, 0.0) + nbytes * _MULT[kind]
+    return out
+
+
+def collective_bytes(compiled_text: str) -> Dict[str, float]:
+    """Per-device collective payload bytes from compiled (post-SPMD) HLO.
+
+    While-loop bodies (lax.scan over layer groups, remat recompute loops)
+    are multiplied by their trip count, recovered from the `constant(N)`
+    bound in the loop's condition computation — XLA's cost/HLO tools count
+    loop bodies only once, which under-reports per-layer collectives by
+    the layer count otherwise.
+    """
+    comps, entry = _split_computations(compiled_text)
+    if entry is None:
+        entry = max(comps, key=lambda c: len(comps[c])) if comps else None
+    if entry is None:
+        return {}
+
+    def trip_count(cond_name: str) -> int:
+        body = comps.get(cond_name, "")
+        consts = [int(c) for c in _CONST_RE.findall(body)]
+        return max(consts) if consts else 1
+
+    def visit(name: str, seen) -> Dict[str, float]:
+        if name in seen:            # guard malformed recursion
+            return {}
+        seen = seen | {name}
+        body = comps.get(name, "")
+        total = _direct_collectives(body)
+        for wm in _WHILE_RE.finditer(body):
+            cond, wbody = wm.groups()
+            t = trip_count(cond)
+            sub = visit(wbody, seen)
+            for k, v in sub.items():
+                total[k] = total.get(k, 0.0) + v * t
+        return total
+
+    return visit(entry, frozenset())
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    coll_bytes_per_device: float
+    coll_breakdown: Dict[str, float]
+    model_flops: float              # 6·N·D (train) / 2·N·D (fwd), global
+    peak_memory_bytes: float        # per-device from memory_analysis
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes_per_device / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        hlo_global = self.flops_per_device * self.chips
+        return self.model_flops / hlo_global if hlo_global else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """useful-FLOPs time / bound time: MODEL_FLOPS/(chips·peak) over
+        the dominant term — the MFU-analogue we can compute pre-silicon."""
+        ideal = self.model_flops / (self.chips * PEAK_FLOPS)
+        bound = max(self.t_compute, self.t_memory, self.t_collective)
+        return ideal / bound if bound else 0.0
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d.update(t_compute=self.t_compute, t_memory=self.t_memory,
+                 t_collective=self.t_collective, bottleneck=self.bottleneck,
+                 useful_flops_ratio=self.useful_flops_ratio,
+                 roofline_fraction=self.roofline_fraction)
+        return d
+
+
+def analyze(arch: str, shape: str, mesh_name: str, chips: int, compiled,
+            model_flops: float) -> Roofline:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    ma = compiled.memory_analysis()
+    peak = (ma.temp_size_in_bytes + ma.argument_size_in_bytes
+            + ma.output_size_in_bytes) if ma else 0
+    coll = collective_bytes(compiled.as_text())
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        flops_per_device=float(ca.get("flops", 0.0)),
+        bytes_per_device=float(ca.get("bytes accessed", 0.0)),
+        coll_bytes_per_device=float(sum(coll.values())),
+        coll_breakdown=coll, model_flops=model_flops,
+        peak_memory_bytes=float(peak))
+
+
+def format_table(rows) -> str:
+    hdr = (f"{'arch':<22}{'shape':<13}{'mesh':<10}{'t_comp(s)':>11}"
+           f"{'t_mem(s)':>11}{'t_coll(s)':>11}{'bound':>11}"
+           f"{'useful':>8}{'roofl%':>8}{'GB/dev':>8}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        lines.append(
+            f"{r.arch:<22}{r.shape:<13}{r.mesh:<10}"
+            f"{r.t_compute:>11.3e}{r.t_memory:>11.3e}"
+            f"{r.t_collective:>11.3e}{r.bottleneck:>11}"
+            f"{r.useful_flops_ratio:>8.2f}"
+            f"{100 * r.roofline_fraction:>7.1f}%"
+            f"{r.peak_memory_bytes / 1e9:>8.2f}")
+    return "\n".join(lines)

@@ -1,0 +1,235 @@
+"""Model primitives: RMSNorm, RoPE, SwiGLU MLP, GQA attention layers.
+
+Functional style: ``init_*(key, cfg) -> params`` / ``apply(params, x) -> y``
+with params as plain dicts (checkpoint- and shard-friendly).  Compute in
+``cfg.dtype`` (bf16 default), params in fp32; all attention math fp32.
+
+Key-conv caching: the depthwise conv is causal, so a convolved key never
+changes once written — the KV cache stores *convolved* keys plus a (W−1)-
+deep ring buffer of raw keys for the single-step decode conv.  Routing and
+attention therefore always see the same convolved keys (paper App. B).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.attention import attention_dispatch
+from repro.core.key_conv import (apply_key_conv, apply_key_conv_decode,
+                                 init_key_conv, key_conv_state_init)
+from repro.distributed.sharding import constrain, tp_enabled
+
+
+def wcast(w: jax.Array, dt) -> jax.Array:
+    """Cast a (possibly FSDP-sharded) weight to compute dtype and, in
+    SP/FSDP mode, pin the replication AFTER the cast so SPMD all-gathers
+    bf16 instead of the fp32 master (halves weight-AG bytes)."""
+    w = w.astype(dt)
+    if not tp_enabled():
+        w = constrain(w, (None,) * w.ndim)
+    return w
+
+
+def _dense_init(key, shape, scale=None):
+    fan_in = shape[0]
+    scale = scale if scale is not None else fan_in ** -0.5
+    return jax.random.normal(key, shape, jnp.float32) * scale
+
+
+# ------------------------------------------------------------------- norms
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# -------------------------------------------------------------------- rope
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array,
+               theta: float = 10000.0) -> jax.Array:
+    """x: (B, H, N, d), positions: (N,) broadcastable."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (N, d/2)
+    ang = ang[None, None]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------- mlp
+def init_mlp(key, d_model: int, d_ff: int) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"w_gate": _dense_init(k1, (d_model, d_ff)),
+            "w_up": _dense_init(k2, (d_model, d_ff)),
+            "w_down": _dense_init(k3, (d_ff, d_model))}
+
+
+def apply_mlp(p: dict, x: jax.Array) -> jax.Array:
+    dt = x.dtype
+    h = jax.nn.silu(x @ wcast(p["w_gate"], dt)) * (x @ wcast(p["w_up"], dt))
+    # TP mode: hidden sharded on features (Megatron); SP/FSDP mode: stay
+    # sequence-sharded — replicating here costs an (B,S,d_ff) all-gather.
+    h = constrain(h, ("dp", None, "tp") if tp_enabled()
+                  else ("dp", "sp", None))
+    out = h @ wcast(p["w_down"], dt)
+    return constrain(out, ("dp", "sp", None) if not tp_enabled()
+                     else ("dp", "sp", None))
+
+
+# --------------------------------------------------------------- attention
+def init_attention(key, cfg: ModelConfig, kind: str) -> dict:
+    d, h, hkv = cfg.d_model, cfg.num_heads, cfg.num_kv_heads
+    dh = cfg.resolved_head_dim
+    ks = jax.random.split(key, 6)
+    p = {"wq": _dense_init(ks[0], (d, h * dh)),
+         "wk": _dense_init(ks[1], (d, hkv * dh)),
+         "wv": _dense_init(ks[2], (d, hkv * dh)),
+         "wo": _dense_init(ks[3], (h * dh, d))}
+    if cfg.attention.qk_norm:
+        p["q_norm_scale"] = jnp.ones((dh,), jnp.float32)
+        p["k_norm_scale"] = jnp.ones((dh,), jnp.float32)
+    a = cfg.attention
+    if kind == "moba" and a.moba is not None and a.moba.key_conv_width:
+        p["key_conv"] = init_key_conv(ks[4], a.moba.key_conv_width, hkv, dh)
+    return p
+
+
+def _split_heads(x, n_heads, dh):
+    b, n, _ = x.shape
+    return x.reshape(b, n, n_heads, dh).transpose(0, 2, 1, 3)
+
+
+def _uses_rope(cfg: ModelConfig, kind: str) -> bool:
+    a = cfg.attention
+    if not a.use_rope or kind == "cross":
+        return False
+    if kind == "moba":
+        return getattr(a, "rope_on_moba", True)
+    return True
+
+
+def apply_attention(p: dict, x: jax.Array, cfg: ModelConfig, kind: str,
+                    *, positions: Optional[jax.Array] = None,
+                    cache: Optional[dict] = None,
+                    moba_impl: str = "reference",
+                    cross_kv: Optional[jax.Array] = None,
+                    causal: bool = True
+                    ) -> Tuple[jax.Array, Optional[dict]]:
+    """Self (or cross) attention layer.  Returns (out, updated_cache)."""
+    dt = x.dtype
+    a = cfg.attention
+    b, n, _ = x.shape
+    h, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+
+    q = _split_heads(x @ wcast(p["wq"], dt), h, dh)
+    src = cross_kv if cross_kv is not None else x
+    k = _split_heads(src @ wcast(p["wk"], dt), hkv, dh)
+    v = _split_heads(src @ wcast(p["wv"], dt), hkv, dh)
+    if kind == "moba" and n > 1:
+        # SP layout: queries sharded on sequence, K/V replicated over
+        # 'model' (see distributed/moba_sp.py)
+        q = constrain(q, ("dp", None, "sp", None))
+        k = constrain(k, ("dp", None, None, None))
+        v = constrain(v, ("dp", None, None, None))
+    else:
+        q = constrain(q, ("dp", "tp", None, None))
+        k = constrain(k, ("dp", "tp", None, None))
+
+    if a.qk_norm and "q_norm_scale" in p:
+        q = rms_norm(q, p["q_norm_scale"], cfg.rms_norm_eps)
+        k = rms_norm(k, p["k_norm_scale"], cfg.rms_norm_eps)
+
+    if positions is None:
+        positions = (jnp.arange(n) if cache is None
+                     else cache["len"] + jnp.arange(n))
+    if _uses_rope(cfg, kind):
+        q = apply_rope(q, positions, a.rope_theta)
+        if cross_kv is None:
+            k = apply_rope(k, positions, a.rope_theta)
+
+    conv_w = p.get("key_conv") if kind == "moba" else None
+    kv_len = None
+    new_cache = None
+    if cache is not None and cross_kv is None:
+        if conv_w is not None:
+            if n == 1:
+                k, conv_state = apply_key_conv_decode(
+                    conv_w, k, cache["key_conv_state"])
+            else:  # prefill: conv the whole prefix, keep raw tail as state
+                depth = cache["key_conv_state"].shape[2]
+                raw = jnp.concatenate(
+                    [cache["key_conv_state"], k.astype(
+                        cache["key_conv_state"].dtype)], axis=2)
+                conv_state = raw[:, :, -depth:] if depth else \
+                    cache["key_conv_state"]
+                k = apply_key_conv(conv_w, k)
+        idx = cache["len"]
+        kc = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, 0, idx, 0))
+        vc = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, 0, idx, 0))
+        new_cache = dict(cache, k=kc, v=vc, len=idx + n)
+        if conv_w is not None:
+            new_cache["key_conv_state"] = conv_state
+        if "centroids" in cache:
+            from repro.core import routing as _routing
+            bs_ = cfg.attention.moba.block_size
+            if n == 1:
+                # one rank-1 centroid update for the written block
+                j = idx // bs_
+                m_in = (idx % bs_).astype(jnp.float32)
+                old_c = jax.lax.dynamic_slice_in_dim(
+                    cache["centroids"], j, 1, axis=2)       # (B,Hkv,1,dh)
+                new_c = (old_c * m_in + k.astype(jnp.float32)) / (m_in + 1)
+                new_cache["centroids"] = jax.lax.dynamic_update_slice(
+                    cache["centroids"], new_c, (0, 0, j, 0))
+            else:  # prefill: rebuild from the updated cache once
+                new_cache["centroids"] = _routing.block_centroids(
+                    kc, bs_, kv_len=idx + n).astype(jnp.float32)
+        k, v = kc, vc
+        kv_len = idx + n
+    elif conv_w is not None:
+        k = apply_key_conv(conv_w, k)
+
+    o = attention_dispatch(a, "dense" if kind == "cross" else kind,
+                           q, k, v, key_conv_weights=None,
+                           q_positions=positions,
+                           kv_len=kv_len, moba_impl=moba_impl,
+                           causal=causal and cross_kv is None,
+                           centroids=(new_cache or {}).get("centroids")
+                           if kind == "moba" else None)
+    o = o.transpose(0, 2, 1, 3).reshape(b, n, h * dh)
+    o = constrain(o, ("dp", None, "tp") if tp_enabled()
+                  else ("dp", "sp", None))
+    out = o @ wcast(p["wo"], dt)
+    if n > 1:
+        out = constrain(out, ("dp", "sp", None))
+    return out, new_cache
+
+
+def init_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> dict:
+    hkv, dh = cfg.num_kv_heads, cfg.resolved_head_dim
+    c = {"k": jnp.zeros((batch, hkv, max_len, dh), dtype),
+         "v": jnp.zeros((batch, hkv, max_len, dh), dtype),
+         "len": jnp.zeros((), jnp.int32)}
+    a = cfg.attention
+    if kind == "moba" and a.moba is not None:
+        # incremental centroid cache: decode routing reads N/B·d instead
+        # of re-reading the whole K cache (beyond-paper; EXPERIMENTS §Perf)
+        nb = -(-max_len // a.moba.block_size)
+        c["centroids"] = jnp.zeros((batch, hkv, nb, dh), jnp.float32)
+        if a.moba.key_conv_width:
+            c["key_conv_state"] = key_conv_state_init(
+                a.moba.key_conv_width, batch, hkv, dh, dtype)
+    return c

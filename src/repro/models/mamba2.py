@@ -1,0 +1,182 @@
+"""Mamba-2 (SSD — state-space duality) block, chunked-scan formulation.
+
+Follows Dao & Gu 2024 (arXiv:2405.21060): per-head scalar decay
+``a_t = exp(Δ_t · A)``, rank-1 state updates ``h_t = a_t h_{t-1} + Δ_t B_t
+x_tᵀ``, outputs ``y_t = C_tᵀ h_t + D x_t``, computed chunk-parallel so all
+heavy math is MXU matmuls (TPU-native: the chunked form IS the
+hardware-aware adaptation — no sequential scan on the critical path except
+the tiny inter-chunk carry).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+
+
+def _ssm_dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = s.num_heads or d_inner // s.head_dim
+    return d_inner, n_heads, s.head_dim, s.state_size
+
+
+def init_mamba2(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    d_inner, nh, hd, ns = _ssm_dims(cfg)
+    conv_dim = d_inner + 2 * ns
+    ks = jax.random.split(key, 5)
+    return {
+        # order: [z (d_inner), xBC (conv_dim), dt (nh)]
+        "in_proj": jax.random.normal(
+            ks[0], (d, 2 * d_inner + 2 * ns + nh), jnp.float32) * d ** -0.5,
+        "conv_w": jax.random.normal(
+            ks[1], (cfg.ssm.conv_width, conv_dim), jnp.float32) * 0.1,
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nh)),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "norm_scale": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": jax.random.normal(
+            ks[2], (d_inner, d), jnp.float32) * d_inner ** -0.5,
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array,
+                 state: Optional[jax.Array] = None):
+    """x (B, T, C), w (W, C) depthwise causal; state (B, W-1, C) raw tail."""
+    width = w.shape[0]
+    if state is not None:
+        x_ext = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    else:
+        x_ext = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(x_ext[:, i:i + x.shape[1]] * w[i] for i in range(width))
+    new_state = x_ext[:, -(width - 1):] if width > 1 else state
+    return jax.nn.silu(out), new_state
+
+
+def ssd_chunked(x, dt, a_log, b, c, d_skip, chunk: int):
+    """SSD chunked scan.
+
+    x (B,T,H,P); dt (B,T,H) post-softplus; b,c (B,T,N); returns y (B,T,H,P).
+    """
+    bsz, t, h, p = x.shape
+    n = b.shape[-1]
+    nc = t // chunk
+    a = -jnp.exp(a_log)                                   # (H,) negative
+    la = dt * a[None, None, :]                            # log decay (B,T,H)
+
+    xc = x.reshape(bsz, nc, chunk, h, p)
+    dtc = dt.reshape(bsz, nc, chunk, h)
+    lac = la.reshape(bsz, nc, chunk, h)
+    bc = b.reshape(bsz, nc, chunk, n)
+    cc = c.reshape(bsz, nc, chunk, n)
+
+    cum = jnp.cumsum(lac, axis=2)                         # (B,nc,Q,H)
+    # intra-chunk: S_ij = (C_i·B_j) exp(cum_i - cum_j) dt_j  for i>=j
+    cb = jnp.einsum("bcin,bcjn->bcij", cc, bc)            # (B,nc,Q,Q)
+    decay = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,Q,Q,H)
+    ii = jnp.arange(chunk)
+    causal = (ii[:, None] >= ii[None, :])
+    s = (cb[..., None] * jnp.exp(jnp.where(causal[..., None],
+                                           decay, -jnp.inf))
+         * dtc[:, :, None, :, :])                          # (B,nc,Q,Q,H)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", s, xc)
+
+    # chunk summary state: sum_j exp(cum_last - cum_j) dt_j B_j ⊗ x_j
+    tail = cum[:, :, -1:, :] - cum                         # (B,nc,Q,H)
+    contrib = jnp.einsum("bcjh,bcjn,bcjhp->bchnp",
+                         jnp.exp(tail) * dtc, bc, xc)      # (B,nc,H,N,P)
+    chunk_decay = jnp.exp(cum[:, :, -1])                   # (B,nc,H)
+
+    def carry_fn(hstate, inp):
+        contrib_c, decay_c = inp
+        new = hstate * decay_c[..., None, None] + contrib_c
+        return new, hstate                                 # emit pre-state
+
+    h0 = jnp.zeros((bsz, h, n, p), jnp.float32)
+    _, hpre = jax.lax.scan(
+        carry_fn, h0,
+        (contrib.swapaxes(0, 1).astype(jnp.float32),
+         chunk_decay.swapaxes(0, 1).astype(jnp.float32)))
+    hpre = hpre.swapaxes(0, 1)                             # (B,nc,H,N,P)
+
+    y_inter = jnp.einsum("bcin,bchnp,bcih->bcihp",
+                         cc, hpre.astype(cc.dtype), jnp.exp(cum))
+    y = y_intra + y_inter + xc * d_skip[None, None, None, :, None]
+    return y.reshape(bsz, t, h, p)
+
+
+def apply_mamba2(p: dict, x: jax.Array, cfg: ModelConfig,
+                 cache: Optional[dict] = None
+                 ) -> Tuple[jax.Array, Optional[dict]]:
+    """x (B, T, d_model) -> (y, new_cache).  Decode path (T==1) uses the
+    recurrent update on the cached (H, N, P) state."""
+    d_inner, nh, hd, ns = _ssm_dims(cfg)
+    bsz, t, _ = x.shape
+    dt_ = x.dtype
+
+    proj = x @ p["in_proj"].astype(dt_)
+    z, xbc, dt_raw = jnp.split(proj, [d_inner, 2 * d_inner + 2 * ns],
+                               axis=-1)
+    conv_state = cache["conv"] if cache is not None else None
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"].astype(dt_), conv_state)
+    xs, b, c = jnp.split(xbc, [d_inner, d_inner + ns], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"][None, None])
+    xh = xs.reshape(bsz, t, nh, hd)
+
+    if cache is None or t > 1:
+        chunk = min(cfg.ssm.chunk_size, t)
+        pad = (-t) % chunk
+        if pad:
+            xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+            b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+            c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+        y = ssd_chunked(xh.astype(jnp.float32), dt, p["a_log"],
+                        b.astype(jnp.float32), c.astype(jnp.float32),
+                        p["d_skip"], chunk)[:, :t]
+        new_cache = None
+        if cache is not None:
+            # rebuild the final recurrent state for subsequent decode
+            la = dt[:, :t] * (-jnp.exp(p["a_log"]))[None, None]
+            w = jnp.exp(jnp.cumsum(la[:, ::-1], axis=1)[:, ::-1] - la)
+            hstate = jnp.einsum("bth,btn,bthp->bhnp",
+                                w * dt[:, :t], b[:, :t].astype(jnp.float32),
+                                xh[:, :t].astype(jnp.float32))
+            new_cache = dict(cache, conv=new_conv, ssm=hstate,
+                             len=cache["len"] + t)
+    else:
+        a = -jnp.exp(p["a_log"])                          # (H,)
+        la = (dt[:, 0] * a[None]).astype(jnp.float32)     # (B,H)
+        hprev = cache["ssm"]
+        contrib = jnp.einsum("bh,bn,bhp->bhnp", dt[:, 0],
+                             b[:, 0].astype(jnp.float32),
+                             xh[:, 0].astype(jnp.float32))
+        hstate = hprev * jnp.exp(la)[..., None, None] + contrib
+        y = (jnp.einsum("bn,bhnp->bhp", c[:, 0].astype(jnp.float32), hstate)
+             + xh[:, 0].astype(jnp.float32)
+             * p["d_skip"][None, :, None])[:, None]
+        new_cache = dict(cache, conv=new_conv, ssm=hstate,
+                         len=cache["len"] + 1)
+
+    y = y.reshape(bsz, t, d_inner).astype(dt_)
+    # gated RMSNorm (mamba2 style): norm(y * silu(z))
+    y = y * jax.nn.silu(z)
+    from repro.models.layers import rms_norm
+    y = rms_norm(y, p["norm_scale"], cfg.rms_norm_eps)
+    y = constrain(y, ("dp", None, "tp"))
+    return y @ p["out_proj"].astype(dt_), new_cache
+
+
+def init_mamba2_cache(cfg: ModelConfig, batch: int,
+                      dtype=jnp.bfloat16) -> dict:
+    d_inner, nh, hd, ns = _ssm_dims(cfg)
+    return {"conv": jnp.zeros((batch, cfg.ssm.conv_width - 1,
+                               d_inner + 2 * ns), dtype),
+            "ssm": jnp.zeros((batch, nh, ns, hd), jnp.float32),
+            "len": jnp.zeros((), jnp.int32)}

@@ -1,0 +1,107 @@
+"""Mixture-of-Experts MLP with GShard-style capacity-based dense dispatch.
+
+Expert-parallel friendly: expert weights carry a leading E dim sharded over
+the ``model`` axis; dispatch/combine are einsums against one-hot routing
+tensors, so SPMD turns them into all-to-alls on real meshes.  Load-balance
+auxiliary loss follows Switch Transformer.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+
+
+def init_moe(key, cfg: ModelConfig) -> dict:
+    m = cfg.moe
+    d, f, e = cfg.d_model, m.expert_d_ff, m.num_experts
+    ks = jax.random.split(key, 7)
+    scale = d ** -0.5
+    p = {
+        "router": jax.random.normal(ks[0], (d, e), jnp.float32) * scale,
+        "experts": {
+            "w_gate": jax.random.normal(ks[1], (e, d, f), jnp.float32) * scale,
+            "w_up": jax.random.normal(ks[2], (e, d, f), jnp.float32) * scale,
+            "w_down": jax.random.normal(ks[3], (e, f, d), jnp.float32)
+            * f ** -0.5,
+        },
+    }
+    if m.num_shared_experts:
+        fs = f * m.num_shared_experts
+        p["shared"] = {
+            "w_gate": jax.random.normal(ks[4], (d, fs), jnp.float32) * scale,
+            "w_up": jax.random.normal(ks[5], (d, fs), jnp.float32) * scale,
+            "w_down": jax.random.normal(ks[6], (fs, d), jnp.float32)
+            * fs ** -0.5,
+        }
+    return p
+
+
+def apply_moe(p: dict, x: jax.Array, cfg: ModelConfig,
+              capacity_factor: float = 1.25) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (out, aux_loss).
+
+    Dense-dispatch formulation: tokens → (E, C, d) expert batches via a
+    one-hot dispatch tensor (capacity C per expert), expert FFN as batched
+    einsum over E, then combine weighted by router probs.
+    """
+    m = cfg.moe
+    b, s, d = x.shape
+    e, k = m.num_experts, m.top_k
+    tokens = b * s
+    # exact (drop-free) dispatch for small token counts — keeps decode
+    # bit-consistent with prefill; capacity dropping only at train scale.
+    cap = (tokens * k if tokens <= 64
+           else max(int(capacity_factor * tokens * k / e), 1))
+    dt = x.dtype
+
+    xf = x.reshape(tokens, d)
+    logits = (xf.astype(jnp.float32) @ p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                    # (T, E)
+    top_p, top_e = jax.lax.top_k(probs, k)                     # (T, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # position of each (token, slot) within its expert's capacity buffer
+    onehot = jax.nn.one_hot(top_e, e, dtype=jnp.int32)         # (T, k, E)
+    flatoh = onehot.reshape(tokens * k, e)
+    pos = (jnp.cumsum(flatoh, axis=0) - flatoh).reshape(tokens, k, e)
+    pos = (pos * onehot).sum(-1)                               # (T, k)
+    keep = pos < cap                                           # drop overflow
+    # scatter-based dispatch: O(T·k·d), not O(T·k·C) — slot indices are
+    # unique by construction so scatter-add has no collisions.  2D (E, cap)
+    # destination + expert-dim sharding constraint keeps the buffer from
+    # being all-reduced whole (GSPMD pads E when model-axis ∤ E).
+    dst_e = jnp.where(keep, top_e, e).reshape(-1)              # (T·k,)
+    dst_c = jnp.where(keep, pos, 0).reshape(-1)
+    buf = jnp.zeros((e + 1, cap, d), dt)
+    buf = buf.at[dst_e, dst_c].add(
+        jnp.repeat(xf, k, axis=0), mode="drop")
+    expert_in = constrain(buf[:-1], ("tp", None, None))
+
+    w = p["experts"]
+    h = (jax.nn.silu(jnp.einsum("ecd,edf->ecf", expert_in,
+                                w["w_gate"].astype(dt)))
+         * jnp.einsum("ecd,edf->ecf", expert_in, w["w_up"].astype(dt)))
+    expert_out = jnp.einsum("ecf,efd->ecd", h, w["w_down"].astype(dt))
+    expert_out = constrain(expert_out, ("tp", None, None))
+
+    slots = expert_out[jnp.minimum(dst_e.reshape(tokens, k), e - 1),
+                       dst_c.reshape(tokens, k)]
+    slots = slots * keep[..., None].astype(dt)                 # (T, k, d)
+    out = jnp.einsum("tk,tkd->td", top_p.astype(dt), slots)
+
+    if m.num_shared_experts and "shared" in p:
+        sh = p["shared"]
+        hs = (jax.nn.silu(xf @ sh["w_gate"].astype(dt))
+              * (xf @ sh["w_up"].astype(dt)))
+        out = out + hs @ sh["w_down"].astype(dt)
+
+    # Switch aux loss: E * sum_e (fraction_tokens_e * mean_prob_e)
+    frac = onehot[:, :, :].astype(jnp.float32).sum((0, 1)) / (tokens * k)
+    mean_p = probs.mean(0)
+    aux = e * jnp.sum(frac * mean_p) * m.router_aux_coef
+    return out.reshape(b, s, d), aux

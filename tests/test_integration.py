@@ -1,0 +1,72 @@
+"""End-to-end integration: train loop learns, checkpoint restart resumes
+bit-exact, serve decodes, benchmarks run."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.train import train
+from repro.launch.serve import serve
+
+
+def test_train_loss_decreases(tmp_path):
+    _, losses = train("moba-340m", steps=30, batch=4, seq=128, smoke=True,
+                      moba_impl="sparse", lr=3e-3)
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.1
+
+
+def test_train_checkpoint_restart_bit_exact(tmp_path):
+    """Kill-and-resume must reproduce the uninterrupted run exactly —
+    the fault-tolerance contract."""
+    d1 = str(tmp_path / "uninterrupted")
+    params_a, losses_a = train("qwen3-0.6b", steps=12, batch=4, seq=64,
+                               smoke=True, ckpt_dir=d1, save_interval=6,
+                               lr=1e-3, seed=7)
+    # interrupted at step 6 (same 12-step schedule), then resumed
+    d2 = str(tmp_path / "interrupted")
+    train("qwen3-0.6b", steps=12, batch=4, seq=64, smoke=True,
+          ckpt_dir=d2, save_interval=6, lr=1e-3, seed=7, stop_at_step=6)
+    params_b, losses_b = train("qwen3-0.6b", steps=12, batch=4, seq=64,
+                               smoke=True, ckpt_dir=d2, resume="auto",
+                               save_interval=6, lr=1e-3, seed=7)
+    np.testing.assert_allclose(losses_a[6:], losses_b, rtol=1e-5)
+    for a, b in zip(jax.tree_util.tree_leaves(params_a),
+                    jax.tree_util.tree_leaves(params_b)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_elastic_restore_different_sharding(tmp_path):
+    """Checkpoints are logical arrays: restoring onto a different device
+    layout (here: plain single-device) must work."""
+    from repro.checkpoint.manager import CheckpointManager
+    mgr = CheckpointManager(str(tmp_path), async_writes=False)
+    tree = {"w": jnp.arange(32.0).reshape(4, 8)}
+    mgr.save(1, tree)
+    restored, _, _ = mgr.restore(jax.eval_shape(lambda: tree),
+                                 shardings=None)
+    np.testing.assert_allclose(restored["w"], tree["w"])
+
+
+def test_serve_decode_runs():
+    toks = serve("moba-340m", batch=2, prompt_len=32, gen=8, smoke=True)
+    assert toks.shape == (2, 8)
+    assert bool((toks >= 0).all())
+
+
+def test_serve_moe_arch():
+    toks = serve("qwen2-moe-a2.7b", batch=2, prompt_len=16, gen=4,
+                 smoke=True)
+    assert toks.shape == (2, 4)
+
+
+def test_serve_ssm_arch():
+    toks = serve("mamba2-780m", batch=2, prompt_len=16, gen=4, smoke=True)
+    assert toks.shape == (2, 4)
+
+
+def test_kernel_impl_in_training_step():
+    """One full train step through the Pallas (interpret) kernel path."""
+    _, losses = train("moba-340m", steps=2, batch=2, seq=128, smoke=True,
+                      moba_impl="kernel", lr=1e-3)
+    assert np.isfinite(losses).all()

@@ -1,0 +1,120 @@
+"""Reference MoBA semantics vs an independent numpy brute force."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import MoBAConfig
+from repro.core import key_conv, moba
+
+
+def brute_force_moba(q, k, v, cfg):
+    b, h, n, d = q.shape
+    hkv = k.shape[1]
+    g = h // hkv
+    bs = cfg.block_size
+    nb = n // bs
+    out = np.zeros((b, h, n, d))
+    for bi in range(b):
+        for hi in range(h):
+            kv = hi // g
+            cents = np.asarray(k[bi, kv]).reshape(nb, bs, d).mean(1)
+            for t in range(n):
+                s = np.asarray(q[bi, hi, t]) @ cents.T
+                own = t // bs
+                s[own + 1:] = -np.inf
+                s[own] = np.inf
+                sel = [j for j in np.argsort(-s, kind="stable")[:cfg.top_k]
+                       if s[j] > -np.inf]
+                toks = sorted({x for j in sel
+                               for x in range(j * bs, min((j + 1) * bs, t + 1))})
+                sc = (np.asarray(q[bi, hi, t])
+                      @ np.asarray(k[bi, kv, toks]).T) / np.sqrt(d)
+                p = np.exp(sc - sc.max())
+                p /= p.sum()
+                out[bi, hi, t] = p @ np.asarray(v[bi, kv, toks])
+    return out
+
+
+@pytest.mark.parametrize("bs,k", [(32, 3), (16, 4), (64, 2)])
+def test_reference_vs_brute_force(bs, k):
+    keys = jax.random.split(jax.random.PRNGKey(bs + k), 3)
+    q = jax.random.normal(keys[0], (1, 2, 128, 16))
+    kk = jax.random.normal(keys[1], (1, 1, 128, 16))
+    v = jax.random.normal(keys[2], (1, 1, 128, 16))
+    cfg = MoBAConfig(block_size=bs, top_k=k)
+    o = moba.moba_attention_reference(q, kk, v, cfg)
+    ob = brute_force_moba(q, kk, v, cfg)
+    np.testing.assert_allclose(np.asarray(o), ob, rtol=2e-4, atol=2e-4)
+
+
+def test_decode_matches_prefill_last_row():
+    keys = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = jax.random.normal(keys[0], (2, 4, 256, 32))
+    k = jax.random.normal(keys[1], (2, 2, 256, 32))
+    v = jax.random.normal(keys[2], (2, 2, 256, 32))
+    cfg = MoBAConfig(block_size=32, top_k=3)
+    o = moba.moba_attention_reference(q, k, v, cfg)
+    od = moba.moba_decode_attention(q[:, :, -1:], k, v, jnp.array(256), cfg)
+    np.testing.assert_allclose(np.asarray(od[:, :, 0]), np.asarray(o[:, :, -1]),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_decode_partial_cache():
+    """Decode with kv_len < cache size must ignore invalid positions."""
+    keys = jax.random.split(jax.random.PRNGKey(9), 3)
+    q = jax.random.normal(keys[0], (1, 2, 1, 16))
+    cache = jax.random.normal(keys[1], (1, 1, 128, 16))
+    vcache = jax.random.normal(keys[2], (1, 1, 128, 16))
+    cfg = MoBAConfig(block_size=16, top_k=2)
+    kv_len = 70
+    od = moba.moba_decode_attention(q, cache, vcache, jnp.array(kv_len), cfg)
+    # oracle: run prefill reference on the valid prefix
+    kp = cache[:, :, :kv_len]
+    vp = vcache[:, :, :kv_len]
+    # q is at position kv_len-1 (the newest token)
+    oref = moba.moba_attention_reference(
+        jnp.broadcast_to(q, (1, 2, 1, 16)), kp, vp, cfg,
+        q_positions=jnp.array([kv_len - 1]))
+    np.testing.assert_allclose(np.asarray(od), np.asarray(oref),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_bidirectional_moba_no_future_mask():
+    keys = jax.random.split(jax.random.PRNGKey(11), 3)
+    q = jax.random.normal(keys[0], (1, 2, 64, 16))
+    k = jax.random.normal(keys[1], (1, 2, 64, 16))
+    v = jax.random.normal(keys[2], (1, 2, 64, 16))
+    cfg = MoBAConfig(block_size=16, top_k=2, causal=False)
+    o = moba.moba_attention_reference(q, k, v, cfg)
+    assert bool(jnp.isfinite(o).all())
+    sel = moba.moba_selection(q, k, cfg)
+    # future blocks may be selected in bidirectional mode
+    own = jnp.arange(64) // 16
+    assert bool((sel > own[None, None, :, None]).any())
+
+
+def test_key_conv_causality():
+    """Perturbing position t must not change conv output before t."""
+    w = key_conv.init_key_conv(jax.random.PRNGKey(0), 3, 2, 16)
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 2, 64, 16))
+    out1 = key_conv.apply_key_conv(w, k)
+    k2 = k.at[:, :, 40].add(10.0)
+    out2 = key_conv.apply_key_conv(w, k2)
+    np.testing.assert_allclose(np.asarray(out1[:, :, :40]),
+                               np.asarray(out2[:, :, :40]), rtol=1e-6)
+    assert bool((jnp.abs(out1[:, :, 40:43] - out2[:, :, 40:43]) > 1e-4).any())
+
+
+def test_key_conv_decode_matches_full():
+    w = key_conv.init_key_conv(jax.random.PRNGKey(0), 3, 2, 16)
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 2, 32, 16))
+    full = key_conv.apply_key_conv(w, k)
+    state = key_conv.key_conv_state_init(3, 1, 2, 16, dtype=k.dtype)
+    outs = []
+    for t in range(32):
+        o, state = key_conv.apply_key_conv_decode(w, k[:, :, t:t + 1], state)
+        outs.append(o)
+    step = jnp.concatenate(outs, axis=2)
+    np.testing.assert_allclose(np.asarray(step), np.asarray(full),
+                               rtol=1e-4, atol=1e-5)

@@ -1,0 +1,49 @@
+"""Straggler/heartbeat monitor behaviour."""
+from repro.distributed.monitor import HeartbeatMonitor
+
+
+def make_clock(times):
+    it = iter(times)
+    return lambda: next(it)
+
+
+def test_straggler_detected():
+    # 10 normal steps of 1s, then a 5s step
+    times = [float(i) for i in range(11)] + [16.0]
+    flagged = []
+    mon = HeartbeatMonitor(threshold=2.0,
+                           on_straggler=lambda s, dt, med:
+                           flagged.append((s, dt)),
+                           clock=make_clock(times))
+    for step in range(12):
+        mon.beat(step)
+    assert flagged and flagged[0][0] == 11 and flagged[0][1] == 6.0
+    assert mon.straggler_steps == [11]
+
+
+def test_no_false_positives_on_uniform_steps():
+    times = [i * 1.0 for i in range(30)]
+    mon = HeartbeatMonitor(threshold=2.0, clock=make_clock(times))
+    for step in range(30):
+        mon.beat(step)
+    assert mon.straggler_steps == []
+    assert mon.median_step_time == 1.0
+
+
+def test_stall_detection():
+    t = {"now": 0.0}
+    mon = HeartbeatMonitor(stall_timeout=10.0, clock=lambda: t["now"])
+    mon.beat(0)
+    t["now"] = 5.0
+    assert not mon.is_stalled()
+    t["now"] = 20.0
+    assert mon.is_stalled()
+
+
+def test_summary():
+    times = [float(i) for i in range(12)]
+    mon = HeartbeatMonitor(clock=make_clock(times))
+    for step in range(12):
+        mon.beat(step)
+    s = mon.summary()
+    assert s["steps_observed"] == 11 and s["median_s"] == 1.0

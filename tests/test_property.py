@@ -1,0 +1,125 @@
+"""Hypothesis property-based tests on system invariants."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.configs.base import MoBAConfig
+from repro.core import moba, routing
+
+SETTINGS = dict(max_examples=20, deadline=None,
+                suppress_health_check=[hypothesis.HealthCheck.too_slow])
+
+
+@given(n_exp=st.integers(4, 6), bs_exp=st.integers(2, 4),
+       k=st.integers(1, 4), seed=st.integers(0, 100))
+@settings(**SETTINGS)
+def test_selection_invariants(n_exp, bs_exp, k, seed):
+    """For any (N, B, k): own block selected; ≤k blocks; causal; sentinel
+    only when fewer than k valid blocks exist."""
+    n, bs = 2 ** n_exp * 8, 2 ** bs_exp * 4
+    n = max(n, bs * 2)
+    keys = jax.random.split(jax.random.PRNGKey(seed), 2)
+    q = jax.random.normal(keys[0], (1, 2, n, 8))
+    kk = jax.random.normal(keys[1], (1, 1, n, 8))
+    cfg = MoBAConfig(block_size=bs, top_k=k)
+    sel = np.asarray(moba.moba_selection(q, kk, cfg))[0]
+    nb = -(-n // bs)
+    own = np.arange(n) // bs
+    for h in range(sel.shape[0]):
+        for t in range(n):
+            s = sel[h, t]
+            valid = s[s < nb]
+            assert len(set(valid.tolist())) == len(valid)  # no dup blocks
+            assert (valid <= own[t]).all()                 # causal
+            assert own[t] in valid                         # own forced
+            expect_valid = min(k, own[t] + 1)
+            assert len(valid) == expect_valid
+            assert (s[expect_valid:] == nb).all()          # sentinels last?
+            # (sentinels occupy the lowest-score slots by construction)
+
+
+@given(nq=st.sampled_from([32, 64, 128]), k=st.integers(1, 4),
+       tile=st.sampled_from([8, 16, 32]), seed=st.integers(0, 50))
+@settings(**SETTINGS)
+def test_varlen_layout_invariants(nq, k, tile, seed):
+    """Layout is a bijection pairs↔slots; tiles homogeneous; capacity
+    static."""
+    nb = 8
+    rng = np.random.default_rng(seed)
+    # random selections incl. sentinels
+    sel = rng.integers(0, nb + 1, size=(nq, k)).astype(np.int32)
+    lay = routing.build_varlen_layout(jnp.asarray(sel), nq, nb, tile)
+    qi, sb = np.asarray(lay.q_index), np.asarray(lay.slot_block)
+    tb, ps = np.asarray(lay.tile_block), np.asarray(lay.pair_slot)
+    assert len(qi) == routing.layout_capacity(nq, k, nb, tile)
+    # bijection for real pairs
+    real = [(t, int(sel[t, i])) for t in range(nq) for i in range(k)
+            if sel[t, i] < nb]
+    slots = {(int(qi[s]), int(sb[s])) for s in range(len(qi)) if qi[s] >= 0}
+    assert len(slots) >= len(set(real)) or slots == set(real)
+    assert slots == set(real)
+    # pair_slot consistency
+    for t in range(nq):
+        for i in range(k):
+            if sel[t, i] < nb:
+                s = ps[t, i]
+                assert qi[s] == t and sb[s] == sel[t, i]
+    # tile homogeneity
+    for ti, blk in enumerate(tb):
+        rows = slice(ti * tile, (ti + 1) * tile)
+        real_blocks = sb[rows][qi[rows] >= 0]
+        if blk < nb:
+            assert (real_blocks == blk).all()
+        else:
+            assert real_blocks.size == 0
+
+
+@given(seed=st.integers(0, 30), bs=st.sampled_from([16, 32]),
+       k=st.integers(1, 3))
+@settings(max_examples=8, deadline=None)
+def test_moba_output_is_convex_combination(seed, bs, k):
+    """Each output row lies in the convex hull of V rows (softmax
+    property) — catches normalization/merge bugs for any (B, k)."""
+    keys = jax.random.split(jax.random.PRNGKey(seed), 3)
+    n, d = 64, 8
+    q = jax.random.normal(keys[0], (1, 1, n, d))
+    kk = jax.random.normal(keys[1], (1, 1, n, d))
+    v = jax.random.uniform(keys[2], (1, 1, n, d))  # positive
+    cfg = MoBAConfig(block_size=bs, top_k=k)
+    out = np.asarray(moba.moba_attention_reference(q, kk, v, cfg))[0, 0]
+    vmin, vmax = float(v.min()), float(v.max())
+    assert (out >= vmin - 1e-4).all() and (out <= vmax + 1e-4).all()
+
+
+@given(seed=st.integers(0, 30))
+@settings(max_examples=6, deadline=None)
+def test_sparse_xla_equals_reference(seed):
+    keys = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(keys[0], (1, 2, 64, 16))
+    kk = jax.random.normal(keys[1], (1, 1, 64, 16))
+    v = jax.random.normal(keys[2], (1, 1, 64, 16))
+    cfg = MoBAConfig(block_size=16, top_k=2)
+    from repro.kernels import ref
+    a = ref.moba_sparse_xla(q, kk, v, cfg, tile=16)
+    b = moba.moba_attention_reference(q, kk, v, cfg)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=3e-4, atol=3e-4)
+
+
+@given(width=st.sampled_from([2, 3, 5]), seed=st.integers(0, 20))
+@settings(max_examples=10, deadline=None)
+def test_key_conv_shift_equivariance(width, seed):
+    """Causal depthwise conv commutes with temporal shift (in the valid
+    interior) — the structural property the router exploits."""
+    from repro.core.key_conv import apply_key_conv, init_key_conv
+    w = init_key_conv(jax.random.PRNGKey(0), width, 1, 8)
+    k = jax.random.normal(jax.random.PRNGKey(seed), (1, 1, 32, 8))
+    out = apply_key_conv(w, k)
+    k_shift = jnp.roll(k, 4, axis=2)
+    out_shift = apply_key_conv(w, k_shift)
+    np.testing.assert_allclose(np.asarray(out_shift[:, :, 4 + width:]),
+                               np.asarray(out[:, :, width:-4]),
+                               rtol=1e-4, atol=1e-5)

@@ -1,0 +1,98 @@
+"""Routing + varlen layout unit tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import MoBAConfig
+from repro.core import moba, routing
+
+
+def make_qkv(seed=0, b=2, h=4, hkv=2, n=256, d=32, dtype=jnp.float32):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (b, h, n, d), dtype)
+    k = jax.random.normal(ks[1], (b, hkv, n, d), dtype)
+    v = jax.random.normal(ks[2], (b, hkv, n, d), dtype)
+    return q, k, v
+
+
+def test_centroids_mean():
+    k = jnp.arange(2 * 8 * 4, dtype=jnp.float32).reshape(2, 8, 4)
+    c = routing.block_centroids(k, 4)
+    expected = k.reshape(2, 2, 4, 4).mean(2)
+    np.testing.assert_allclose(c, expected, rtol=1e-6)
+
+
+def test_centroids_ragged_tail():
+    k = jnp.ones((1, 10, 4))
+    c = routing.block_centroids(k, 4)
+    assert c.shape == (1, 3, 4)
+    np.testing.assert_allclose(c, 1.0, rtol=1e-6)
+
+
+def test_selection_own_block_always_selected():
+    q, k, _ = make_qkv()
+    cfg = MoBAConfig(block_size=32, top_k=3)
+    sel = moba.moba_selection(q, k, cfg)
+    own = jnp.arange(256) // 32
+    assert bool((sel == own[None, None, :, None]).any(-1).all())
+
+
+def test_selection_causal():
+    q, k, _ = make_qkv()
+    cfg = MoBAConfig(block_size=32, top_k=3)
+    sel = moba.moba_selection(q, k, cfg)
+    own = jnp.arange(256) // 32
+    nb = 256 // 32
+    valid = sel < nb
+    assert bool(jnp.where(valid, sel <= own[None, None, :, None], True).all())
+
+
+def test_selection_early_queries_sentinel():
+    q, k, _ = make_qkv()
+    cfg = MoBAConfig(block_size=32, top_k=4)
+    sel = moba.moba_selection(q, k, cfg)
+    nb = 256 // 32
+    # query 0 has exactly 1 valid block; 3 sentinels
+    assert int((sel[:, :, 0] == nb).sum(-1).min()) == 3
+
+
+def test_sparsity_accounting():
+    """(B,k) pairs keep k/n attended fraction — the paper's 7/8 sparsity."""
+    n = 8192
+    for bs, k in [(512, 2), (256, 4), (128, 8)]:
+        nb = n // bs
+        assert k / nb == pytest.approx(1 / 8)
+
+
+def test_varlen_layout_roundtrip():
+    q, k, _ = make_qkv()
+    cfg = MoBAConfig(block_size=32, top_k=3)
+    sel = moba.moba_selection(q, k, cfg)[0, 0]
+    n, nb, tile = 256, 8, 16
+    lay = routing.build_varlen_layout(sel, n, nb, tile)
+    qi, sb = np.asarray(lay.q_index), np.asarray(lay.slot_block)
+    tb = np.asarray(lay.tile_block)
+    pairs = {(int(qi[s]), int(sb[s])) for s in range(len(qi)) if qi[s] >= 0}
+    expected = {(t, int(j)) for t in range(n) for j in np.asarray(sel)[t]
+                if j < nb}
+    assert pairs == expected
+    # tile homogeneity: every real slot in tile ti has block tb[ti]
+    for ti in range(len(tb)):
+        rows = slice(ti * tile, (ti + 1) * tile)
+        real = sb[rows][qi[rows] >= 0]
+        if tb[ti] < nb:
+            assert (real == tb[ti]).all()
+        else:
+            assert real.size == 0
+    # pair_slot inverse mapping
+    ps = np.asarray(lay.pair_slot)
+    for t in range(n):
+        for kk in range(3):
+            s = ps[t, kk]
+            if np.asarray(sel)[t, kk] < nb:
+                assert qi[s] == t and sb[s] == np.asarray(sel)[t, kk]
+
+
+def test_layout_capacity_static():
+    assert routing.layout_capacity(256, 3, 8, 16) == 256 * 3 + 8 * 16
