@@ -40,6 +40,8 @@ def dense_attention(q, k, v, causal: bool = True,
     """Dense (optionally sliding-window) attention with GQA grouping.
 
     window > 0 keeps keys with q_pos - window < s <= q_pos.
+    ``q_positions`` may be (Nq,) shared or (B, Nq) per-sequence (ragged
+    serving batches); ``kv_len`` a scalar or (B,) per-sequence lengths.
     """
     b, h, nq, d = q.shape
     n = k.shape[2]
@@ -49,16 +51,20 @@ def dense_attention(q, k, v, causal: bool = True,
         q_positions = jnp.arange(nq) + (n - nq)
     s = _grouped_scores(q, k, scale)
     spos = jnp.arange(n)
-    mask = jnp.ones((nq, n), bool)
+    qp = jnp.asarray(q_positions)
+    qp = qp[None] if qp.ndim == 1 else qp                    # (1|B, Nq)
+    mask = jnp.ones((qp.shape[0], nq, n), bool)
     if causal:
-        mask &= q_positions[:, None] >= spos[None, :]
+        mask &= qp[:, :, None] >= spos[None, None, :]
     if window:
-        mask &= q_positions[:, None] - spos[None, :] < window
+        mask &= qp[:, :, None] - spos[None, None, :] < window
     if kv_len is not None:
-        mask &= spos[None, :] < kv_len
-    s = jnp.where(mask[None, None], s, NEG_INF)
+        kvl = jnp.asarray(kv_len)
+        kvl = kvl.reshape((-1, 1, 1)) if kvl.ndim else kvl
+        mask &= spos[None, None, :] < kvl
+    s = jnp.where(mask[:, None], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
-    p = jnp.where(mask.any(-1)[None, None, :, None], p, 0.0)
+    p = jnp.where(mask.any(-1)[:, None, :, None], p, 0.0)
     return _apply_and_project(p, v, q.dtype)
 
 

@@ -126,6 +126,76 @@ def moba_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     raise ValueError(f"unknown impl {impl!r}")
 
 
+def moba_paged_decode_attention(q: jax.Array, pages_k: jax.Array,
+                                pages_v: jax.Array, centroids: jax.Array,
+                                block_table: jax.Array, kv_len: jax.Array,
+                                cfg: MoBAConfig,
+                                scale: Optional[float] = None) -> jax.Array:
+    """Single-step decode against a paged cache: route on the per-page
+    centroid cache, then gather only the ``top_k`` selected pages through
+    the block table — O(N/B·d) routing reads + O(k·B·d) attention reads
+    per kv head, never touching the rest of the pool.
+
+    q:           (B, H, 1, d)
+    pages_k/v:   (P, page_size, Hkv, d) shared pool (one layer slot)
+    centroids:   (P, Hkv, d) fp32 per-page centroid cache
+    block_table: (B, npg) int32 physical page ids, -1 = unassigned
+    kv_len:      (B,) int32 valid lengths *including* the token appended
+                 this step (call after the cache append)
+    """
+    b, h, _, d = q.shape
+    _, ps, hkv, _ = pages_k.shape
+    npg = block_table.shape[1]
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+
+    tbl = jnp.maximum(block_table, 0)
+    cents = centroids[tbl].transpose(0, 2, 1, 3)             # (B,Hkv,npg,d)
+    qg = _group_queries(q, hkv).astype(jnp.float32)          # (B,Hkv,G,1,d)
+    scores = jnp.einsum("bhgqd,bhnd->bhgqn", qg,
+                        cents.astype(jnp.float32))
+    blk_start = jnp.arange(npg) * ps
+    valid = (blk_start[None, :] < kv_len[:, None]) & (block_table >= 0)
+    own = jnp.maximum(kv_len - 1, 0) // ps                   # (B,)
+    is_own = jnp.arange(npg)[None, :] == own[:, None]        # (B,npg)
+    masked = jnp.where(valid[:, None, None, None], scores, NEG_INF)
+    masked = jnp.where(is_own[:, None, None, None], routing.POS_INF, masked)
+    kk = min(cfg.top_k, npg)
+    top_s, top_idx = jax.lax.top_k(masked, kk)
+    if kk < cfg.top_k:
+        padw = cfg.top_k - kk
+        top_s = jnp.concatenate(
+            [top_s, jnp.full(top_s.shape[:-1] + (padw,), NEG_INF)], -1)
+        top_idx = jnp.concatenate(
+            [top_idx, jnp.zeros(top_idx.shape[:-1] + (padw,),
+                                top_idx.dtype)], -1)
+    sel_valid = top_s > NEG_INF / 2
+    idx = jnp.where(sel_valid, top_idx, 0)                   # logical ids
+    phys = tbl[jnp.arange(b)[:, None, None, None, None], idx]
+
+    # gather only the selected pages, per kv head: (B,Hkv,G,1,k,ps,d)
+    pk_t = pages_k.transpose(2, 0, 1, 3)                     # (Hkv,P,ps,d)
+    pv_t = pages_v.transpose(2, 0, 1, 3)
+
+    def per_head(pool_h, idx_h):                             # (P,ps,d)
+        return pool_h[idx_h]                                 # (B,G,1,k,ps,d)
+
+    kg = jax.vmap(per_head, in_axes=(0, 1), out_axes=1)(
+        pk_t, phys)
+    vg = jax.vmap(per_head, in_axes=(0, 1), out_axes=1)(
+        pv_t, phys)
+    s = jnp.einsum("bhgqd,bhgqkld->bhgqkl", qg,
+                   kg.astype(jnp.float32)) * scale
+    pos = idx[..., :, None] * ps + jnp.arange(ps)            # logical pos
+    tok_valid = ((pos < kv_len[:, None, None, None, None, None])
+                 & sel_valid[..., None])
+    s = jnp.where(tok_valid, s, NEG_INF)
+    sf = s.reshape(*s.shape[:-2], -1)
+    p = jax.nn.softmax(sf, axis=-1).reshape(s.shape)
+    o = jnp.einsum("bhgqkl,bhgqkld->bhgqd", p, vg.astype(jnp.float32))
+    return o.reshape(b, h, 1, d).astype(q.dtype)
+
+
 def moba_decode_attention(q: jax.Array, k_cache: jax.Array,
                           v_cache: jax.Array, kv_len: jax.Array,
                           cfg: MoBAConfig,

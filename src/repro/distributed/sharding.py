@@ -152,7 +152,18 @@ def param_specs(params, mesh: Mesh, cfg: ShardingConfig):
     return jax.tree_util.tree_unflatten(flat[1], specs)
 
 
+def make_compat_mesh(shape, axes) -> Mesh:
+    """Construct a mesh across JAX versions.
+
+    ``jax.sharding.AxisType`` (and ``make_mesh``'s ``axis_types`` kwarg)
+    only exist in newer JAX; older installs get the implicit-auto mesh,
+    which has identical semantics for our use (everything is Auto)."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
 def make_mesh(cfg: MeshConfig) -> Mesh:
-    return jax.make_mesh(
-        cfg.shape, cfg.axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(cfg.axes))
+    return make_compat_mesh(cfg.shape, cfg.axes)

@@ -1,11 +1,17 @@
-"""Serving driver: batched prefill + greedy decode with KV caches.
+"""Serving driver: paged-KV continuous-batching engine (default) with a
+legacy fixed-batch fallback for archs the engine does not cover.
 
-  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
-      --batch 4 --prompt-len 64 --gen 32
+  # Poisson request stream through the engine, throughput + latency:
+  PYTHONPATH=src python -m repro.launch.serve --smoke
+
+  # fixed synchronous batch (old behaviour / ssm + encdec + vlm archs):
+  PYTHONPATH=src python -m repro.launch.serve --smoke --mode fixed \
+      --arch mamba2-780m --batch 4 --prompt-len 64 --gen 32
 """
 from __future__ import annotations
 
 import argparse
+import sys
 import time
 
 import jax
@@ -15,10 +21,111 @@ import numpy as np
 from repro import configs
 from repro.launch import steps as S
 from repro.models import transformer as T
+from repro.serving.engine import Engine, EngineConfig, engine_supported
+from repro.serving.scheduler import ServingError
+
+
+def _round_up(n: int, m: int) -> int:
+    return -(-n // m) * m
 
 
 def serve(arch: str, batch: int = 4, prompt_len: int = 64, gen: int = 32,
-          smoke: bool = True, moba_impl: str = "reference", seed: int = 0):
+          smoke: bool = True, moba_impl: str = "reference", seed: int = 0,
+          use_engine: str = "auto"):
+    """Decode ``gen`` greedy tokens for ``batch`` random prompts.
+
+    Routes through the paged continuous-batching engine when the arch
+    supports it (``use_engine='auto'``); otherwise — recurrent, enc-dec
+    and cross-attention archs — through the legacy fixed-batch loop.
+    Returns int32 tokens of shape (batch, gen) either way.
+    """
+    cfg = configs.get_smoke_config(arch) if smoke else configs.get_config(arch)
+    if use_engine == "never" or (use_engine == "auto"
+                                 and not engine_supported(cfg)):
+        return serve_fixed(arch, batch=batch, prompt_len=prompt_len,
+                           gen=gen, smoke=smoke, moba_impl=moba_impl,
+                           seed=seed)
+    params = T.init_lm(jax.random.PRNGKey(seed), cfg)
+    rng = np.random.default_rng(seed)
+    prompts = rng.integers(0, cfg.vocab_size, (batch, prompt_len),
+                           dtype=np.int32)
+    eng = Engine(cfg, params, EngineConfig(
+        max_seqs=batch, max_seq_len=_round_up(prompt_len + gen, 16),
+        max_prefill_batch=min(batch, 4), moba_impl=moba_impl))
+    reqs = [eng.submit(prompts[i], max_new_tokens=gen)
+            for i in range(batch)]
+    eng.run()
+    st = eng.stats
+    print(f"engine: {st['prefill_tokens']} prefill tokens in "
+          f"{st['prefill_s']:.2f}s; {st['decode_tokens']} decode tokens "
+          f"in {st['decode_s']:.2f}s over {st['decode_steps']} steps "
+          f"({st['decode_tokens'] / max(st['decode_s'], 1e-9):.1f} tok/s)")
+    return jnp.asarray(np.stack([np.asarray(r.out[:gen], np.int32)
+                                 for r in reqs]))
+
+
+def serve_stream(arch: str, n_requests: int = 16, rate: float = 8.0,
+                 prompt_range=(16, 96), gen_range=(8, 48),
+                 max_seqs: int = 8, num_pages: int = 0,
+                 smoke: bool = True, moba_impl: str = "reference",
+                 seed: int = 0, realtime: bool = True) -> dict:
+    """Continuous-batching scenario: Poisson arrivals (``rate`` req/s),
+    mixed prompt/generation lengths.  Reports tokens/s and p50/p99
+    time-to-first-token + end-to-end latency.
+
+    ``realtime=False`` collapses the arrival process (every request is
+    queued at t=0) so percentiles stay meaningful as queueing-free
+    engine latencies — honouring fictional arrivals against a free-
+    running clock would make them negative."""
+    cfg = configs.get_smoke_config(arch) if smoke else configs.get_config(arch)
+    params = T.init_lm(jax.random.PRNGKey(seed), cfg)
+    rng = np.random.default_rng(seed)
+    max_len = _round_up(prompt_range[1] + gen_range[1], 16)
+    eng = Engine(cfg, params, EngineConfig(
+        max_seqs=max_seqs, max_seq_len=max_len, num_pages=num_pages,
+        moba_impl=moba_impl))
+    t = 0.0
+    for _ in range(n_requests):
+        t += rng.exponential(1.0 / rate)
+        plen = int(rng.integers(*prompt_range))
+        glen = int(rng.integers(*gen_range))
+        eng.submit(rng.integers(0, cfg.vocab_size, plen, dtype=np.int32),
+                   max_new_tokens=glen,
+                   arrival=t if realtime else 0.0)
+    t0 = time.perf_counter()
+    done = eng.run(realtime=realtime)
+    wall = time.perf_counter() - t0
+    total_tokens = sum(len(r.out) for r in done)
+    ttft = np.array([r.t_first - r.arrival for r in done])
+    lat = np.array([r.t_done - r.arrival for r in done])
+    metrics = {
+        "requests": len(done), "wall_s": wall,
+        "generated_tokens": total_tokens,
+        "tokens_per_s": total_tokens / max(wall, 1e-9),
+        "ttft_p50_ms": float(np.percentile(ttft, 50) * 1e3),
+        "ttft_p99_ms": float(np.percentile(ttft, 99) * 1e3),
+        "latency_p50_ms": float(np.percentile(lat, 50) * 1e3),
+        "latency_p99_ms": float(np.percentile(lat, 99) * 1e3),
+        "preemptions": eng.stats["preemptions"],
+        "decode_steps": eng.stats["decode_steps"],
+    }
+    print(f"stream: {metrics['requests']} requests, "
+          f"{metrics['generated_tokens']} tokens in {wall:.2f}s "
+          f"({metrics['tokens_per_s']:.1f} tok/s); "
+          f"ttft p50/p99 {metrics['ttft_p50_ms']:.0f}/"
+          f"{metrics['ttft_p99_ms']:.0f} ms; "
+          f"latency p50/p99 {metrics['latency_p50_ms']:.0f}/"
+          f"{metrics['latency_p99_ms']:.0f} ms; "
+          f"{metrics['preemptions']} preemptions")
+    return metrics
+
+
+def serve_fixed(arch: str, batch: int = 4, prompt_len: int = 64,
+                gen: int = 32, smoke: bool = True,
+                moba_impl: str = "reference", seed: int = 0):
+    """Legacy synchronous loop: one dense-cache prefill + lockstep greedy
+    decode.  Baseline for benchmarks and the fallback for recurrent /
+    enc-dec / cross-attention archs the paged engine does not cover."""
     cfg = configs.get_smoke_config(arch) if smoke else configs.get_config(arch)
     params = T.init_lm(jax.random.PRNGKey(seed), cfg)
     rng = np.random.default_rng(seed)
@@ -63,14 +170,48 @@ def serve(arch: str, batch: int = 4, prompt_len: int = 64, gen: int = 32,
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-0.6b")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=64)
-    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--mode", default="stream",
+                    choices=["stream", "batch", "fixed"])
+    ap.add_argument("--batch", type=int, default=None,
+                    help="batch/fixed modes only (default 4)")
+    ap.add_argument("--prompt-len", type=int, default=None,
+                    help="batch/fixed modes only (default 64)")
+    ap.add_argument("--gen", type=int, default=None,
+                    help="batch/fixed modes only (default 32)")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--rate", type=float, default=8.0,
+                    help="stream mode: Poisson arrival rate, req/s")
+    ap.add_argument("--max-seqs", type=int, default=8)
+    ap.add_argument("--num-pages", type=int, default=0,
+                    help="page pool size (0 = fully provisioned); "
+                         "undersize it to exercise preemption")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--moba-impl", default="reference")
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
-    serve(args.arch, batch=args.batch, prompt_len=args.prompt_len,
-          gen=args.gen, smoke=args.smoke, moba_impl=args.moba_impl)
+    try:
+        if args.mode == "stream":
+            ignored = [n for n, v in (("--batch", args.batch),
+                                      ("--prompt-len", args.prompt_len),
+                                      ("--gen", args.gen)) if v is not None]
+            if ignored:
+                print(f"warning: {', '.join(ignored)} only apply to "
+                      f"--mode batch/fixed; stream mode draws mixed "
+                      f"lengths from its own ranges", file=sys.stderr)
+            serve_stream(args.arch, n_requests=args.requests,
+                         rate=args.rate, max_seqs=args.max_seqs,
+                         num_pages=args.num_pages, smoke=args.smoke,
+                         moba_impl=args.moba_impl, seed=args.seed)
+        else:
+            serve(args.arch, batch=args.batch or 4,
+                  prompt_len=args.prompt_len or 64, gen=args.gen or 32,
+                  smoke=args.smoke,
+                  moba_impl=args.moba_impl, seed=args.seed,
+                  use_engine="never" if args.mode == "fixed" else "auto")
+    except ServingError as e:  # unsupported arch / impossible sizing;
+        # genuine internal errors keep their tracebacks
+        print(f"error: {e}", file=sys.stderr)
+        raise SystemExit(2)
 
 
 if __name__ == "__main__":

@@ -124,6 +124,42 @@ def make_decode_step(cfg: ModelConfig, moba_impl: str = "reference",
     return decode_step
 
 
+def make_paged_prefill_step(cfg: ModelConfig, moba_impl: str = "reference"):
+    """Ragged prefill into a paged cache: tokens (B, L) right-padded with
+    per-row valid length ``q_len``; rows with q_len == 0 are padding.
+    Returns (first sampled token (B,), new caches)."""
+
+    def prefill_step(params, tokens, caches, block_table, q_len, active):
+        page_state = {"block_table": block_table,
+                      "kv_len": jnp.zeros_like(q_len),
+                      "q_len": q_len, "active": active}
+        logits, new_caches = T.prefill(params, tokens, cfg, caches,
+                                       moba_impl=moba_impl,
+                                       page_state=page_state)
+        last = jnp.maximum(q_len - 1, 0)[:, None, None]      # (B,1,1)
+        lg = jnp.take_along_axis(logits, last, axis=1)[:, 0]  # (B,V)
+        return jnp.argmax(lg, axis=-1).astype(jnp.int32), new_caches
+
+    return prefill_step
+
+
+def make_paged_decode_step(cfg: ModelConfig, moba_impl: str = "reference"):
+    """One continuous-batching decode step over all sequence slots:
+    token (B,), per-slot pre-step lengths kv_len (B,), active mask (B,).
+    Returns (next token (B,), new caches)."""
+
+    def decode_step(params, token, caches, block_table, kv_len, active):
+        page_state = {"block_table": block_table, "kv_len": kv_len,
+                      "q_len": active.astype(jnp.int32), "active": active}
+        logits, new_caches = T.decode_step(params, token[:, None], cfg,
+                                           caches, moba_impl=moba_impl,
+                                           page_state=page_state)
+        return (jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32),
+                new_caches)
+
+    return decode_step
+
+
 # -------------------------------------------------------------- shardings
 def _dp(mesh: Mesh):
     return shmod.data_axes(mesh)

@@ -17,9 +17,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core.attention import attention_dispatch
+from repro.core.attention import attention_dispatch, dense_attention
 from repro.core.key_conv import (apply_key_conv, apply_key_conv_decode,
                                  init_key_conv, key_conv_state_init)
+from repro.core.moba import (moba_attention_reference,
+                             moba_paged_decode_attention)
 from repro.distributed.sharding import constrain, tp_enabled
 
 
@@ -55,11 +57,13 @@ def rope_freqs(head_dim: int, theta: float = 10000.0) -> jax.Array:
 
 def apply_rope(x: jax.Array, positions: jax.Array,
                theta: float = 10000.0) -> jax.Array:
-    """x: (B, H, N, d), positions: (N,) broadcastable."""
+    """x: (B, H, N, d); positions: (N,) shared or (B, N) per-sequence
+    (ragged serving batches where each row sits at a different offset)."""
     d = x.shape[-1]
     freqs = rope_freqs(d, theta)
-    ang = positions[..., None].astype(jnp.float32) * freqs  # (N, d/2)
-    ang = ang[None, None]
+    positions = jnp.asarray(positions)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., N, d/2)
+    ang = ang[None, None] if positions.ndim == 1 else ang[:, None]
     cos, sin = jnp.cos(ang), jnp.sin(ang)
     x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
     out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
@@ -123,9 +127,18 @@ def apply_attention(p: dict, x: jax.Array, cfg: ModelConfig, kind: str,
                     cache: Optional[dict] = None,
                     moba_impl: str = "reference",
                     cross_kv: Optional[jax.Array] = None,
-                    causal: bool = True
+                    causal: bool = True,
+                    page_state: Optional[dict] = None
                     ) -> Tuple[jax.Array, Optional[dict]]:
-    """Self (or cross) attention layer.  Returns (out, updated_cache)."""
+    """Self (or cross) attention layer.  Returns (out, updated_cache).
+
+    The cache protocol admits two interchangeable cache kinds behind this
+    one interface: the dense per-sequence cache from ``init_cache`` and
+    the paged pool from ``serving.paged_cache`` (recognised by its
+    ``pages_k`` leaf).  Paged caches additionally need ``page_state`` =
+    {block_table (B,npg), kv_len (B,) pre-step lengths, q_len (B,) new
+    tokens this step, active (B,) bool} from the scheduler.
+    """
     dt = x.dtype
     a = cfg.attention
     b, n, _ = x.shape
@@ -160,6 +173,15 @@ def apply_attention(p: dict, x: jax.Array, cfg: ModelConfig, kind: str,
     conv_w = p.get("key_conv") if kind == "moba" else None
     kv_len = None
     new_cache = None
+    if cache is not None and "pages_k" in cache and cross_kv is None:
+        if conv_w is not None:
+            raise NotImplementedError(
+                "key-conv with paged caches is an open item (DESIGN.md §4)")
+        o, new_cache = _paged_attend(q, k, v, cache, page_state, cfg,
+                                     kind, positions)
+        o = o.transpose(0, 2, 1, 3).reshape(b, n, h * dh)
+        out = o @ wcast(p["wo"], dt)
+        return out, new_cache
     if cache is not None and cross_kv is None:
         if conv_w is not None:
             if n == 1:
@@ -215,6 +237,53 @@ def apply_attention(p: dict, x: jax.Array, cfg: ModelConfig, kind: str,
     if n > 1:
         out = constrain(out, ("dp", "sp", None))
     return out, new_cache
+
+
+def _paged_attend(q, k, v, cache, page_state, cfg: ModelConfig, kind: str,
+                  positions):
+    """Paged-cache attention: append new K/V through the block table, then
+    attend.  MoBA decode routes on the per-page centroid cache and reads
+    only the selected pages; dense/swa decode densifies via the table.
+    Prefill is ragged (right-padded rows of ``q_len`` valid tokens)."""
+    from repro.serving import paged_cache as PC
+
+    assert page_state is not None, "paged cache requires page_state"
+    a = cfg.attention
+    n = q.shape[2]
+    bt = page_state["block_table"]
+    kvl = page_state["kv_len"]
+    q_len = page_state["q_len"]
+    post_len = kvl + q_len                     # lengths after this step
+    window = a.window if kind == "swa" else 0
+    if n == 1:                                 # decode: one token per seq
+        new_cache = PC.paged_append_decode(cache, bt, kvl,
+                                           page_state["active"], k, v)
+        if kind == "moba":
+            o = moba_paged_decode_attention(
+                q, new_cache["pages_k"], new_cache["pages_v"],
+                new_cache["centroids"], bt, post_len, a.moba,
+                scale=a.scale)
+        else:
+            # densifies the full table; a window-bounded gather for swa
+            # is an open item (DESIGN.md §4)
+            kf, vf = PC.paged_gather_kv(new_cache, bt)
+            o = dense_attention(q, kf, vf, causal=True,
+                                q_positions=positions, kv_len=post_len,
+                                window=window, scale=a.scale)
+    else:                                      # ragged fresh prefill
+        new_cache = PC.paged_append_prefill(cache, bt, q_len, k, v)
+        if kind == "moba":
+            # reference path: the only impl with per-sequence kv_len
+            # masking; routing a padded row is harmless (see DESIGN.md §4)
+            o = moba_attention_reference(
+                q, k, v, a.moba, q_positions=jnp.arange(n),
+                kv_len=post_len[:, None, None, None], scale=a.scale)
+        else:
+            o = dense_attention(q, k, v, causal=True,
+                                q_positions=jnp.arange(n),
+                                kv_len=post_len, window=window,
+                                scale=a.scale)
+    return o, new_cache
 
 
 def init_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int,

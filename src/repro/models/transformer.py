@@ -59,7 +59,7 @@ def init_block(key, cfg: ModelConfig, kind: str) -> dict:
 
 def apply_block(p: dict, x: jax.Array, cfg: ModelConfig, kind: str, *,
                 positions=None, cache=None, moba_impl="reference",
-                cross_kv=None, causal=True):
+                cross_kv=None, causal=True, page_state=None):
     """Pre-LN block. Returns (x, aux_loss, new_cache)."""
     aux = jnp.zeros((), jnp.float32)
     if kind == "ssm":
@@ -79,7 +79,7 @@ def apply_block(p: dict, x: jax.Array, cfg: ModelConfig, kind: str, *,
         h, new_cache = L.apply_attention(
             p["attn"], L.rms_norm(x, p["norm1"], cfg.rms_norm_eps), cfg,
             attn_kind, positions=positions, cache=self_cache,
-            moba_impl=moba_impl, causal=causal)
+            moba_impl=moba_impl, causal=causal, page_state=page_state)
     x = x + h
     if kind == "decoder":
         h, _ = L.apply_attention(
@@ -157,7 +157,8 @@ def lm_apply(params, tokens: jax.Array, cfg: ModelConfig, *,
              caches: Optional[dict] = None, moba_impl: str = "reference",
              cross_kv: Optional[jax.Array] = None,
              positions: Optional[jax.Array] = None,
-             remat: bool = False, unroll: bool = False):
+             remat: bool = False, unroll: bool = False,
+             page_state: Optional[dict] = None):
     """tokens (B, S) -> (logits (B, S, V), aux, new_caches).
 
     ``unroll=True`` replaces the layer-group scan with a python loop —
@@ -184,6 +185,7 @@ def lm_apply(params, tokens: jax.Array, cfg: ModelConfig, *,
             x, a, nc = apply_block(p_i, x, cfg, kind,
                                    positions=positions, cache=cache_i,
                                    moba_impl=moba_impl,
+                                   page_state=page_state,
                                    cross_kv=cross_kv
                                    if kind in ("cross", "decoder")
                                    else None)
@@ -273,22 +275,57 @@ def init_caches(cfg: ModelConfig, batch: int, max_len: int,
     return jax.vmap(one_group)(jnp.arange(n_groups))
 
 
+def init_paged_caches(cfg: ModelConfig, num_pages: int, page_size: int,
+                      dtype=jnp.bfloat16) -> dict:
+    """Stacked paged caches (page pools) in the same group/slot layout as
+    :func:`init_caches`, so either cache kind flows through the same scan.
+
+    Only attention slots are pageable; recurrent (ssm) and cross/decoder
+    slots have no paging granularity — the engine rejects those archs.
+    """
+    from repro.serving import paged_cache as PC
+
+    pattern, n_groups = _block_kinds(cfg)
+    for kind in pattern:
+        if kind not in ("dense", "swa", "moba", "shared_attn"):
+            raise ValueError(
+                f"paged caches support attention-only layer patterns; "
+                f"got {kind!r} in {pattern}")
+
+    def one_group(_):
+        return {f"slot_{i}": PC.init_page_pool(
+                    cfg, num_pages, page_size,
+                    with_centroids=(kind == "moba"), dtype=dtype)
+                for i, kind in enumerate(pattern)}
+
+    return jax.vmap(one_group)(jnp.arange(n_groups))
+
+
 def prefill(params, tokens: jax.Array, cfg: ModelConfig, caches,
-            moba_impl="reference", cross_kv=None, unroll: bool = False):
+            moba_impl="reference", cross_kv=None, unroll: bool = False,
+            page_state=None):
     logits, aux, new_caches = lm_apply(
         params, tokens, cfg, caches=caches, moba_impl=moba_impl,
-        cross_kv=cross_kv, unroll=unroll,
+        cross_kv=cross_kv, unroll=unroll, page_state=page_state,
         positions=jnp.arange(tokens.shape[1]))
     return logits, new_caches
 
 
 def decode_step(params, token: jax.Array, cfg: ModelConfig, caches,
-                moba_impl="reference", cross_kv=None, unroll: bool = False):
-    """token (B, 1) against caches; returns (logits (B,1,V), new_caches)."""
-    pos = _cache_len(caches, cfg)
+                moba_impl="reference", cross_kv=None, unroll: bool = False,
+                page_state=None):
+    """token (B, 1) against caches; returns (logits (B,1,V), new_caches).
+
+    With a paged cache the per-sequence position is the scheduler's
+    pre-step length; with a dense cache it is the shared cache length."""
+    if page_state is not None:
+        pos = page_state["kv_len"][:, None]                  # (B,1) ragged
+    else:
+        pos = _cache_len(caches, cfg) + jnp.arange(1)
     logits, _, new_caches = lm_apply(
         params, token, cfg, caches=caches, moba_impl=moba_impl,
-        cross_kv=cross_kv, positions=pos + jnp.arange(1), unroll=unroll)
+        cross_kv=cross_kv, positions=pos, unroll=unroll,
+        page_state=page_state)
     return logits, new_caches
 
 

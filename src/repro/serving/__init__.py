@@ -1,0 +1,23 @@
+"""Paged-KV serving subsystem: block-table caches, incremental centroid
+caches, and a continuous-batching engine for MoBA decode.
+
+Layering (DESIGN.md §4):
+  * :mod:`repro.serving.paged_cache` — device-side page pools + pure
+    scatter/gather/centroid-update functions (everything jittable).
+  * :mod:`repro.serving.scheduler` — host-side request lifecycle: page
+    allocator, admit / finish / preempt, prefill batching decisions.
+  * :mod:`repro.serving.engine` — glues the two: owns the jitted step
+    functions and the device cache state, drains a request stream.
+"""
+__all__ = ["Engine", "EngineConfig", "Request", "Scheduler"]
+
+
+def __getattr__(name):  # lazy: models.layers imports paged_cache at call
+    # time; pulling the engine in eagerly would cycle back into models.
+    if name in ("Engine", "EngineConfig"):
+        from repro.serving import engine
+        return getattr(engine, name)
+    if name in ("Request", "Scheduler"):
+        from repro.serving import scheduler
+        return getattr(scheduler, name)
+    raise AttributeError(name)

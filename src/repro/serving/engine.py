@@ -1,0 +1,202 @@
+"""Continuous-batching serving engine over the paged KV cache.
+
+The engine owns the device state (params + paged caches) and two jitted
+step functions; the scheduler owns the host state (free pages, block
+table, request queues).  Each :meth:`step` runs at most one ragged
+prefill batch and one decode batch over every running sequence slot.
+
+Shapes are kept jit-stable: the decode batch is always the full
+``max_seqs`` slot array with an active mask, and prefill batches are
+padded to ``max_prefill_batch`` rows with power-of-two token buckets, so
+the engine compiles O(log max_seq_len) prefill variants and exactly one
+decode variant.
+
+Supported: attention-only layer patterns (dense / swa / moba /
+shared_attn), dense and MoE families, no key-conv.  Recurrent (ssm) and
+cross-attention archs fall back to the fixed-batch loop in
+``launch/serve.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.launch import steps as S
+from repro.models import transformer as T
+from repro.serving import paged_cache as PC
+from repro.serving.scheduler import Request, Scheduler, ServingError
+
+
+def engine_supported(cfg: ModelConfig) -> bool:
+    attn_only = all(k in ("dense", "swa", "moba", "shared_attn")
+                    for k in cfg.layer_pattern)
+    a = cfg.attention
+    no_kconv = a.moba is None or not a.moba.key_conv_width
+    return attn_only and no_kconv and cfg.family in ("dense", "moe")
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    max_seqs: int = 8                  # concurrent sequence slots
+    max_seq_len: int = 512             # per-sequence prompt+gen capacity
+    num_pages: int = 0                 # 0 → max_seqs * pages_per_seq
+    page_size: int = 0                 # 0 → MoBA block size (or 16)
+    max_prefill_batch: int = 4
+    moba_impl: str = "reference"
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params, ecfg: EngineConfig = None,
+                 ):
+        if not engine_supported(cfg):
+            raise ServingError(
+                f"arch {cfg.name!r} (pattern {cfg.layer_pattern}, family "
+                f"{cfg.family}) is not engine-supported; use the "
+                f"fixed-batch loop")
+        self.cfg = cfg
+        self.params = params
+        self.ecfg = ecfg = ecfg or EngineConfig()
+        self.page_size = ecfg.page_size or PC.resolve_page_size(cfg)
+        self.pages_per_seq = math.ceil(ecfg.max_seq_len / self.page_size)
+        self.num_pages = (ecfg.num_pages
+                          or ecfg.max_seqs * self.pages_per_seq)
+        self.caches = T.init_paged_caches(
+            cfg, self.num_pages, self.page_size,
+            dtype=jnp.dtype(cfg.dtype))
+        self.sched = Scheduler(
+            num_pages=self.num_pages, page_size=self.page_size,
+            max_seqs=ecfg.max_seqs, max_pages_per_seq=self.pages_per_seq,
+            max_prefill_batch=ecfg.max_prefill_batch)
+        self._prefill = jax.jit(
+            S.make_paged_prefill_step(cfg, moba_impl=ecfg.moba_impl),
+            donate_argnums=(2,))
+        self._decode = jax.jit(
+            S.make_paged_decode_step(cfg, moba_impl=ecfg.moba_impl),
+            donate_argnums=(2,))
+        self._cur_tok = np.zeros((ecfg.max_seqs,), np.int32)
+        self._next_rid = 0
+        self._t0 = None
+        self.finished: List[Request] = []
+        # perf counters (wall seconds / token counts)
+        self.stats = {"prefill_s": 0.0, "decode_s": 0.0,
+                      "prefill_tokens": 0, "decode_steps": 0,
+                      "decode_tokens": 0, "preemptions": 0}
+
+    # ------------------------------------------------------------- intake
+    def submit(self, prompt: Sequence[int], max_new_tokens: int,
+               arrival: float = 0.0, eos_id: Optional[int] = None
+               ) -> Request:
+        req = Request(rid=self._next_rid,
+                      prompt=np.asarray(prompt, np.int32),
+                      max_new_tokens=max_new_tokens, arrival=arrival,
+                      eos_id=eos_id)
+        self._next_rid += 1
+        self.sched.submit(req)
+        return req
+
+    # -------------------------------------------------------------- steps
+    def _bucket(self, n: int) -> int:
+        b = max(16, self.page_size)
+        while b < n:
+            b *= 2
+        return b
+
+    def _run_prefill(self, reqs: List[Request], now: float) -> None:
+        bp = self.ecfg.max_prefill_batch
+        lens = [len(r.context) for r in reqs]
+        lmax = self._bucket(max(lens))
+        tokens = np.zeros((bp, lmax), np.int32)
+        q_len = np.zeros((bp,), np.int32)
+        active = np.zeros((bp,), bool)
+        table = np.full((bp, self.pages_per_seq), -1, np.int32)
+        for i, r in enumerate(reqs):
+            ctx = r.context
+            tokens[i, :len(ctx)] = ctx
+            q_len[i] = len(ctx)
+            active[i] = True
+            table[i] = self.sched.block_table[r.slot]
+        t0 = time.perf_counter()
+        tok, self.caches = self._prefill(
+            self.params, jnp.asarray(tokens), self.caches,
+            jnp.asarray(table), jnp.asarray(q_len), jnp.asarray(active))
+        tok = np.asarray(tok)
+        self.stats["prefill_s"] += time.perf_counter() - t0
+        self.stats["prefill_tokens"] += int(sum(lens))
+        for i, r in enumerate(reqs):
+            r.cache_len = lens[i]
+            r.out.append(int(tok[i]))
+            self._cur_tok[r.slot] = tok[i]
+            if r.t_first is None:
+                r.t_first = self._wall()
+
+    def _run_decode(self, reqs: List[Request], now: float) -> None:
+        ms = self.ecfg.max_seqs
+        kv_len = np.zeros((ms,), np.int32)
+        active = np.zeros((ms,), bool)
+        for r in reqs:
+            kv_len[r.slot] = r.cache_len
+            active[r.slot] = True
+        t0 = time.perf_counter()
+        tok, self.caches = self._decode(
+            self.params, jnp.asarray(self._cur_tok), self.caches,
+            jnp.asarray(self.sched.block_table), jnp.asarray(kv_len),
+            jnp.asarray(active))
+        tok = np.asarray(tok)
+        self.stats["decode_s"] += time.perf_counter() - t0
+        self.stats["decode_steps"] += 1
+        self.stats["decode_tokens"] += len(reqs)
+        for r in reqs:
+            r.cache_len += 1
+            r.out.append(int(tok[r.slot]))
+            self._cur_tok[r.slot] = tok[r.slot]
+
+    def _wall(self) -> float:
+        return (0.0 if self._t0 is None
+                else time.perf_counter() - self._t0)
+
+    def step(self, now: float = float("inf")) -> Dict:
+        """One engine iteration: admit+prefill, then decode all running."""
+        plan = self.sched.plan_step(now)
+        self.stats["preemptions"] += len(plan.preempted)
+        if plan.prefills:
+            self._run_prefill(plan.prefills, now)
+        # plan.decodes already includes this step's prefills: every
+        # admitted request joins the decode batch in the same iteration
+        decodes = [r for r in plan.decodes
+                   if r.state == "running" and not r.done]
+        if decodes:
+            self._run_decode(decodes, now)
+        done = [r for r in list(self.sched.running) if r.done]
+        for r in done:
+            self.sched.finish(r)
+            r.t_done = self._wall()
+            self.finished.append(r)
+        return {"prefilled": len(plan.prefills), "decoded": len(decodes),
+                "finished": len(done), "preempted": len(plan.preempted)}
+
+    # ---------------------------------------------------------------- run
+    def run(self, realtime: bool = False) -> List[Request]:
+        """Drain all submitted requests and return the ones finished by
+        *this* call (``self.finished`` keeps the engine-lifetime list).
+        ``realtime=True`` honours request arrival times against the wall
+        clock (Poisson streams); otherwise every step sees every queued
+        request."""
+        n0 = len(self.finished)
+        if self._t0 is None:     # keep one clock base across run() calls
+            self._t0 = time.perf_counter()
+        while self.sched.has_work():
+            now = self._wall() if realtime else float("inf")
+            self.step(now=now)
+            if realtime and not self.sched.running \
+                    and self.sched.waiting:
+                wait = self.sched.waiting[0].arrival - self._wall()
+                if wait > 0:
+                    time.sleep(min(wait, 0.05))
+        return self.finished[n0:]

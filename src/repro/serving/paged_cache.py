@@ -1,0 +1,158 @@
+"""Paged KV cache with a per-page centroid cache (device side, pure jax).
+
+A page holds ``page_size`` tokens of K and V for every kv head of one
+layer slot.  ``page_size`` equals the MoBA ``block_size``, so **one page
+is exactly one routable block**: the per-page centroid cache doubles as
+the decode routing table, and reading it costs O(N/B·d) instead of the
+O(N·d) full-cache centroid recompute the old decode path paid per step.
+
+Layout: pools are token-major ``(num_pages, page_size, hkv, dh)`` so the
+flat ``(num_pages*page_size, hkv, dh)`` scatter/gather view used by the
+append paths is a free reshape, not a transpose-copy.  Invalid writes
+(padded rows, unassigned pages) are routed to the out-of-bounds slot
+``num_pages*page_size`` and dropped by the scatter — no dump page needed.
+
+Sequences are described *outside* the pool by a block table: row i maps
+sequence i's logical page j to a physical page id (−1 = unassigned).
+Block tables and sequence lengths live on the host (scheduler) and are
+passed into the jitted steps as small int32 arrays each step.
+
+Centroid semantics match the dense cache exactly (tests assert this):
+  * prefill recomputes each touched page's centroid from the stored keys
+    (same math as :func:`repro.core.routing.block_centroids`);
+  * decode folds the new key in with one rank-1 update
+    ``c ← (c·m + k)/(m+1)`` — amortized O(d) per token.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def resolve_page_size(cfg: ModelConfig) -> int:
+    """Page size = MoBA block size when any layer routes; else 16."""
+    a = cfg.attention
+    if a.moba is not None and any(k == "moba" for k in cfg.layer_pattern):
+        return a.moba.block_size
+    return 16
+
+
+def init_page_pool(cfg: ModelConfig, num_pages: int, page_size: int,
+                   with_centroids: bool, dtype=jnp.bfloat16) -> Dict:
+    hkv, dh = cfg.num_kv_heads, cfg.resolved_head_dim
+    pool = {"pages_k": jnp.zeros((num_pages, page_size, hkv, dh), dtype),
+            "pages_v": jnp.zeros((num_pages, page_size, hkv, dh), dtype)}
+    if with_centroids:
+        pool["centroids"] = jnp.zeros((num_pages, hkv, dh), jnp.float32)
+    return pool
+
+
+def is_paged(cache) -> bool:
+    return cache is not None and "pages_k" in cache
+
+
+def paged_append_decode(cache: Dict, block_table: jax.Array,
+                        kv_len: jax.Array, active: jax.Array,
+                        k_new: jax.Array, v_new: jax.Array) -> Dict:
+    """Write one token per active sequence at position ``kv_len[i]``.
+
+    k_new/v_new: (B, hkv, 1, dh) in compute dtype.  Updates the written
+    page's centroid incrementally.  Inactive rows write nothing.
+    """
+    pk, pv = cache["pages_k"], cache["pages_v"]
+    num_pages, ps, hkv, dh = pk.shape
+    page_idx = kv_len // ps
+    off = kv_len % ps
+    phys = jnp.take_along_axis(block_table, page_idx[:, None], axis=1)[:, 0]
+    ok = active & (phys >= 0)
+    slot = jnp.where(ok, phys * ps + off, num_pages * ps)
+    tok_k = k_new[:, :, 0]                                   # (B,hkv,dh)
+    tok_v = v_new[:, :, 0]
+    flat_k = pk.reshape(num_pages * ps, hkv, dh)
+    flat_v = pv.reshape(num_pages * ps, hkv, dh)
+    flat_k = flat_k.at[slot].set(tok_k.astype(pk.dtype), mode="drop")
+    flat_v = flat_v.at[slot].set(tok_v.astype(pv.dtype), mode="drop")
+    new = dict(cache,
+               pages_k=flat_k.reshape(num_pages, ps, hkv, dh),
+               pages_v=flat_v.reshape(num_pages, ps, hkv, dh))
+    if "centroids" in cache:
+        cents = cache["centroids"]                           # (P,hkv,dh) f32
+        m = off.astype(jnp.float32)[:, None, None]           # tokens in page
+        old = cents[jnp.maximum(phys, 0)]                    # (B,hkv,dh)
+        upd = (old * m + tok_k.astype(jnp.float32)) / (m + 1.0)
+        new["centroids"] = cents.at[jnp.where(ok, phys, num_pages)].set(
+            upd, mode="drop")
+    return new
+
+
+def paged_append_prefill(cache: Dict, block_table: jax.Array,
+                         q_len: jax.Array, k_new: jax.Array,
+                         v_new: jax.Array) -> Dict:
+    """Scatter a right-padded ragged prompt batch into fresh pages.
+
+    k_new/v_new: (B, hkv, L, dh); sequence i occupies positions
+    [0, q_len[i]).  Sequences are assumed fresh (cache length 0 — the
+    engine prefills whole prompts; chunked prefill is an open item).
+    Touched pages get their centroid recomputed from the stored keys.
+    """
+    pk, pv = cache["pages_k"], cache["pages_v"]
+    num_pages, ps, hkv, dh = pk.shape
+    b, _, length, _ = k_new.shape
+    npg = block_table.shape[1]
+    pos = jnp.arange(length)
+    logical = jnp.minimum(pos // ps, npg - 1)
+    phys = jnp.take(block_table, logical, axis=1)            # (B,L)
+    valid = (pos[None, :] < q_len[:, None]) & (phys >= 0)
+    slot = jnp.where(valid, phys * ps + pos % ps,
+                     num_pages * ps).reshape(-1)
+    vals_k = k_new.transpose(0, 2, 1, 3).reshape(b * length, hkv, dh)
+    vals_v = v_new.transpose(0, 2, 1, 3).reshape(b * length, hkv, dh)
+    flat_k = pk.reshape(num_pages * ps, hkv, dh).at[slot].set(
+        vals_k.astype(pk.dtype), mode="drop")
+    flat_v = pv.reshape(num_pages * ps, hkv, dh).at[slot].set(
+        vals_v.astype(pv.dtype), mode="drop")
+    new_pk = flat_k.reshape(num_pages, ps, hkv, dh)
+    new_pv = flat_v.reshape(num_pages, ps, hkv, dh)
+    new = dict(cache, pages_k=new_pk, pages_v=new_pv)
+    if "centroids" in cache:
+        cnt = jnp.clip(q_len[:, None] - jnp.arange(npg) * ps, 0, ps)
+        touched = (cnt > 0) & (block_table >= 0)             # (B,npg)
+        pages = new_pk[jnp.maximum(block_table, 0)]          # (B,npg,ps,h,d)
+        wmask = jnp.arange(ps)[None, None, :] < cnt[..., None]
+        sums = (pages.astype(jnp.float32)
+                * wmask[..., None, None]).sum(axis=2)        # (B,npg,h,d)
+        cent = sums / jnp.maximum(cnt, 1)[..., None, None].astype(
+            jnp.float32)
+        idx = jnp.where(touched, block_table, num_pages).reshape(-1)
+        new["centroids"] = cache["centroids"].at[idx].set(
+            cent.reshape(b * npg, hkv, dh), mode="drop")
+    return new
+
+
+def paged_gather_kv(cache: Dict, block_table: jax.Array
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Densify: (B, hkv, npg*ps, dh) K and V in logical token order.
+
+    Positions past a sequence's length (and pages it never allocated)
+    hold whatever the pool contains — callers mask with ``kv_len``.
+    """
+    pk, pv = cache["pages_k"], cache["pages_v"]
+    num_pages, ps, hkv, dh = pk.shape
+    b, npg = block_table.shape
+    tbl = jnp.maximum(block_table, 0)
+
+    def densify(pool):
+        g = pool[tbl]                                        # (B,npg,ps,h,d)
+        return g.transpose(0, 3, 1, 2, 4).reshape(b, hkv, npg * ps, dh)
+
+    return densify(pk), densify(pv)
+
+
+def gather_seq_centroids(cache: Dict, block_table: jax.Array) -> jax.Array:
+    """Per-sequence centroid view (B, hkv, npg, dh) in logical order."""
+    cents = cache["centroids"][jnp.maximum(block_table, 0)]  # (B,npg,h,d)
+    return cents.transpose(0, 2, 1, 3)

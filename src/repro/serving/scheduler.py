@@ -1,0 +1,210 @@
+"""Host-side continuous-batching scheduler: request lifecycle + pages.
+
+Pure bookkeeping — no jax.  The scheduler owns the free-page list and the
+authoritative block table (numpy); the engine snapshots the table into
+device arrays each step.  Policies are deliberately simple and documented:
+
+  * admission: FIFO by arrival; a request is admitted when a sequence
+    slot is free and the pool can cover its whole context plus one decode
+    token.  Admission happens every step — new requests join the running
+    batch without draining it (continuous batching).
+  * growth: before each decode step every running sequence is guaranteed
+    a slot for one more token; crossing a page boundary allocates a page.
+  * preemption: when the pool is exhausted the *youngest* running request
+    is evicted — its pages are freed and its full context (prompt plus
+    everything generated so far) is requeued for recompute-prefill, which
+    with greedy decoding reproduces the interrupted stream exactly.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import math
+from typing import Deque, List, Optional
+
+import numpy as np
+
+
+class ServingError(ValueError):
+    """User-facing configuration error (unsupported arch, impossible
+    sizing) — distinguishable from genuine internal ValueErrors so CLI
+    entry points can report it cleanly without eating tracebacks."""
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                  # int32 (L,) original prompt
+    max_new_tokens: int
+    arrival: float = 0.0
+    eos_id: Optional[int] = None
+    # runtime state
+    out: List[int] = dataclasses.field(default_factory=list)
+    state: str = "waiting"              # waiting | running | done
+    slot: int = -1
+    cache_len: int = 0                  # tokens whose KV is in the cache
+    n_preempt: int = 0
+    t_first: Optional[float] = None     # first-token wall time
+    t_done: Optional[float] = None
+
+    @property
+    def context(self) -> np.ndarray:
+        """Prompt plus generated-so-far: what a recompute-prefill feeds.
+        The last generated token is included — prefilling it emits the
+        *next* token, exactly where the evicted decode left off."""
+        if not self.out:
+            return self.prompt
+        return np.concatenate(
+            [self.prompt, np.asarray(self.out, np.int32)])
+
+    @property
+    def done(self) -> bool:
+        if len(self.out) >= self.max_new_tokens:
+            return True
+        return (self.eos_id is not None and self.out
+                and self.out[-1] == self.eos_id)
+
+
+class PageAllocator:
+    """Free-list allocator over ``num_pages`` physical pages."""
+
+    def __init__(self, num_pages: int):
+        self.num_pages = num_pages
+        self._free = list(range(num_pages - 1, -1, -1))
+
+    @property
+    def available(self) -> int:
+        return len(self._free)
+
+    def alloc(self) -> Optional[int]:
+        return self._free.pop() if self._free else None
+
+    def release(self, pages: List[int]) -> None:
+        self._free.extend(pages)
+
+
+@dataclasses.dataclass
+class StepPlan:
+    prefills: List[Request]
+    decodes: List[Request]
+    preempted: List[Request]
+
+
+class Scheduler:
+    def __init__(self, *, num_pages: int, page_size: int, max_seqs: int,
+                 max_pages_per_seq: int, max_prefill_batch: int = 4):
+        self.page_size = page_size
+        self.max_seqs = max_seqs
+        self.max_pages_per_seq = max_pages_per_seq
+        self.max_prefill_batch = max_prefill_batch
+        self.alloc = PageAllocator(num_pages)
+        self.block_table = np.full((max_seqs, max_pages_per_seq), -1,
+                                   np.int32)
+        self._seq_pages: List[List[int]] = [[] for _ in range(max_seqs)]
+        self._free_slots = list(range(max_seqs - 1, -1, -1))
+        self.waiting: Deque[Request] = collections.deque()
+        self.running: List[Request] = []    # admission order (oldest first)
+
+    # ------------------------------------------------------------- intake
+    def submit(self, req: Request) -> None:
+        need = len(req.prompt) + req.max_new_tokens
+        cap = self.max_pages_per_seq * self.page_size
+        if need > cap:
+            raise ServingError(
+                f"request {req.rid}: prompt+gen {need} tokens "
+                f"exceed per-sequence capacity {cap}")
+        if self._pages_for(need) > self.alloc.num_pages:
+            raise ServingError(
+                f"request {req.rid} can never fit: needs "
+                f"{self._pages_for(need)} pages, pool has "
+                f"{self.alloc.num_pages}")
+        self.waiting.append(req)
+
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.running)
+
+    # ------------------------------------------------------------ helpers
+    def _pages_for(self, n_tokens: int) -> int:
+        return math.ceil(n_tokens / self.page_size)
+
+    def _grow_to(self, req: Request, n_tokens: int) -> bool:
+        """Ensure req's block-table row covers ``n_tokens`` tokens."""
+        pages = self._seq_pages[req.slot]
+        while len(pages) < self._pages_for(n_tokens):
+            page = self.alloc.alloc()
+            if page is None:
+                return False
+            self.block_table[req.slot, len(pages)] = page
+            pages.append(page)
+        return True
+
+    def _release(self, req: Request) -> None:
+        slot = req.slot
+        self.alloc.release(self._seq_pages[slot])
+        self._seq_pages[slot] = []
+        self.block_table[slot, :] = -1
+        self._free_slots.append(slot)
+        req.slot = -1
+
+    def _preempt_youngest(self, spare: Request) -> Optional[Request]:
+        """Evict the most recently admitted running request != spare."""
+        for victim in reversed(self.running):
+            if victim is spare and len(self.running) > 1:
+                continue
+            self.running.remove(victim)
+            self._release(victim)
+            victim.state = "waiting"
+            victim.cache_len = 0
+            victim.n_preempt += 1
+            self.waiting.appendleft(victim)
+            return victim
+        return None
+
+    # --------------------------------------------------------------- plan
+    def plan_step(self, now: float = float("inf")) -> StepPlan:
+        preempted: List[Request] = []
+
+        # 1. growth: every running sequence gets room for one more token,
+        #    preempting from the back under pressure (oldest survives).
+        for req in list(self.running):
+            if req.state != "running":
+                continue
+            while not self._grow_to(req, req.cache_len + 1):
+                victim = self._preempt_youngest(spare=req)
+                if victim is None or victim is req:
+                    if victim is None:       # cannot happen: req holds pages
+                        raise RuntimeError("page pool deadlock")
+                    preempted.append(victim)
+                    break
+                preempted.append(victim)
+            if req.state != "running":       # req itself was the victim
+                continue
+
+        # 2. admission (FIFO, arrivals only): whole context + one decode
+        #    token must fit — no partial/chunked prefill yet.
+        prefills: List[Request] = []
+        while (self.waiting and self._free_slots
+               and len(prefills) < self.max_prefill_batch
+               and self.waiting[0].arrival <= now):
+            req = self.waiting[0]
+            ctx = len(req.context)
+            if self._pages_for(ctx + 1) > self.alloc.available:
+                break                        # FIFO head-of-line blocking
+            self.waiting.popleft()
+            req.slot = self._free_slots.pop()
+            req.state = "running"
+            req.cache_len = 0
+            ok = self._grow_to(req, ctx + 1)
+            assert ok, "admission checked page availability"
+            self.running.append(req)
+            prefills.append(req)
+
+        decodes = [r for r in self.running if r.state == "running"]
+        return StepPlan(prefills=prefills, decodes=decodes,
+                        preempted=preempted)
+
+    # ------------------------------------------------------------- finish
+    def finish(self, req: Request) -> None:
+        self.running.remove(req)
+        self._release(req)
+        req.state = "done"

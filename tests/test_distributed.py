@@ -32,8 +32,7 @@ def test_sp_attention_matches_reference():
     from repro.core import moba
     from repro.distributed import sharding as shmod
     from repro.distributed.moba_sp import moba_attention_sp
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = shmod.make_compat_mesh((2, 4), ("data", "model"))
     ks = jax.random.split(jax.random.PRNGKey(0), 3)
     q = jax.random.normal(ks[0], (2, 4, 128, 16))
     k = jax.random.normal(ks[1], (2, 2, 128, 16))
@@ -56,8 +55,7 @@ def test_cp_decode_matches_reference():
     from repro.core import moba
     from repro.distributed import sharding as shmod
     from repro.distributed.moba_sp import moba_decode_cp
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = shmod.make_compat_mesh((2, 4), ("data", "model"))
     ks = jax.random.split(jax.random.PRNGKey(1), 3)
     q = jax.random.normal(ks[0], (2, 4, 1, 16))
     kc = jax.random.normal(ks[1], (2, 2, 256, 16))
@@ -80,8 +78,8 @@ def test_compressed_psum_all_shards_agree():
     from jax.sharding import PartitionSpec as P
     from jax.experimental.shard_map import shard_map
     from repro.optim import compression
-    mesh = jax.make_mesh((8,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.distributed.sharding import make_compat_mesh
+    mesh = make_compat_mesh((8,), ("data",))
     g = jax.random.normal(jax.random.PRNGKey(0), (8, 64))
 
     def body(g_local, r_local):
@@ -105,8 +103,8 @@ def test_pipeline_forward():
     _run("""
     import jax, jax.numpy as jnp, numpy as np
     from repro.distributed.pipeline import pipeline_forward
-    mesh = jax.make_mesh((4,), ("model",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.distributed.sharding import make_compat_mesh
+    mesh = make_compat_mesh((4,), ("model",))
     # 4 stages of y = tanh(x @ w_s)
     ws = jax.random.normal(jax.random.PRNGKey(0), (4, 16, 16)) * 0.5
     x = jax.random.normal(jax.random.PRNGKey(1), (8, 16))

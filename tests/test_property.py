@@ -1,4 +1,8 @@
 """Hypothesis property-based tests on system invariants."""
+import pytest
+
+pytest.importorskip("hypothesis")
+
 import hypothesis
 import hypothesis.strategies as st
 import jax
