@@ -1,0 +1,84 @@
+"""Paged-decode microbenchmark: XLA gather-and-densify vs fused Pallas.
+
+Runs one decode-attention step (routing + page gather + attend) against a
+populated page pool across context lengths × block sizes, for both the
+XLA path (`core.moba.moba_paged_decode_attention`) and the fused
+scalar-prefetched Pallas kernel (`kernels.moba_decode`).  As with
+``kernels_micro``, interpret-mode wall time is not TPU-meaningful; the
+recorded signal is (a) the two paths agree at benchmark shapes and (b)
+the analytic per-step HBM bytes each path moves (the XLA path
+materializes the (B,Hkv,G,1,k,ps,d) gather in HBM; the kernel streams
+pages once), which is the §Roofline memory-side input for decode.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import MoBAConfig
+from repro.core import moba as M
+from repro.kernels import moba_decode as MD
+
+
+def _build_pool(rng, b, n_ctx, hkv, d, ps):
+    npg = -(-n_ctx // ps)
+    num_pages = b * npg
+    kv_lens = np.full((b,), n_ctx, np.int32)
+    kv_lens[1:] = rng.integers(max(1, n_ctx // 4), n_ctx, size=b - 1)
+    perm = rng.permutation(num_pages)
+    table = np.full((b, npg), -1, np.int32)
+    pos = 0
+    for i in range(b):
+        need = -(-int(kv_lens[i]) // ps)
+        table[i, :need] = perm[pos:pos + need]
+        pos += need
+    from repro.serving import paged_cache as PC
+    cache = {"pages_k": jnp.zeros((num_pages, ps, hkv, d), jnp.float32),
+             "pages_v": jnp.zeros((num_pages, ps, hkv, d), jnp.float32),
+             "centroids": jnp.zeros((num_pages, hkv, d), jnp.float32)}
+    kc = jnp.asarray(rng.normal(size=(b, hkv, npg * ps, d)), jnp.float32)
+    vc = jnp.asarray(rng.normal(size=(b, hkv, npg * ps, d)), jnp.float32)
+    cache = PC.paged_append_prefill(cache, jnp.asarray(table),
+                                    jnp.asarray(kv_lens), kc, vc)
+    return cache, jnp.asarray(table), jnp.asarray(kv_lens)
+
+
+def bench():
+    rows = []
+    b, h, hkv, d = 4, 4, 2, 64
+    for (n_ctx, bs, tk) in [(512, 64, 4), (1024, 64, 4), (1024, 128, 4)]:
+        cfg = MoBAConfig(block_size=bs, top_k=tk)
+        rng = np.random.default_rng(n_ctx + bs)
+        cache, table, kv_lens = _build_pool(rng, b, n_ctx, hkv, d, bs)
+        q = jnp.asarray(rng.normal(size=(b, h, 1, d)), jnp.float32)
+        args = (q, cache["pages_k"], cache["pages_v"], cache["centroids"],
+                table, kv_lens, cfg)
+
+        xla_fn = jax.jit(lambda *a: M.moba_paged_decode_attention(*a, cfg))
+        pl_fn = jax.jit(lambda *a: MD.moba_paged_decode_pallas(*a, cfg))
+        o_x = xla_fn(*args[:-1]).block_until_ready()
+        o_p = pl_fn(*args[:-1]).block_until_ready()
+        err = float(jnp.abs(o_x - o_p).max())
+
+        for name, fn in (("xla", xla_fn), ("pallas", pl_fn)):
+            t0 = time.time()
+            for _ in range(3):
+                fn(*args[:-1]).block_until_ready()
+            us = (time.time() - t0) / 3 * 1e6
+            npg = table.shape[1]
+            # per-step HBM bytes (fp32): routing reads + page reads, plus
+            # the densified gather copy the XLA path writes and re-reads
+            route = b * npg * hkv * d * 4
+            pages = b * hkv * tk * bs * d * 4 * 2          # K and V
+            gather = pages * 2 * (h // hkv) if name == "xla" else 0
+            rows.append((f"paged_decode_{name}_N{n_ctx}_B{bs}", us,
+                         f"maxerr={err:.1e};hbm_bytes={route+pages+gather:.2e}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in bench():
+        print(r)

@@ -11,11 +11,11 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import (fig2_snr, fig3_efficiency, fig4_breakdown,
-                            kernels_micro, serve_throughput, table12_lm,
-                            table34_niah)
+    from benchmarks import (decode_micro, fig2_snr, fig3_efficiency,
+                            fig4_breakdown, kernels_micro,
+                            serve_throughput, table12_lm, table34_niah)
     mods = [fig2_snr, table12_lm, table34_niah, fig3_efficiency,
-            fig4_breakdown, kernels_micro, serve_throughput]
+            fig4_breakdown, kernels_micro, decode_micro, serve_throughput]
     rows = []
     failed = []
     for mod in mods:

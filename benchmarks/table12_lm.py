@@ -58,7 +58,7 @@ def run(steps: int = 120, batch: int = 8, seq: int = 256, seed: int = 0):
         params = T.init_lm(jax.random.PRNGKey(seed), cfg)
         opt = adamw.adamw_init(params)
         step_fn = jax.jit(S.make_train_step(cfg, tcfg,
-                                            moba_impl="sparse"),
+                                            backend="sparse"),
                           donate_argnums=(0, 1))
         losses = []
         for s in range(steps):

@@ -1,6 +1,11 @@
 """Serving example: batched prefill + greedy decode with MoBA KV routing.
 
     PYTHONPATH=src python examples/serve_decode.py --arch qwen3-0.6b
+
+Pick the attention implementation end-to-end with --attn-backend
+(reference | xla | flash | ..., see repro.core.backends):
+
+    PYTHONPATH=src python examples/serve_decode.py --attn-backend flash
 """
 import argparse
 import sys
@@ -16,9 +21,11 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--attn-backend", default="reference",
+                    help="registered attention backend (core.backends)")
     args = ap.parse_args()
     toks = serve(args.arch, batch=args.batch, prompt_len=args.prompt_len,
-                 gen=args.gen, smoke=True)
+                 gen=args.gen, smoke=True, attn_backend=args.attn_backend)
     print("generated token ids (greedy):")
     print(toks)
 

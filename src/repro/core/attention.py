@@ -11,7 +11,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import AttentionConfig
-from repro.core.moba import moba_attention, moba_decode_attention
 
 NEG_INF = -1e30
 
@@ -71,30 +70,31 @@ def dense_attention(q, k, v, causal: bool = True,
 def attention_dispatch(cfg: AttentionConfig, kind: str, q, k, v,
                        key_conv_weights=None,
                        q_positions=None, kv_len=None,
-                       moba_impl: str = "reference",
+                       backend: str = "reference",
                        causal: bool = True,
                        centroids=None) -> jax.Array:
-    """Route to dense / swa / moba according to the layer kind."""
-    if kind == "dense":
-        return dense_attention(q, k, v, causal=causal,
-                               q_positions=q_positions, kv_len=kv_len,
-                               scale=cfg.scale)
-    if kind == "swa":
-        return dense_attention(q, k, v, causal=causal,
-                               q_positions=q_positions, kv_len=kv_len,
-                               window=cfg.window, scale=cfg.scale)
+    """Route to a registered attention backend (``core.backends``) by
+    name + capability query — no per-implementation branches here.
+
+    ``kind`` ∈ {dense, swa, moba} selects the layer behaviour; ``backend``
+    selects the implementation.  Single-token calls against a cache
+    (``q`` length 1 with ``kv_len``) resolve the decode phase, everything
+    else the prefill phase.
+    """
+    from repro.core import backends as B
+
+    needs_kconv = kind == "moba" and key_conv_weights is not None
     if kind == "moba":
         assert cfg.moba is not None
-        if q.shape[2] == 1 and kv_len is not None:
-            if moba_impl.startswith("sp"):
-                from repro.distributed.moba_sp import moba_decode_cp
-                return moba_decode_cp(q, k, v, kv_len, cfg.moba,
-                                      scale=cfg.scale, centroids=centroids)
-            return moba_decode_attention(q, k, v, kv_len, cfg.moba,
-                                         scale=cfg.scale,
-                                         centroids=centroids)
-        return moba_attention(q, k, v, cfg.moba,
-                              key_conv_weights=key_conv_weights,
-                              impl=moba_impl, q_positions=q_positions,
-                              scale=cfg.scale)
-    raise ValueError(f"unknown attention kind {kind!r}")
+        if needs_kconv:
+            from repro.core.key_conv import apply_key_conv
+            k = apply_key_conv(key_conv_weights, k)
+    if q.shape[2] == 1 and kv_len is not None:
+        be = B.resolve(backend, kind=kind, phase="decode", cache="dense",
+                       key_conv=needs_kconv)
+        return be.decode(cfg, kind, q, k, v, kv_len, centroids=centroids,
+                         q_positions=q_positions)
+    be = B.resolve(backend, kind=kind, phase="prefill", cache="dense",
+                   key_conv=needs_kconv)
+    return be.prefill(cfg, kind, q, k, v, q_positions=q_positions,
+                      kv_len=kv_len, causal=causal)

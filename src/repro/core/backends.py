@@ -1,0 +1,352 @@
+"""Attention-backend registry: one seam for every attention implementation.
+
+Implementation choice used to be string-plumbed (``moba_impl`` / ``kind``
+branches) through ``core/attention.py``, ``core/moba.py``,
+``models/layers.py``, ``models/transformer.py``, ``launch/steps.py`` and
+``serving/engine.py``.  This module replaces those branches with a
+first-class registry (DESIGN.md §5): an :class:`AttentionBackend` declares
+its :class:`Capabilities` (attention kinds × prefill/decode phases ×
+dense/paged cache protocols × key-conv), and call sites select by *name +
+capability query* via :func:`resolve`.
+
+Registered backends:
+
+  reference     O(N²) masked-softmax oracle (``core/moba.py``)
+  xla           pure-XLA gather-and-densify (alias: ``sparse``)
+  xla_unrolled  same, unrolled tiles for dry-run FLOP accounting
+                (alias: ``sparse_unrolled``)
+  flash         Pallas kernels: FlashMoBA prefill + the fused
+                scalar-prefetched paged-decode kernel
+                (aliases: ``kernel``, ``pallas``)
+  sp            context/sequence-parallel MoBA (dense caches only)
+  sp_unrolled   same, unrolled (dry-run)
+
+Dense and sliding-window kinds share one implementation across backends
+(base-class methods); MoBA is where backends differ.  Paged *prefill* is
+deliberately shared too: the ragged reference path is the only
+implementation with per-sequence ``kv_len`` masking (DESIGN.md §4).
+
+Run ``python -m repro.core.backends`` to print the capability matrix —
+CI uses this as a registry-drift check (every backend must import and
+self-validate).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import AttentionConfig
+from repro.core.moba import (moba_attention_reference, moba_decode_attention,
+                             moba_paged_decode_attention)
+
+KINDS = ("dense", "swa", "moba")
+PHASES = ("prefill", "decode")
+CACHES = ("dense", "paged")
+
+
+class BackendCapabilityError(ValueError):
+    """Requested (backend, kind, phase, cache) combination is unsupported.
+
+    The message names the backends that *do* support the combination, so
+    callers (and users reading a traceback) can re-select."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Capabilities:
+    """What a backend can run.  ``caches`` uses 'dense' for both the
+    cache-free (training) and dense-KV-cache paths — they share math —
+    and 'paged' for the serving engine's block-table pools."""
+
+    kinds: Tuple[str, ...] = KINDS
+    phases: Tuple[str, ...] = PHASES
+    caches: Tuple[str, ...] = CACHES
+    key_conv: bool = True      # can consume key-conv'd keys (dense caches;
+    #                            paged key-conv is a cache-protocol gap)
+
+    def supports(self, kind: str, phase: str, cache: str = "dense",
+                 key_conv: bool = False) -> bool:
+        return (kind in self.kinds and phase in self.phases
+                and cache in self.caches
+                and (not key_conv or self.key_conv))
+
+
+class AttentionBackend:
+    """Protocol + shared implementations.
+
+    Subclasses override the ``moba_*`` hooks; dense/swa attention and the
+    paged-prefill path are shared (see module docstring).  ``**opts``
+    carries backend-specific hints (e.g. ``interpret`` for Pallas) that
+    other backends ignore.
+    """
+
+    name: str = ""
+    aliases: Tuple[str, ...] = ()
+    capabilities: Capabilities = Capabilities()
+
+    # ------------------------------------------------------------ helpers
+    @staticmethod
+    def _window(cfg: AttentionConfig, kind: str) -> int:
+        return cfg.window if kind == "swa" else 0
+
+    # ------------------------------------------- full-sequence / dense KV
+    def prefill(self, cfg: AttentionConfig, kind: str, q, k, v, *,
+                q_positions=None, kv_len=None, causal: bool = True,
+                **opts) -> jax.Array:
+        """Multi-token attention: training, prefill, or cached prefill
+        (``kv_len`` marks the valid prefix of a dense cache)."""
+        if kind == "moba":
+            return self.moba_prefill(cfg, q, k, v, q_positions=q_positions,
+                                     **opts)
+        from repro.core.attention import dense_attention
+        return dense_attention(q, k, v, causal=causal,
+                               q_positions=q_positions, kv_len=kv_len,
+                               window=self._window(cfg, kind),
+                               scale=cfg.scale)
+
+    def decode(self, cfg: AttentionConfig, kind: str, q, k, v, kv_len, *,
+               centroids=None, q_positions=None, **opts) -> jax.Array:
+        """Single-token attention against a dense cache of which the first
+        ``kv_len`` positions are valid."""
+        if kind == "moba":
+            return self.moba_decode(cfg, q, k, v, kv_len,
+                                    centroids=centroids, **opts)
+        from repro.core.attention import dense_attention
+        return dense_attention(q, k, v, causal=True,
+                               q_positions=q_positions, kv_len=kv_len,
+                               window=self._window(cfg, kind),
+                               scale=cfg.scale)
+
+    # --------------------------------------------------------- paged KV
+    def paged_prefill(self, cfg: AttentionConfig, kind: str, q, k, v, *,
+                      post_len, positions, **opts) -> jax.Array:
+        """Ragged fresh prefill (right-padded rows; ``post_len`` is the
+        per-sequence valid length after this step).  Shared across
+        backends: the reference path is the only implementation with
+        per-sequence kv_len masking, and routing a padded row is harmless
+        (DESIGN.md §4)."""
+        if kind == "moba":
+            return moba_attention_reference(
+                q, k, v, cfg.moba, q_positions=positions,
+                kv_len=post_len[:, None, None, None], scale=cfg.scale)
+        from repro.core.attention import dense_attention
+        return dense_attention(q, k, v, causal=True, q_positions=positions,
+                               kv_len=post_len,
+                               window=self._window(cfg, kind),
+                               scale=cfg.scale)
+
+    def paged_decode(self, cfg: AttentionConfig, kind: str, q, cache,
+                     block_table, kv_len, *, positions=None,
+                     **opts) -> jax.Array:
+        """Single-token attention against a paged pool through the block
+        table.  ``kv_len`` is the post-append per-sequence length.  SWA
+        gathers only the ~ceil(window/page_size)+1 pages inside the
+        window; dense necessarily densifies the table."""
+        from repro.serving import paged_cache as PC
+        if kind == "moba":
+            return self.moba_paged_decode(cfg, q, cache, block_table,
+                                          kv_len, **opts)
+        if kind == "swa":
+            return PC.swa_windowed_decode_attention(
+                q, cache, block_table, kv_len, cfg.window, scale=cfg.scale)
+        kf, vf = PC.paged_gather_kv(cache, block_table)
+        from repro.core.attention import dense_attention
+        return dense_attention(q, kf, vf, causal=True,
+                               q_positions=positions, kv_len=kv_len,
+                               scale=cfg.scale)
+
+    # ------------------------------------------------ MoBA-specific hooks
+    def moba_prefill(self, cfg: AttentionConfig, q, k, v, *,
+                     q_positions=None, **opts) -> jax.Array:
+        raise NotImplementedError(f"{self.name}: moba prefill")
+
+    def moba_decode(self, cfg: AttentionConfig, q, k, v, kv_len, *,
+                    centroids=None, **opts) -> jax.Array:
+        # block routing is implementation-independent at decode; the XLA
+        # gather path is the shared dense-cache implementation
+        return moba_decode_attention(q, k, v, kv_len, cfg.moba,
+                                     scale=cfg.scale, centroids=centroids)
+
+    def moba_paged_decode(self, cfg: AttentionConfig, q, cache, block_table,
+                          kv_len, **opts) -> jax.Array:
+        return moba_paged_decode_attention(
+            q, cache["pages_k"], cache["pages_v"], cache["centroids"],
+            block_table, kv_len, cfg.moba, scale=cfg.scale)
+
+
+# ---------------------------------------------------------------- backends
+class ReferenceBackend(AttentionBackend):
+    """O(N²) masked-softmax oracle — the correctness anchor."""
+
+    name = "reference"
+
+    def moba_prefill(self, cfg, q, k, v, *, q_positions=None, **opts):
+        return moba_attention_reference(q, k, v, cfg.moba,
+                                        q_positions=q_positions,
+                                        scale=cfg.scale)
+
+
+class XLABackend(AttentionBackend):
+    """Pure-XLA gather-and-densify (production fallback, differentiable)."""
+
+    name = "xla"
+    aliases = ("sparse",)
+    use_scan = True
+
+    def moba_prefill(self, cfg, q, k, v, *, q_positions=None, **opts):
+        from repro.kernels import ref
+        return ref.moba_sparse_xla(q, k, v, cfg.moba,
+                                   q_positions=q_positions, scale=cfg.scale,
+                                   use_scan=self.use_scan)
+
+
+class XLAUnrolledBackend(XLABackend):
+    """Unrolled tiles: XLA cost_analysis counts scan bodies once — the
+    dry-run needs this form for faithful FLOP accounting."""
+
+    name = "xla_unrolled"
+    aliases = ("sparse_unrolled",)
+    use_scan = False
+
+
+class FlashBackend(AttentionBackend):
+    """Pallas kernel path: FlashMoBA prefill (DESIGN.md §2) + the fused
+    scalar-prefetched paged-decode kernel (DESIGN.md §5).  Dense-cache
+    decode shares the XLA gather (routing math is identical; the kernel
+    pays off where the block table gives page-granular indirection)."""
+
+    name = "flash"
+    aliases = ("kernel", "pallas")
+    # interpret mode is the validated default everywhere: compiled
+    # lowering needs the decode kernel's (ps, d) blocks padded to TPU
+    # tiles first (ROADMAP "Compiled-mode tiling").  Flip per-call via
+    # opts or globally via `backends.get("flash").interpret = False`
+    # once that lands.
+    interpret: bool = True
+
+    def _interpret(self, opts) -> bool:
+        return bool(opts.get("interpret", self.interpret))
+
+    def moba_prefill(self, cfg, q, k, v, *, q_positions=None, **opts):
+        from repro.kernels import ops
+        return ops.flash_moba(q, k, v, cfg.moba, q_positions=q_positions,
+                              scale=cfg.scale,
+                              interpret=self._interpret(opts))
+
+    def moba_paged_decode(self, cfg, q, cache, block_table, kv_len, **opts):
+        from repro.kernels import moba_decode
+        return moba_decode.moba_paged_decode_pallas(
+            q, cache["pages_k"], cache["pages_v"], cache["centroids"],
+            block_table, kv_len, cfg.moba, scale=cfg.scale,
+            interpret=self._interpret(opts))
+
+
+class SPBackend(AttentionBackend):
+    """Sequence/context-parallel MoBA (distributed/moba_sp.py).  Dense
+    caches only: the paged pools are engine-local today (multi-host
+    serving is the ROADMAP item this registry is the seam for)."""
+
+    name = "sp"
+    capabilities = Capabilities(caches=("dense",))
+    use_scan = True
+
+    def moba_prefill(self, cfg, q, k, v, *, q_positions=None, **opts):
+        from repro.distributed.moba_sp import moba_attention_sp
+        return moba_attention_sp(q, k, v, cfg.moba, scale=cfg.scale,
+                                 q_positions=q_positions,
+                                 use_scan=self.use_scan)
+
+    def moba_decode(self, cfg, q, k, v, kv_len, *, centroids=None, **opts):
+        from repro.distributed.moba_sp import moba_decode_cp
+        return moba_decode_cp(q, k, v, kv_len, cfg.moba, scale=cfg.scale,
+                              centroids=centroids)
+
+
+class SPUnrolledBackend(SPBackend):
+    name = "sp_unrolled"
+    use_scan = False
+
+
+# ---------------------------------------------------------------- registry
+_REGISTRY: Dict[str, AttentionBackend] = {}
+_ALIASES: Dict[str, str] = {}
+
+
+def register(backend: AttentionBackend) -> AttentionBackend:
+    assert backend.name, "backend must set a name"
+    for key in (backend.name,) + backend.aliases:
+        taken = _ALIASES.get(key)
+        assert taken is None or taken == backend.name, (
+            f"backend name/alias {key!r} already registered for {taken!r}")
+    _REGISTRY[backend.name] = backend
+    for key in (backend.name,) + backend.aliases:
+        _ALIASES[key] = backend.name
+    return backend
+
+
+def names() -> Tuple[str, ...]:
+    """Canonical backend names (aliases excluded), registration order."""
+    return tuple(_REGISTRY)
+
+
+def get(name: str) -> AttentionBackend:
+    canonical = _ALIASES.get(name)
+    if canonical is None:
+        raise BackendCapabilityError(
+            f"unknown attention backend {name!r}; registered: "
+            f"{sorted(_ALIASES)}")
+    return _REGISTRY[canonical]
+
+
+def resolve(name: str, *, kind: str, phase: str, cache: str = "dense",
+            key_conv: bool = False) -> AttentionBackend:
+    """Name + capability query: the single entry point call sites use."""
+    be = get(name)
+    if not be.capabilities.supports(kind, phase, cache, key_conv):
+        able = [b.name for b in _REGISTRY.values()
+                if b.capabilities.supports(kind, phase, cache, key_conv)]
+        raise BackendCapabilityError(
+            f"backend {be.name!r} does not support kind={kind!r} "
+            f"phase={phase!r} cache={cache!r} key_conv={key_conv}; "
+            f"backends that do: {able}")
+    return be
+
+
+for _be in (ReferenceBackend(), XLABackend(), XLAUnrolledBackend(),
+            FlashBackend(), SPBackend(), SPUnrolledBackend()):
+    register(_be)
+
+
+def capability_matrix() -> str:
+    """Human-readable support table (also the CI registry-drift check)."""
+    lines = [f"{'backend':<14}{'aliases':<22}{'kinds':<18}"
+             f"{'phases':<18}{'caches':<14}key_conv"]
+    for be in _REGISTRY.values():
+        c = be.capabilities
+        lines.append(f"{be.name:<14}{','.join(be.aliases) or '-':<22}"
+                     f"{','.join(c.kinds):<18}{','.join(c.phases):<18}"
+                     f"{','.join(c.caches):<14}{c.key_conv}")
+    return "\n".join(lines)
+
+
+def _main() -> int:
+    # drift check: every backend constructs, every alias resolves to a
+    # registered backend, and at least one backend covers each
+    # (kind, phase, cache) cell that the serving engine needs.
+    assert names(), "registry is empty"
+    for alias, canonical in _ALIASES.items():
+        assert get(alias) is _REGISTRY[canonical], alias
+    for kind in KINDS:
+        for phase in PHASES:
+            for cache in CACHES:
+                able = [b for b in _REGISTRY.values()
+                        if b.capabilities.supports(kind, phase, cache)]
+                assert able, f"no backend covers {kind}/{phase}/{cache}"
+    print(capability_matrix())
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(_main())

@@ -2,7 +2,8 @@
 
 The reference path materializes the N×N mask and is the correctness oracle
 for the Pallas kernels (`repro.kernels`).  The public `moba_attention`
-dispatches between implementations.
+selects an implementation from the backend registry (`core.backends`,
+DESIGN.md §5).
 
 Shapes: q (B, H, Nq, d); k, v (B, Hkv, N, d) with H % Hkv == 0 (GQA —
 query heads grouped onto kv heads, paper App. C: no KV duplication, only
@@ -101,54 +102,54 @@ def moba_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                    interpret: bool = True) -> jax.Array:
     """Public MoBA attention entry point.
 
-    impl: 'reference' (O(N^2) oracle), 'kernel' (Pallas FlashMoBA path),
-          'sparse' (pure-XLA gather-and-densify, production fallback).
+    ``impl`` names a registered attention backend (``core.backends``):
+    'reference' (O(N^2) oracle), 'flash'/'kernel' (Pallas FlashMoBA),
+    'xla'/'sparse' (pure-XLA gather-and-densify), 'sp' (context
+    parallel), plus the ``_unrolled`` dry-run variants.  ``interpret``
+    only affects the Pallas backend.
     """
+    from repro.core import backends as B
+
     if key_conv_weights is not None:
         k = apply_key_conv(key_conv_weights, k)
-    if impl == "reference":
-        return moba_attention_reference(q, k, v, cfg, q_positions,
-                                        scale=scale)
-    if impl == "kernel":
-        from repro.kernels import ops
-        return ops.flash_moba(q, k, v, cfg, q_positions=q_positions,
-                              scale=scale, interpret=interpret)
-    if impl in ("sparse", "sparse_unrolled"):
-        from repro.kernels import ref
-        return ref.moba_sparse_xla(q, k, v, cfg, q_positions=q_positions,
-                                   scale=scale,
-                                   use_scan=(impl == "sparse"))
-    if impl in ("sp", "sp_unrolled"):
-        from repro.distributed.moba_sp import moba_attention_sp
-        return moba_attention_sp(q, k, v, cfg, scale=scale,
-                                 q_positions=q_positions,
-                                 use_scan=(impl == "sp"))
-    raise ValueError(f"unknown impl {impl!r}")
+    be = B.resolve(impl, kind="moba", phase="prefill", cache="dense",
+                   key_conv=key_conv_weights is not None)
+    acfg = _as_attention_config(cfg, scale)
+    return be.moba_prefill(acfg, q, k, v, q_positions=q_positions,
+                           interpret=interpret)
 
 
-def moba_paged_decode_attention(q: jax.Array, pages_k: jax.Array,
-                                pages_v: jax.Array, centroids: jax.Array,
-                                block_table: jax.Array, kv_len: jax.Array,
-                                cfg: MoBAConfig,
-                                scale: Optional[float] = None) -> jax.Array:
-    """Single-step decode against a paged cache: route on the per-page
-    centroid cache, then gather only the ``top_k`` selected pages through
-    the block table — O(N/B·d) routing reads + O(k·B·d) attention reads
-    per kv head, never touching the rest of the pool.
+def _as_attention_config(cfg: MoBAConfig, scale: Optional[float]):
+    """Wrap a bare MoBAConfig for the backend interface (which takes the
+    per-layer AttentionConfig so one signature covers dense/swa/moba)."""
+    from repro.configs.base import AttentionConfig
+    return AttentionConfig(kind="moba", moba=cfg, scale=scale)
+
+
+def moba_paged_route(q: jax.Array, centroids: jax.Array,
+                     block_table: jax.Array, kv_len: jax.Array,
+                     cfg: MoBAConfig,
+                     page_size: Optional[int] = None):
+    """Decode-time page routing on the per-page centroid cache.
+
+    Shared by the XLA gather path and the Pallas decode kernel wrapper so
+    both attend to exactly the same pages.  Matches the dense-cache
+    decode selection semantics: causal over pages, own (last) page
+    forced, per-sequence lengths, top-k padded with invalid slots when
+    the table is shorter than ``top_k``.
 
     q:           (B, H, 1, d)
-    pages_k/v:   (P, page_size, Hkv, d) shared pool (one layer slot)
-    centroids:   (P, Hkv, d) fp32 per-page centroid cache
+    centroids:   (P, Hkv, d) fp32 per-page centroid pool
     block_table: (B, npg) int32 physical page ids, -1 = unassigned
-    kv_len:      (B,) int32 valid lengths *including* the token appended
-                 this step (call after the cache append)
+    kv_len:      (B,) int32 post-append valid lengths
+
+    Returns (idx, sel_valid): logical page ids (B, Hkv, G, 1, top_k)
+    int32 (invalid slots 0) and their validity mask.
     """
     b, h, _, d = q.shape
-    _, ps, hkv, _ = pages_k.shape
+    hkv = centroids.shape[1]
     npg = block_table.shape[1]
-    if scale is None:
-        scale = 1.0 / (d ** 0.5)
-
+    ps = page_size or cfg.block_size  # one page == one routable block
     tbl = jnp.maximum(block_table, 0)
     cents = centroids[tbl].transpose(0, 2, 1, 3)             # (B,Hkv,npg,d)
     qg = _group_queries(q, hkv).astype(jnp.float32)          # (B,Hkv,G,1,d)
@@ -171,6 +172,35 @@ def moba_paged_decode_attention(q: jax.Array, pages_k: jax.Array,
                                 top_idx.dtype)], -1)
     sel_valid = top_s > NEG_INF / 2
     idx = jnp.where(sel_valid, top_idx, 0)                   # logical ids
+    return idx, sel_valid
+
+
+def moba_paged_decode_attention(q: jax.Array, pages_k: jax.Array,
+                                pages_v: jax.Array, centroids: jax.Array,
+                                block_table: jax.Array, kv_len: jax.Array,
+                                cfg: MoBAConfig,
+                                scale: Optional[float] = None) -> jax.Array:
+    """Single-step decode against a paged cache: route on the per-page
+    centroid cache, then gather only the ``top_k`` selected pages through
+    the block table — O(N/B·d) routing reads + O(k·B·d) attention reads
+    per kv head, never touching the rest of the pool.
+
+    q:           (B, H, 1, d)
+    pages_k/v:   (P, page_size, Hkv, d) shared pool (one layer slot)
+    centroids:   (P, Hkv, d) fp32 per-page centroid cache
+    block_table: (B, npg) int32 physical page ids, -1 = unassigned
+    kv_len:      (B,) int32 valid lengths *including* the token appended
+                 this step (call after the cache append)
+    """
+    b, h, _, d = q.shape
+    _, ps, hkv, _ = pages_k.shape
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+
+    idx, sel_valid = moba_paged_route(q, centroids, block_table, kv_len,
+                                      cfg, page_size=ps)
+    qg = _group_queries(q, hkv).astype(jnp.float32)          # (B,Hkv,G,1,d)
+    tbl = jnp.maximum(block_table, 0)
     phys = tbl[jnp.arange(b)[:, None, None, None, None], idx]
 
     # gather only the selected pages, per kv head: (B,Hkv,G,1,k,ps,d)

@@ -1,0 +1,160 @@
+"""Pallas kernel: fused paged MoBA decode — scalar-prefetched page gather.
+
+The serving engine's decode step used to gather the selected pages with
+XLA (`core.moba.moba_paged_decode_attention`): routing, a (B,Hkv,G,1,k,
+ps,d) gather materialized in HBM, then attention over the copy.  This
+kernel removes the materialized gather: the per-(sequence, head, slot)
+**physical page id** — block-table indirection resolved on the selected
+pages only — is scalar-prefetched and drives the K/V `BlockSpec`
+index_map (the DESIGN.md §2 trick applied to the block table, §5), so
+the MXU/VPU reads each selected page exactly once, streamed straight
+from the pool.  An online-softmax accumulator in scratch merges the
+``top_k`` pages, replacing the XLA lse-merge.
+
+Routing (centroid scores → forced own page → top-k) runs in the wrapper
+with `core.moba.moba_paged_route` — scalar-prefetch indices must exist
+before kernel launch — and touches only the (B·npg·Hkv·d) centroid
+gather.  Realized HBM traffic per decode step is therefore
+O(N/B·d) routing + O(k·B·d) attention per kv head, with no densified
+intermediate: the memory-bound decode shape the paper's small-block
+regime needs (FlashMoBA, Table "kernel"; PAPERS.md decode-bottleneck).
+
+Equivalence: same selection (shared router) and same softmax up to
+fp32 reduction order → matches the XLA path within 1e-3
+(tests/test_backends.py) on ragged batches.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.configs.base import MoBAConfig
+from repro.core.moba import moba_paged_route
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(phys_ref, base_ref, kvl_ref, q_ref, k_ref, v_ref,
+                   o_ref, o_acc, m_acc, l_acc, *,
+                   page_size: int, top_k: int, scale: float):
+    """Grid (B·H, top_k): one selected page per step, online softmax.
+
+    phys/base/kvl are scalar-prefetched: ``phys`` already drove the K/V
+    index_map; ``base`` is the page's logical token offset (sentinel
+    npg·ps for unselected slots, so every token masks out); ``kvl`` the
+    per-row valid length.
+    """
+    bh = pl.program_id(0)
+    kk = pl.program_id(1)
+
+    @pl.when(kk == 0)
+    def _init():
+        o_acc[...] = jnp.zeros_like(o_acc)
+        m_acc[0, 0] = NEG_INF
+        l_acc[0, 0] = 0.0
+
+    q = q_ref[...].astype(jnp.float32)                 # (1, d)
+    kb = k_ref[0, :, 0, :].astype(jnp.float32)         # (ps, d)
+    vb = v_ref[0, :, 0, :].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, kb, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (1, ps)
+    s = s * scale
+    pos = (base_ref[bh, kk]
+           + jax.lax.broadcasted_iota(jnp.int32, (1, page_size), 1))
+    mask = pos < kvl_ref[bh]
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_acc[0, 0]
+    m_cur = jnp.maximum(m_prev, jnp.max(s))
+    m_safe = jnp.maximum(m_cur, NEG_INF / 2)           # all-masked guard
+    alpha = jnp.exp(m_prev - m_safe)
+    p = jnp.exp(s - m_safe) * mask.astype(jnp.float32)
+    m_acc[0, 0] = m_cur
+    l_acc[0, 0] = l_acc[0, 0] * alpha + jnp.sum(p)
+    o_acc[...] = (o_acc[...] * alpha
+                  + jax.lax.dot_general(p, vb, (((1,), (0,)), ((), ())),
+                                        preferred_element_type=jnp.float32))
+
+    @pl.when(kk == top_k - 1)
+    def _emit():
+        l = l_acc[0, 0]
+        o_ref[...] = (o_acc[...]
+                      / jnp.where(l > 0, l, 1.0)).astype(o_ref.dtype)
+
+
+def moba_paged_decode_pallas(q: jax.Array, pages_k: jax.Array,
+                             pages_v: jax.Array, centroids: jax.Array,
+                             block_table: jax.Array, kv_len: jax.Array,
+                             cfg: MoBAConfig,
+                             scale: Optional[float] = None,
+                             interpret: bool = True) -> jax.Array:
+    """Drop-in for `core.moba.moba_paged_decode_attention` (same contract):
+
+    q:           (B, H, 1, d)
+    pages_k/v:   (P, page_size, Hkv, d) shared pool (one layer slot)
+    centroids:   (P, Hkv, d) fp32 per-page centroid cache
+    block_table: (B, npg) int32 physical page ids, -1 = unassigned
+    kv_len:      (B,) int32 post-append valid lengths
+
+    Routing in XLA on the centroid cache (shared `moba_paged_route`),
+    then the fused gather+attend kernel above.  Rows with ``kv_len`` 0
+    (inactive slots) return zeros.
+    """
+    b, h, _, d = q.shape
+    num_pages, ps, hkv, _ = pages_k.shape
+    npg = block_table.shape[1]
+    g = h // hkv
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+
+    idx, sel_valid = moba_paged_route(q, centroids, block_table, kv_len,
+                                      cfg, page_size=ps)
+    tk = idx.shape[-1]
+    tbl = jnp.maximum(block_table, 0)
+    phys = tbl[jnp.arange(b)[:, None, None, None, None], idx]
+    phys = jnp.clip(phys, 0, num_pages - 1)
+    # sentinel offset npg*ps puts every token of an unselected slot past
+    # kv_len (engine invariant: kv_len <= npg*ps), masking the whole page
+    base = jnp.where(sel_valid, idx * ps, npg * ps)
+
+    # flatten heads: h = hkv * g with the same (b, hkv, g) order the
+    # query layout uses, so bh -> kv head is (bh % h) // g
+    phys_f = phys[:, :, :, 0, :].reshape(b * h, tk).astype(jnp.int32)
+    base_f = base[:, :, :, 0, :].reshape(b * h, tk).astype(jnp.int32)
+    kvl_f = jnp.broadcast_to(kv_len[:, None], (b, h)).reshape(-1)
+    kvl_f = kvl_f.astype(jnp.int32)
+    q_f = q[:, :, 0, :].reshape(b * h, d)
+
+    def kv_index(bh, kk, phys_ref, base_ref, kvl_ref):
+        return (phys_ref[bh, kk], 0, (bh % h) // g, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(b * h, tk),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda bh, kk, *_: (bh, 0)),
+            pl.BlockSpec((1, ps, 1, d), kv_index),
+            pl.BlockSpec((1, ps, 1, d), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda bh, kk, *_: (bh, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, d), jnp.float32),
+            pltpu.SMEM((1, 1), jnp.float32),
+            pltpu.SMEM((1, 1), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(_decode_kernel, page_size=ps, top_k=tk,
+                               scale=float(scale))
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b * h, d), jnp.float32),
+        interpret=interpret,
+    )(phys_f, base_f, kvl_f, q_f, pages_k, pages_v)
+    return out.reshape(b, h, 1, d).astype(q.dtype)

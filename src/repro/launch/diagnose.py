@@ -14,9 +14,9 @@ from repro.launch.mesh import make_production_mesh      # noqa: E402
 
 
 def collective_breakdown(arch, shape, multi_pod=False, top=14,
-                         moba_impl="sp", **kw):
+                         backend="sp", **kw):
     mesh = make_production_mesh(multi_pod=multi_pod)
-    lowered, cfg = build_lowered(arch, shape, mesh, moba_impl=moba_impl,
+    lowered, cfg = build_lowered(arch, shape, mesh, backend=backend,
                                  unroll=False, **kw)
     compiled = lowered.compile()
     text = compiled.as_text()

@@ -61,7 +61,7 @@ def _sds(shape_struct, sh):
                                 sharding=sh)
 
 
-def build_lowered(arch: str, shape: str, mesh, *, moba_impl: str,
+def build_lowered(arch: str, shape: str, mesh, *, backend: str,
                   unroll: bool, block_size: int = 128, top_k: int = 8,
                   key_conv_width: int = 0, remat: bool = True,
                   scfg: ShardingConfig = None, accum_in_loss: bool = False):
@@ -84,7 +84,7 @@ def build_lowered(arch: str, shape: str, mesh, *, moba_impl: str,
             tcfg = TrainConfig(global_batch_size=batch, seq_len=seq,
                                microbatch=0 if unroll
                                else MICROBATCH.get(arch, 0))
-            step = S.make_train_step(cfg, tcfg, moba_impl=moba_impl,
+            step = S.make_train_step(cfg, tcfg, backend=backend,
                                      remat=remat, unroll=unroll,
                                      accum_in_loss=accum_in_loss)
             opt_shapes = jax.eval_shape(adamw.adamw_init, param_shapes)
@@ -109,12 +109,12 @@ def build_lowered(arch: str, shape: str, mesh, *, moba_impl: str,
         extras = {extra: _sds(specs[extra], bsh[extra])
                   for extra in ("cross_kv", "src_embeds") if extra in specs}
         if kind == "prefill":
-            step = S.make_prefill_step(cfg, moba_impl=moba_impl,
+            step = S.make_prefill_step(cfg, backend=backend,
                                        unroll=unroll)
             tok_in = jax.ShapeDtypeStruct((batch, seq), jnp.int32,
                                           sharding=bsh["tokens"])
         else:
-            step = S.make_decode_step(cfg, moba_impl=moba_impl,
+            step = S.make_decode_step(cfg, backend=backend,
                                       unroll=unroll)
             tok_in = jax.ShapeDtypeStruct((batch, 1), jnp.int32,
                                           sharding=bsh["token"])
@@ -137,7 +137,7 @@ def lower_cell(arch: str, shape: str, multi_pod: bool,
     # (deployable memory footprint; collectives counted with while-body ×
     # trip-count multiplication in roofline.collective_bytes)
     t0 = time.time()
-    lowered, cfg = build_lowered(arch, shape, mesh, moba_impl="sp",
+    lowered, cfg = build_lowered(arch, shape, mesh, backend="sp",
                                  unroll=False, **kw)
     compiled = lowered.compile()
     t_compile = time.time() - t0
@@ -146,7 +146,7 @@ def lower_cell(arch: str, shape: str, multi_pod: bool,
     flops_global = bytes_global = None
     if accounting:
         lowered2, _ = build_lowered(arch, shape, mesh,
-                                    moba_impl="sp_unrolled", unroll=True,
+                                    backend="sp_unrolled", unroll=True,
                                     **kw)
         ca2 = lowered2.cost_analysis()
         ca2 = ca2[0] if isinstance(ca2, list) else ca2

@@ -19,11 +19,11 @@ def measure(arch, shape, tag, scfg=None, microbatch=None, **kw):
     mesh = make_production_mesh()
     if microbatch is not None:
         DR.MICROBATCH[arch] = microbatch
-    lowered, cfg = DR.build_lowered(arch, shape, mesh, moba_impl="sp",
+    lowered, cfg = DR.build_lowered(arch, shape, mesh, backend="sp",
                                     unroll=False, scfg=scfg, **kw)
     compiled = lowered.compile()
     lowered2, _ = DR.build_lowered(arch, shape, mesh,
-                                   moba_impl="sp_unrolled", unroll=True,
+                                   backend="sp_unrolled", unroll=True,
                                    scfg=scfg, **kw)
     ca2 = lowered2.cost_analysis()
     ca2 = ca2[0] if isinstance(ca2, list) else ca2

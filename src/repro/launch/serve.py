@@ -30,28 +30,30 @@ def _round_up(n: int, m: int) -> int:
 
 
 def serve(arch: str, batch: int = 4, prompt_len: int = 64, gen: int = 32,
-          smoke: bool = True, moba_impl: str = "reference", seed: int = 0,
-          use_engine: str = "auto"):
+          smoke: bool = True, attn_backend: str = "reference",
+          seed: int = 0, use_engine: str = "auto"):
     """Decode ``gen`` greedy tokens for ``batch`` random prompts.
 
     Routes through the paged continuous-batching engine when the arch
     supports it (``use_engine='auto'``); otherwise — recurrent, enc-dec
     and cross-attention archs — through the legacy fixed-batch loop.
-    Returns int32 tokens of shape (batch, gen) either way.
+    ``attn_backend`` names a registered attention backend
+    (``core.backends``).  Returns int32 tokens of shape (batch, gen)
+    either way.
     """
     cfg = configs.get_smoke_config(arch) if smoke else configs.get_config(arch)
     if use_engine == "never" or (use_engine == "auto"
                                  and not engine_supported(cfg)):
         return serve_fixed(arch, batch=batch, prompt_len=prompt_len,
-                           gen=gen, smoke=smoke, moba_impl=moba_impl,
-                           seed=seed)
+                           gen=gen, smoke=smoke,
+                           attn_backend=attn_backend, seed=seed)
     params = T.init_lm(jax.random.PRNGKey(seed), cfg)
     rng = np.random.default_rng(seed)
     prompts = rng.integers(0, cfg.vocab_size, (batch, prompt_len),
                            dtype=np.int32)
     eng = Engine(cfg, params, EngineConfig(
         max_seqs=batch, max_seq_len=_round_up(prompt_len + gen, 16),
-        max_prefill_batch=min(batch, 4), moba_impl=moba_impl))
+        max_prefill_batch=min(batch, 4), attn_backend=attn_backend))
     reqs = [eng.submit(prompts[i], max_new_tokens=gen)
             for i in range(batch)]
     eng.run()
@@ -67,7 +69,7 @@ def serve(arch: str, batch: int = 4, prompt_len: int = 64, gen: int = 32,
 def serve_stream(arch: str, n_requests: int = 16, rate: float = 8.0,
                  prompt_range=(16, 96), gen_range=(8, 48),
                  max_seqs: int = 8, num_pages: int = 0,
-                 smoke: bool = True, moba_impl: str = "reference",
+                 smoke: bool = True, attn_backend: str = "reference",
                  seed: int = 0, realtime: bool = True) -> dict:
     """Continuous-batching scenario: Poisson arrivals (``rate`` req/s),
     mixed prompt/generation lengths.  Reports tokens/s and p50/p99
@@ -83,7 +85,7 @@ def serve_stream(arch: str, n_requests: int = 16, rate: float = 8.0,
     max_len = _round_up(prompt_range[1] + gen_range[1], 16)
     eng = Engine(cfg, params, EngineConfig(
         max_seqs=max_seqs, max_seq_len=max_len, num_pages=num_pages,
-        moba_impl=moba_impl))
+        attn_backend=attn_backend))
     t = 0.0
     for _ in range(n_requests):
         t += rng.exponential(1.0 / rate)
@@ -122,7 +124,7 @@ def serve_stream(arch: str, n_requests: int = 16, rate: float = 8.0,
 
 def serve_fixed(arch: str, batch: int = 4, prompt_len: int = 64,
                 gen: int = 32, smoke: bool = True,
-                moba_impl: str = "reference", seed: int = 0):
+                attn_backend: str = "reference", seed: int = 0):
     """Legacy synchronous loop: one dense-cache prefill + lockstep greedy
     decode.  Baseline for benchmarks and the fallback for recurrent /
     enc-dec / cross-attention archs the paged engine does not cover."""
@@ -144,9 +146,9 @@ def serve_fixed(arch: str, batch: int = 4, prompt_len: int = 64,
     max_len = prompt_len + gen
     caches = T.init_caches(cfg, batch, max_len,
                            dtype=jnp.dtype(cfg.dtype))
-    prefill_fn = jax.jit(S.make_prefill_step(cfg, moba_impl=moba_impl),
+    prefill_fn = jax.jit(S.make_prefill_step(cfg, backend=attn_backend),
                          donate_argnums=(2,))
-    decode_fn = jax.jit(S.make_decode_step(cfg, moba_impl=moba_impl),
+    decode_fn = jax.jit(S.make_decode_step(cfg, backend=attn_backend),
                         donate_argnums=(2,))
 
     t0 = time.time()
@@ -186,9 +188,18 @@ def main():
                     help="page pool size (0 = fully provisioned); "
                          "undersize it to exercise preemption")
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--moba-impl", default="reference")
+    ap.add_argument("--attn-backend", default=None,
+                    help="registered attention backend "
+                         "(reference | xla | flash | sp, see "
+                         "core.backends; default reference)")
+    ap.add_argument("--moba-impl", default=None,
+                    help="deprecated alias for --attn-backend")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    backend = args.attn_backend or args.moba_impl or "reference"
+    if args.moba_impl:
+        print("warning: --moba-impl is deprecated; use --attn-backend",
+              file=sys.stderr)
     try:
         if args.mode == "stream":
             ignored = [n for n, v in (("--batch", args.batch),
@@ -201,12 +212,12 @@ def main():
             serve_stream(args.arch, n_requests=args.requests,
                          rate=args.rate, max_seqs=args.max_seqs,
                          num_pages=args.num_pages, smoke=args.smoke,
-                         moba_impl=args.moba_impl, seed=args.seed)
+                         attn_backend=backend, seed=args.seed)
         else:
             serve(args.arch, batch=args.batch or 4,
                   prompt_len=args.prompt_len or 64, gen=args.gen or 32,
                   smoke=args.smoke,
-                  moba_impl=args.moba_impl, seed=args.seed,
+                  attn_backend=backend, seed=args.seed,
                   use_engine="never" if args.mode == "fixed" else "auto")
     except ServingError as e:  # unsupported arch / impossible sizing;
         # genuine internal errors keep their tracebacks

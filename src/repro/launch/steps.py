@@ -19,7 +19,7 @@ from repro.optim import adamw
 
 # ------------------------------------------------------------- step makers
 def make_train_step(cfg: ModelConfig, tcfg: TrainConfig,
-                    moba_impl: str = "sparse", remat: bool = True,
+                    backend: str = "sparse", remat: bool = True,
                     unroll: bool = False, accum_in_loss: bool = False):
     """``accum_in_loss``: gradient accumulation expressed INSIDE the loss
     (scan over rematted microbatch chunks) so the cross-data gradient
@@ -29,7 +29,7 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig,
 
     def train_step(params, opt_state, batch):
         def loss_fn(p):
-            return T.lm_loss(p, batch, cfg, moba_impl=moba_impl,
+            return T.lm_loss(p, batch, cfg, backend=backend,
                              remat=remat, unroll=unroll)
 
         if accum_in_loss and tcfg.microbatch and tcfg.microbatch > 1:
@@ -41,7 +41,7 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig,
             def accum_loss(p):
                 @jax.checkpoint
                 def body(carry, batch_i):
-                    l, _ = T.lm_loss(p, batch_i, cfg, moba_impl=moba_impl,
+                    l, _ = T.lm_loss(p, batch_i, cfg, backend=backend,
                                      remat=remat, unroll=unroll)
                     return carry + l / m, None
 
@@ -56,7 +56,7 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig,
 
             def micro(batch_i):
                 def lf(p):
-                    return T.lm_loss(p, batch_i, cfg, moba_impl=moba_impl,
+                    return T.lm_loss(p, batch_i, cfg, backend=backend,
                                      remat=remat, unroll=unroll)
                 return jax.value_and_grad(lf, has_aux=True)(params)
 
@@ -90,23 +90,23 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig,
     return train_step
 
 
-def make_prefill_step(cfg: ModelConfig, moba_impl: str = "sparse",
+def make_prefill_step(cfg: ModelConfig, backend: str = "sparse",
                       unroll: bool = False):
     def prefill_step(params, tokens, caches, cross_kv=None,
                      src_embeds=None):
         ck = cross_kv
         if cfg.num_encoder_layers and src_embeds is not None:
             ck = T.apply_encoder(params, src_embeds, cfg,
-                                 moba_impl=moba_impl, unroll=unroll)
+                                 backend=backend, unroll=unroll)
         logits, new_caches = T.prefill(params, tokens, cfg, caches,
-                                       moba_impl=moba_impl, cross_kv=ck,
+                                       backend=backend, cross_kv=ck,
                                        unroll=unroll)
         return logits[:, -1:], new_caches
 
     return prefill_step
 
 
-def make_decode_step(cfg: ModelConfig, moba_impl: str = "reference",
+def make_decode_step(cfg: ModelConfig, backend: str = "reference",
                      unroll: bool = False):
     def decode_step(params, token, caches, cross_kv=None, src_embeds=None):
         ck = cross_kv
@@ -114,9 +114,9 @@ def make_decode_step(cfg: ModelConfig, moba_impl: str = "reference",
             # encoder output is precomputed at prefill in real serving; the
             # stub keeps the decode cell self-contained.
             ck = T.apply_encoder(params, src_embeds, cfg,
-                                 moba_impl=moba_impl, unroll=unroll)
+                                 backend=backend, unroll=unroll)
         logits, new_caches = T.decode_step(params, token, cfg, caches,
-                                           moba_impl=moba_impl, cross_kv=ck,
+                                           backend=backend, cross_kv=ck,
                                            unroll=unroll)
         next_tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
         return next_tok, new_caches
@@ -124,7 +124,7 @@ def make_decode_step(cfg: ModelConfig, moba_impl: str = "reference",
     return decode_step
 
 
-def make_paged_prefill_step(cfg: ModelConfig, moba_impl: str = "reference"):
+def make_paged_prefill_step(cfg: ModelConfig, backend: str = "reference"):
     """Ragged prefill into a paged cache: tokens (B, L) right-padded with
     per-row valid length ``q_len``; rows with q_len == 0 are padding.
     Returns (first sampled token (B,), new caches)."""
@@ -134,7 +134,7 @@ def make_paged_prefill_step(cfg: ModelConfig, moba_impl: str = "reference"):
                       "kv_len": jnp.zeros_like(q_len),
                       "q_len": q_len, "active": active}
         logits, new_caches = T.prefill(params, tokens, cfg, caches,
-                                       moba_impl=moba_impl,
+                                       backend=backend,
                                        page_state=page_state)
         last = jnp.maximum(q_len - 1, 0)[:, None, None]      # (B,1,1)
         lg = jnp.take_along_axis(logits, last, axis=1)[:, 0]  # (B,V)
@@ -143,7 +143,7 @@ def make_paged_prefill_step(cfg: ModelConfig, moba_impl: str = "reference"):
     return prefill_step
 
 
-def make_paged_decode_step(cfg: ModelConfig, moba_impl: str = "reference"):
+def make_paged_decode_step(cfg: ModelConfig, backend: str = "reference"):
     """One continuous-batching decode step over all sequence slots:
     token (B,), per-slot pre-step lengths kv_len (B,), active mask (B,).
     Returns (next token (B,), new caches)."""
@@ -152,7 +152,7 @@ def make_paged_decode_step(cfg: ModelConfig, moba_impl: str = "reference"):
         page_state = {"block_table": block_table, "kv_len": kv_len,
                       "q_len": active.astype(jnp.int32), "active": active}
         logits, new_caches = T.decode_step(params, token[:, None], cfg,
-                                           caches, moba_impl=moba_impl,
+                                           caches, backend=backend,
                                            page_state=page_state)
         return (jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32),
                 new_caches)

@@ -69,7 +69,7 @@ def train(arch: str, steps: int = 50, batch: int = 8, seq: int = 512,
             start_step = extra.get("data_step", ck_step)
             print(f"[resume] restored step {ck_step} from {ckpt_dir}")
 
-    step_fn = jax.jit(S.make_train_step(cfg, tcfg, moba_impl=moba_impl,
+    step_fn = jax.jit(S.make_train_step(cfg, tcfg, backend=moba_impl,
                                         remat=remat),
                       donate_argnums=(0, 1))
 

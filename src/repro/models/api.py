@@ -69,13 +69,13 @@ def input_specs(cfg: ModelConfig, shape: str,
     return specs
 
 
-def make_forward(cfg: ModelConfig, moba_impl: str = "sparse"):
+def make_forward(cfg: ModelConfig, backend: str = "sparse"):
     def forward(params, tokens, cross_kv=None, src_embeds=None):
         ck = cross_kv
         if cfg.num_encoder_layers and src_embeds is not None:
             ck = T.apply_encoder(params, src_embeds, cfg,
-                                 moba_impl=moba_impl)
+                                 backend=backend)
         logits, aux, _ = T.lm_apply(params, tokens, cfg,
-                                    moba_impl=moba_impl, cross_kv=ck)
+                                    backend=backend, cross_kv=ck)
         return logits
     return forward

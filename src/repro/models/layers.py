@@ -17,11 +17,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core.attention import attention_dispatch, dense_attention
+from repro.core.attention import attention_dispatch
 from repro.core.key_conv import (apply_key_conv, apply_key_conv_decode,
                                  init_key_conv, key_conv_state_init)
-from repro.core.moba import (moba_attention_reference,
-                             moba_paged_decode_attention)
 from repro.distributed.sharding import constrain, tp_enabled
 
 
@@ -125,12 +123,16 @@ def _uses_rope(cfg: ModelConfig, kind: str) -> bool:
 def apply_attention(p: dict, x: jax.Array, cfg: ModelConfig, kind: str,
                     *, positions: Optional[jax.Array] = None,
                     cache: Optional[dict] = None,
-                    moba_impl: str = "reference",
+                    backend: str = "reference",
                     cross_kv: Optional[jax.Array] = None,
                     causal: bool = True,
                     page_state: Optional[dict] = None
                     ) -> Tuple[jax.Array, Optional[dict]]:
     """Self (or cross) attention layer.  Returns (out, updated_cache).
+
+    ``backend`` names a registered attention backend (``core.backends``);
+    every implementation choice below routes through the registry's
+    capability query rather than string branches.
 
     The cache protocol admits two interchangeable cache kinds behind this
     one interface: the dense per-sequence cache from ``init_cache`` and
@@ -175,10 +177,13 @@ def apply_attention(p: dict, x: jax.Array, cfg: ModelConfig, kind: str,
     new_cache = None
     if cache is not None and "pages_k" in cache and cross_kv is None:
         if conv_w is not None:
-            raise NotImplementedError(
-                "key-conv with paged caches is an open item (DESIGN.md §4)")
+            from repro.serving.scheduler import UnsupportedFeatureError
+            raise UnsupportedFeatureError(
+                "key_conv",
+                "key-conv with paged caches is an open item (DESIGN.md "
+                "§4); the engine rejects such configs at admission")
         o, new_cache = _paged_attend(q, k, v, cache, page_state, cfg,
-                                     kind, positions)
+                                     kind, positions, backend)
         o = o.transpose(0, 2, 1, 3).reshape(b, n, h * dh)
         out = o @ wcast(p["wo"], dt)
         return out, new_cache
@@ -226,7 +231,7 @@ def apply_attention(p: dict, x: jax.Array, cfg: ModelConfig, kind: str,
     o = attention_dispatch(a, "dense" if kind == "cross" else kind,
                            q, k, v, key_conv_weights=None,
                            q_positions=positions,
-                           kv_len=kv_len, moba_impl=moba_impl,
+                           kv_len=kv_len, backend=backend,
                            causal=causal and cross_kv is None,
                            centroids=(new_cache or {}).get("centroids")
                            if kind == "moba" else None)
@@ -240,11 +245,14 @@ def apply_attention(p: dict, x: jax.Array, cfg: ModelConfig, kind: str,
 
 
 def _paged_attend(q, k, v, cache, page_state, cfg: ModelConfig, kind: str,
-                  positions):
+                  positions, backend: str):
     """Paged-cache attention: append new K/V through the block table, then
-    attend.  MoBA decode routes on the per-page centroid cache and reads
-    only the selected pages; dense/swa decode densifies via the table.
-    Prefill is ragged (right-padded rows of ``q_len`` valid tokens)."""
+    attend via the backend resolved for (kind, phase, paged).  MoBA decode
+    routes on the per-page centroid cache and reads only the selected
+    pages; swa decode gathers only the window's pages; dense decode
+    densifies via the table.  Prefill is ragged (right-padded rows of
+    ``q_len`` valid tokens) and backend-shared (see core.backends)."""
+    from repro.core import backends as B
     from repro.serving import paged_cache as PC
 
     assert page_state is not None, "paged cache requires page_state"
@@ -254,35 +262,17 @@ def _paged_attend(q, k, v, cache, page_state, cfg: ModelConfig, kind: str,
     kvl = page_state["kv_len"]
     q_len = page_state["q_len"]
     post_len = kvl + q_len                     # lengths after this step
-    window = a.window if kind == "swa" else 0
     if n == 1:                                 # decode: one token per seq
+        be = B.resolve(backend, kind=kind, phase="decode", cache="paged")
         new_cache = PC.paged_append_decode(cache, bt, kvl,
                                            page_state["active"], k, v)
-        if kind == "moba":
-            o = moba_paged_decode_attention(
-                q, new_cache["pages_k"], new_cache["pages_v"],
-                new_cache["centroids"], bt, post_len, a.moba,
-                scale=a.scale)
-        else:
-            # densifies the full table; a window-bounded gather for swa
-            # is an open item (DESIGN.md §4)
-            kf, vf = PC.paged_gather_kv(new_cache, bt)
-            o = dense_attention(q, kf, vf, causal=True,
-                                q_positions=positions, kv_len=post_len,
-                                window=window, scale=a.scale)
+        o = be.paged_decode(a, kind, q, new_cache, bt, post_len,
+                            positions=positions)
     else:                                      # ragged fresh prefill
+        be = B.resolve(backend, kind=kind, phase="prefill", cache="paged")
         new_cache = PC.paged_append_prefill(cache, bt, q_len, k, v)
-        if kind == "moba":
-            # reference path: the only impl with per-sequence kv_len
-            # masking; routing a padded row is harmless (see DESIGN.md §4)
-            o = moba_attention_reference(
-                q, k, v, a.moba, q_positions=jnp.arange(n),
-                kv_len=post_len[:, None, None, None], scale=a.scale)
-        else:
-            o = dense_attention(q, k, v, causal=True,
-                                q_positions=jnp.arange(n),
-                                kv_len=post_len, window=window,
-                                scale=a.scale)
+        o = be.paged_prefill(a, kind, q, k, v, post_len=post_len,
+                             positions=jnp.arange(n))
     return o, new_cache
 
 

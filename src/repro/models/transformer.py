@@ -58,7 +58,7 @@ def init_block(key, cfg: ModelConfig, kind: str) -> dict:
 
 
 def apply_block(p: dict, x: jax.Array, cfg: ModelConfig, kind: str, *,
-                positions=None, cache=None, moba_impl="reference",
+                positions=None, cache=None, backend="reference",
                 cross_kv=None, causal=True, page_state=None):
     """Pre-LN block. Returns (x, aux_loss, new_cache)."""
     aux = jnp.zeros((), jnp.float32)
@@ -79,7 +79,7 @@ def apply_block(p: dict, x: jax.Array, cfg: ModelConfig, kind: str, *,
         h, new_cache = L.apply_attention(
             p["attn"], L.rms_norm(x, p["norm1"], cfg.rms_norm_eps), cfg,
             attn_kind, positions=positions, cache=self_cache,
-            moba_impl=moba_impl, causal=causal, page_state=page_state)
+            backend=backend, causal=causal, page_state=page_state)
     x = x + h
     if kind == "decoder":
         h, _ = L.apply_attention(
@@ -133,7 +133,7 @@ def init_lm(key, cfg: ModelConfig) -> dict:
 
 
 def apply_encoder(params, src_embeds: jax.Array, cfg: ModelConfig,
-                  moba_impl="reference", unroll: bool = False) -> jax.Array:
+                  backend="reference", unroll: bool = False) -> jax.Array:
     """Bidirectional encoder over stub frontend embeddings (B, T, d)."""
     enc_kind = ("moba" if (cfg.attention.kind == "moba"
                            and cfg.encoder_bidirectional_moba) else "dense")
@@ -141,7 +141,7 @@ def apply_encoder(params, src_embeds: jax.Array, cfg: ModelConfig,
 
     def body(x, p):
         x, _, _ = apply_block(p, x, cfg, enc_kind, causal=False,
-                              moba_impl=moba_impl)
+                              backend=backend)
         return x, None
 
     if unroll:
@@ -154,7 +154,7 @@ def apply_encoder(params, src_embeds: jax.Array, cfg: ModelConfig,
 
 
 def lm_apply(params, tokens: jax.Array, cfg: ModelConfig, *,
-             caches: Optional[dict] = None, moba_impl: str = "reference",
+             caches: Optional[dict] = None, backend: str = "reference",
              cross_kv: Optional[jax.Array] = None,
              positions: Optional[jax.Array] = None,
              remat: bool = False, unroll: bool = False,
@@ -184,7 +184,7 @@ def lm_apply(params, tokens: jax.Array, cfg: ModelConfig, *,
             cache_i = None if gcaches is None else gcaches.get(f"slot_{i}")
             x, a, nc = apply_block(p_i, x, cfg, kind,
                                    positions=positions, cache=cache_i,
-                                   moba_impl=moba_impl,
+                                   backend=backend,
                                    page_state=page_state,
                                    cross_kv=cross_kv
                                    if kind in ("cross", "decoder")
@@ -224,7 +224,7 @@ def lm_apply(params, tokens: jax.Array, cfg: ModelConfig, *,
 
 
 def lm_loss(params, batch: dict, cfg: ModelConfig,
-            moba_impl: str = "reference", remat: bool = False,
+            backend: str = "reference", remat: bool = False,
             unroll: bool = False):
     """batch: {'tokens': (B, S+1) int32} → mean next-token CE + MoE aux."""
     tokens = batch["tokens"]
@@ -232,8 +232,8 @@ def lm_loss(params, batch: dict, cfg: ModelConfig,
     cross_kv = batch.get("cross_kv")
     if cfg.num_encoder_layers and "src_embeds" in batch:
         cross_kv = apply_encoder(params, batch["src_embeds"], cfg,
-                                 moba_impl=moba_impl, unroll=unroll)
-    logits, aux, _ = lm_apply(params, inp, cfg, moba_impl=moba_impl,
+                                 backend=backend, unroll=unroll)
+    logits, aux, _ = lm_apply(params, inp, cfg, backend=backend,
                               cross_kv=cross_kv, remat=remat,
                               unroll=unroll)
     # memory-frugal CE: logsumexp + target gather — never materializes an
@@ -302,17 +302,17 @@ def init_paged_caches(cfg: ModelConfig, num_pages: int, page_size: int,
 
 
 def prefill(params, tokens: jax.Array, cfg: ModelConfig, caches,
-            moba_impl="reference", cross_kv=None, unroll: bool = False,
+            backend="reference", cross_kv=None, unroll: bool = False,
             page_state=None):
     logits, aux, new_caches = lm_apply(
-        params, tokens, cfg, caches=caches, moba_impl=moba_impl,
+        params, tokens, cfg, caches=caches, backend=backend,
         cross_kv=cross_kv, unroll=unroll, page_state=page_state,
         positions=jnp.arange(tokens.shape[1]))
     return logits, new_caches
 
 
 def decode_step(params, token: jax.Array, cfg: ModelConfig, caches,
-                moba_impl="reference", cross_kv=None, unroll: bool = False,
+                backend="reference", cross_kv=None, unroll: bool = False,
                 page_state=None):
     """token (B, 1) against caches; returns (logits (B,1,V), new_caches).
 
@@ -323,7 +323,7 @@ def decode_step(params, token: jax.Array, cfg: ModelConfig, caches,
     else:
         pos = _cache_len(caches, cfg) + jnp.arange(1)
     logits, _, new_caches = lm_apply(
-        params, token, cfg, caches=caches, moba_impl=moba_impl,
+        params, token, cfg, caches=caches, backend=backend,
         cross_kv=cross_kv, positions=pos, unroll=unroll,
         page_state=page_state)
     return logits, new_caches

@@ -21,25 +21,43 @@ from __future__ import annotations
 import dataclasses
 import math
 import time
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core import backends as B
 from repro.launch import steps as S
 from repro.models import transformer as T
 from repro.serving import paged_cache as PC
-from repro.serving.scheduler import Request, Scheduler, ServingError
+from repro.serving.scheduler import (Request, Scheduler,
+                                     UnsupportedFeatureError)
+
+
+def unsupported_reason(cfg: ModelConfig) -> Optional[Tuple[str, str]]:
+    """(feature, reason) the paged engine cannot serve, or None."""
+    bad = [k for k in cfg.layer_pattern
+           if k not in ("dense", "swa", "moba", "shared_attn")]
+    if bad:
+        return ("layer_pattern",
+                f"slots {bad} have no paging granularity; use the "
+                f"fixed-batch loop")
+    a = cfg.attention
+    if a.moba is not None and a.moba.key_conv_width:
+        return ("key_conv",
+                "key-conv caches need a per-slot raw-key ring buffer "
+                "(DESIGN.md §4 open item); use the fixed-batch loop")
+    if cfg.family not in ("dense", "moe"):
+        return ("family",
+                f"family {cfg.family!r} is not engine-supported; use "
+                f"the fixed-batch loop")
+    return None
 
 
 def engine_supported(cfg: ModelConfig) -> bool:
-    attn_only = all(k in ("dense", "swa", "moba", "shared_attn")
-                    for k in cfg.layer_pattern)
-    a = cfg.attention
-    no_kconv = a.moba is None or not a.moba.key_conv_width
-    return attn_only and no_kconv and cfg.family in ("dense", "moe")
+    return unsupported_reason(cfg) is None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,20 +67,38 @@ class EngineConfig:
     num_pages: int = 0                 # 0 → max_seqs * pages_per_seq
     page_size: int = 0                 # 0 → MoBA block size (or 16)
     max_prefill_batch: int = 4
-    moba_impl: str = "reference"
+    attn_backend: str = ""             # registered backend (core.backends);
+    #                                    "" → moba_impl or "reference"
+    moba_impl: str = ""                # deprecated alias for attn_backend
 
 
 class Engine:
     def __init__(self, cfg: ModelConfig, params, ecfg: EngineConfig = None,
                  ):
-        if not engine_supported(cfg):
-            raise ServingError(
-                f"arch {cfg.name!r} (pattern {cfg.layer_pattern}, family "
-                f"{cfg.family}) is not engine-supported; use the "
-                f"fixed-batch loop")
+        reason = unsupported_reason(cfg)
+        if reason is not None:
+            raise UnsupportedFeatureError(*reason)
         self.cfg = cfg
         self.params = params
         self.ecfg = ecfg = ecfg or EngineConfig()
+        # same precedence as the serve.py CLI shim: an explicitly set
+        # attn_backend always wins; the deprecated alias applies only
+        # when the new field is unset
+        self.attn_backend = (ecfg.attn_backend or ecfg.moba_impl
+                             or "reference")
+        # admission-time capability query: every layer kind must resolve
+        # for both paged phases, or the request stream would die inside a
+        # jitted step
+        kinds = {"dense" if k == "shared_attn" else k
+                 for k in cfg.layer_pattern}
+        for kind in sorted(kinds):
+            for phase in ("prefill", "decode"):
+                try:
+                    B.resolve(self.attn_backend, kind=kind, phase=phase,
+                              cache="paged")
+                except B.BackendCapabilityError as e:
+                    raise UnsupportedFeatureError("attn_backend",
+                                                  str(e)) from e
         self.page_size = ecfg.page_size or PC.resolve_page_size(cfg)
         self.pages_per_seq = math.ceil(ecfg.max_seq_len / self.page_size)
         self.num_pages = (ecfg.num_pages
@@ -75,10 +111,10 @@ class Engine:
             max_seqs=ecfg.max_seqs, max_pages_per_seq=self.pages_per_seq,
             max_prefill_batch=ecfg.max_prefill_batch)
         self._prefill = jax.jit(
-            S.make_paged_prefill_step(cfg, moba_impl=ecfg.moba_impl),
+            S.make_paged_prefill_step(cfg, backend=self.attn_backend),
             donate_argnums=(2,))
         self._decode = jax.jit(
-            S.make_paged_decode_step(cfg, moba_impl=ecfg.moba_impl),
+            S.make_paged_decode_step(cfg, backend=self.attn_backend),
             donate_argnums=(2,))
         self._cur_tok = np.zeros((ecfg.max_seqs,), np.int32)
         self._next_rid = 0

@@ -152,6 +152,51 @@ def paged_gather_kv(cache: Dict, block_table: jax.Array
     return densify(pk), densify(pv)
 
 
+def swa_windowed_decode_attention(q: jax.Array, cache: Dict,
+                                  block_table: jax.Array,
+                                  kv_len: jax.Array, window: int,
+                                  scale: Optional[float] = None
+                                  ) -> jax.Array:
+    """Decode-step sliding-window attention that gathers only the
+    ``ceil(window/page_size)+1`` pages that can intersect the window
+    (closing the DESIGN.md §4 open item): the per-step copy is bounded
+    by O(window), not O(max_seq_len) densify-then-mask.
+
+    q (B, H, 1, d); ``kv_len`` post-append lengths, so the query sits at
+    position ``kv_len - 1`` and attends keys in ``(qpos-window, qpos]``.
+    Numerics match the densified path exactly (same masked softmax over
+    the same key set).  Rows with ``kv_len`` 0 return zeros.
+    """
+    from repro.core.attention import (NEG_INF, _apply_and_project,
+                                      _grouped_scores)
+
+    pk, pv = cache["pages_k"], cache["pages_v"]
+    num_pages, ps, hkv, dh = pk.shape
+    b, npg = block_table.shape
+    if scale is None:
+        scale = 1.0 / (q.shape[-1] ** 0.5)
+    wpg = min(npg, -(-window // ps) + 1)
+    qpos = kv_len - 1                                        # (B,)
+    start = jnp.maximum(qpos - window + 1, 0) // ps          # first page
+    logical = start[:, None] + jnp.arange(wpg)[None, :]      # (B,wpg)
+    phys = jnp.take_along_axis(block_table,
+                               jnp.minimum(logical, npg - 1), axis=1)
+    ok = (logical < npg) & (phys >= 0)                       # (B,wpg)
+    tbl = jnp.maximum(phys, 0)
+    kg = pk[tbl].transpose(0, 3, 1, 2, 4).reshape(b, hkv, wpg * ps, dh)
+    vg = pv[tbl].transpose(0, 3, 1, 2, 4).reshape(b, hkv, wpg * ps, dh)
+    kpos = (logical[:, :, None] * ps
+            + jnp.arange(ps)[None, None, :]).reshape(b, wpg * ps)
+    mask = (jnp.repeat(ok, ps, axis=1)
+            & (kpos <= qpos[:, None])
+            & (qpos[:, None] - kpos < window))               # (B,wpg*ps)
+    s = _grouped_scores(q, kg, scale)                        # (B,H,1,n)
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(mask.any(-1)[:, None, None, None], p, 0.0)
+    return _apply_and_project(p, vg, q.dtype)
+
+
 def gather_seq_centroids(cache: Dict, block_table: jax.Array) -> jax.Array:
     """Per-sequence centroid view (B, hkv, npg, dh) in logical order."""
     cents = cache["centroids"][jnp.maximum(block_table, 0)]  # (B,npg,h,d)

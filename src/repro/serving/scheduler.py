@@ -31,6 +31,19 @@ class ServingError(ValueError):
     entry points can report it cleanly without eating tracebacks."""
 
 
+class UnsupportedFeatureError(ServingError):
+    """A config/request needs a feature this engine build lacks (key-conv
+    caches, an attention backend without paged support, a non-attention
+    layer pattern).  Raised at admission time — engine construction or
+    request submit — so a bad request fails fast with a structured
+    (feature, reason) instead of crashing inside a jitted step."""
+
+    def __init__(self, feature: str, reason: str):
+        self.feature = feature
+        self.reason = reason
+        super().__init__(f"unsupported feature {feature!r}: {reason}")
+
+
 @dataclasses.dataclass
 class Request:
     rid: int
