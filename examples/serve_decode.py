@@ -23,9 +23,13 @@ def main():
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--attn-backend", default="reference",
                     help="registered attention backend (core.backends)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked prefill token budget per engine step "
+                         "(0 = whole-prompt prefill)")
     args = ap.parse_args()
     toks = serve(args.arch, batch=args.batch, prompt_len=args.prompt_len,
-                 gen=args.gen, smoke=True, attn_backend=args.attn_backend)
+                 gen=args.gen, smoke=True, attn_backend=args.attn_backend,
+                 prefill_chunk=args.prefill_chunk)
     print("generated token ids (greedy):")
     print(toks)
 

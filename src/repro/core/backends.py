@@ -40,7 +40,8 @@ import jax.numpy as jnp
 
 from repro.configs.base import AttentionConfig
 from repro.core.moba import (moba_attention_reference, moba_decode_attention,
-                             moba_paged_decode_attention)
+                             moba_paged_decode_attention,
+                             moba_paged_prefill_attention)
 
 KINDS = ("dense", "swa", "moba")
 PHASES = ("prefill", "decode")
@@ -58,19 +59,25 @@ class BackendCapabilityError(ValueError):
 class Capabilities:
     """What a backend can run.  ``caches`` uses 'dense' for both the
     cache-free (training) and dense-KV-cache paths — they share math —
-    and 'paged' for the serving engine's block-table pools."""
+    and 'paged' for the serving engine's block-table pools.
+
+    ``key_conv`` lists the cache protocols under which the backend can
+    consume key-conv'd keys.  The conv itself happens in
+    ``models/layers.py`` before keys reach any backend — paged caches
+    additionally need the engine's per-slot raw-key ring buffer
+    (DESIGN.md §4), so a backend declares the protocols whose conv state
+    plumbing it is validated against rather than a single bool."""
 
     kinds: Tuple[str, ...] = KINDS
     phases: Tuple[str, ...] = PHASES
     caches: Tuple[str, ...] = CACHES
-    key_conv: bool = True      # can consume key-conv'd keys (dense caches;
-    #                            paged key-conv is a cache-protocol gap)
+    key_conv: Tuple[str, ...] = CACHES
 
     def supports(self, kind: str, phase: str, cache: str = "dense",
                  key_conv: bool = False) -> bool:
         return (kind in self.kinds and phase in self.phases
                 and cache in self.caches
-                and (not key_conv or self.key_conv))
+                and (not key_conv or cache in self.key_conv))
 
 
 class AttentionBackend:
@@ -134,6 +141,33 @@ class AttentionBackend:
         from repro.core.attention import dense_attention
         return dense_attention(q, k, v, causal=True, q_positions=positions,
                                kv_len=post_len,
+                               window=self._window(cfg, kind),
+                               scale=cfg.scale)
+
+    def paged_chunk_prefill(self, cfg: AttentionConfig, kind: str, q, cache,
+                            block_table, kv_len, q_len,
+                            **opts) -> jax.Array:
+        """Chunked prefill: multi-token attention for a ragged chunk whose
+        K/V (and every earlier chunk's) are already appended to ``cache``.
+        ``kv_len`` is the per-sequence pre-chunk length, ``q_len`` the
+        chunk's valid tokens, so query i,j sits at position
+        ``kv_len[i] + j``.  Shared across backends like
+        :meth:`paged_prefill`: MoBA routes the chunk's queries on the
+        per-page centroid cache (bitwise the same page selection as
+        one-shot prefill — complete pages have identical centroids and
+        partial pages are only ever force-included, DESIGN.md §6) and the
+        dense/swa kinds densify through the block table."""
+        from repro.serving import paged_cache as PC
+        if kind == "moba":
+            return moba_paged_prefill_attention(
+                q, cache["pages_k"], cache["pages_v"], cache["centroids"],
+                block_table, kv_len, q_len, cfg.moba, scale=cfg.scale)
+        kf, vf = PC.paged_gather_kv(cache, block_table)
+        from repro.core.attention import dense_attention
+        return dense_attention(q, kf, vf, causal=True,
+                               q_positions=kv_len[:, None]
+                               + jnp.arange(q.shape[2]),
+                               kv_len=kv_len + q_len,
                                window=self._window(cfg, kind),
                                scale=cfg.scale)
 
@@ -249,7 +283,7 @@ class SPBackend(AttentionBackend):
     serving is the ROADMAP item this registry is the seam for)."""
 
     name = "sp"
-    capabilities = Capabilities(caches=("dense",))
+    capabilities = Capabilities(caches=("dense",), key_conv=("dense",))
     use_scan = True
 
     def moba_prefill(self, cfg, q, k, v, *, q_positions=None, **opts):
@@ -327,11 +361,34 @@ def capability_matrix() -> str:
         c = be.capabilities
         lines.append(f"{be.name:<14}{','.join(be.aliases) or '-':<22}"
                      f"{','.join(c.kinds):<18}{','.join(c.phases):<18}"
-                     f"{','.join(c.caches):<14}{c.key_conv}")
+                     f"{','.join(c.caches):<14}{','.join(c.key_conv)}")
     return "\n".join(lines)
 
 
-def _main() -> int:
+_DOCS_BEGIN = "<!-- capability-matrix:begin (generated) -->"
+_DOCS_END = "<!-- capability-matrix:end -->"
+
+
+def sync_docs(path: str) -> bool:
+    """Rewrite the generated capability-matrix block of ``path`` (between
+    the begin/end markers).  Returns True when the file changed — CI runs
+    this and fails on a dirty diff, so docs/backends.md can never drift
+    from the registry."""
+    with open(path, encoding="utf-8") as f:
+        text = f.read()
+    b, e = text.index(_DOCS_BEGIN), text.index(_DOCS_END)
+    block = (f"{_DOCS_BEGIN}\n```\n{capability_matrix()}\n```\n")
+    new = text[:b] + block + text[e:]
+    if new == text:
+        return False
+    with open(path, "w", encoding="utf-8") as f:
+        f.write(new)
+    return True
+
+
+def _main(argv=None) -> int:
+    import sys
+    argv = sys.argv[1:] if argv is None else argv
     # drift check: every backend constructs, every alias resolves to a
     # registered backend, and at least one backend covers each
     # (kind, phase, cache) cell that the serving engine needs.
@@ -344,6 +401,11 @@ def _main() -> int:
                 able = [b for b in _REGISTRY.values()
                         if b.capabilities.supports(kind, phase, cache)]
                 assert able, f"no backend covers {kind}/{phase}/{cache}"
+    if argv and argv[0] == "--sync-docs":
+        path = argv[1] if len(argv) > 1 else "docs/backends.md"
+        changed = sync_docs(path)
+        print(f"{path}: {'updated' if changed else 'up to date'}")
+        return 0
     print(capability_matrix())
     return 0
 

@@ -44,10 +44,54 @@ def apply_key_conv(weights: jax.Array, k: jax.Array) -> jax.Array:
     return out.astype(k.dtype)
 
 
+def apply_key_conv_with_state(weights: jax.Array, k: jax.Array,
+                              state: jax.Array) -> jax.Array:
+    """Causal conv over a chunk with carried left context (chunked prefill).
+
+    weights: (W, Hkv, d); k: (B, Hkv, N, d) raw keys of this chunk;
+    state: (B, Hkv, W-1, d) the W-1 raw keys immediately before the chunk
+    (zeros for a fresh sequence).  Returns conv'd keys, same shape as k.
+
+    With a zero state this is bitwise-identical to :func:`apply_key_conv`
+    (term-by-term the same fp32 ops in the same order), which is what
+    makes chunked and one-shot prefill conv-equivalent at chunk
+    boundaries inside a conv window.
+    """
+    width = weights.shape[0]
+    depth = width - 1
+    n = k.shape[-2]
+    kf = k.astype(jnp.float32)
+    hist = jnp.concatenate([state.astype(jnp.float32), kf], axis=-2)
+    conv = jnp.zeros_like(kf)
+    for lag in range(width):
+        shifted = jax.lax.slice_in_dim(hist, depth - lag, depth - lag + n,
+                                       axis=-2)
+        conv = conv + shifted * weights[lag].astype(jnp.float32)[..., None, :]
+    out = kf + jax.nn.silu(conv)
+    return out.astype(k.dtype)
+
+
 def key_conv_state_init(width: int, batch: int, num_kv_heads: int,
                         head_dim: int, dtype=jnp.bfloat16) -> jax.Array:
     """Decode-time ring buffer of the last W-1 raw keys."""
     return jnp.zeros((batch, num_kv_heads, max(width - 1, 0), head_dim), dtype)
+
+
+def key_conv_state_update(state: jax.Array, k_raw: jax.Array,
+                          q_len: jax.Array) -> jax.Array:
+    """Advance a ring buffer past a ragged prefill chunk.
+
+    state: (B, Hkv, W-1, d) raw keys before the chunk; k_raw: (B, Hkv, L, d)
+    right-padded chunk raw keys with per-row valid length ``q_len`` (B,).
+    Returns the raw keys at the W-1 positions immediately before each
+    row's new end — rows with q_len 0 keep their state unchanged.
+    """
+    depth = state.shape[-2]
+    if depth == 0:
+        return state
+    hist = jnp.concatenate([state, k_raw.astype(state.dtype)], axis=-2)
+    idx = (q_len[:, None] + jnp.arange(depth))[:, None, :, None]
+    return jnp.take_along_axis(hist, idx, axis=-2)
 
 
 def apply_key_conv_decode(weights: jax.Array, k_new: jax.Array,

@@ -126,6 +126,29 @@ def _as_attention_config(cfg: MoBAConfig, scale: Optional[float]):
     return AttentionConfig(kind="moba", moba=cfg, scale=scale)
 
 
+def _topk_pages(masked: jax.Array, top_k: int):
+    """Shared tail of paged routing: top-k over the last (page) axis,
+    padded with invalid slots when the axis is shorter than ``top_k``.
+    Both the decode and the chunked-prefill routes go through this so
+    their selection semantics cannot drift apart.
+
+    Returns (idx, sel_valid): selected indices (invalid slots 0) and
+    their validity mask (NEG_INF-scored slots are invalid).
+    """
+    n = masked.shape[-1]
+    kk = min(top_k, n)
+    top_s, top_idx = jax.lax.top_k(masked, kk)
+    if kk < top_k:
+        padw = top_k - kk
+        top_s = jnp.concatenate(
+            [top_s, jnp.full(top_s.shape[:-1] + (padw,), NEG_INF)], -1)
+        top_idx = jnp.concatenate(
+            [top_idx, jnp.zeros(top_idx.shape[:-1] + (padw,),
+                                top_idx.dtype)], -1)
+    sel_valid = top_s > NEG_INF / 2
+    return jnp.where(sel_valid, top_idx, 0), sel_valid
+
+
 def moba_paged_route(q: jax.Array, centroids: jax.Array,
                      block_table: jax.Array, kv_len: jax.Array,
                      cfg: MoBAConfig,
@@ -161,18 +184,7 @@ def moba_paged_route(q: jax.Array, centroids: jax.Array,
     is_own = jnp.arange(npg)[None, :] == own[:, None]        # (B,npg)
     masked = jnp.where(valid[:, None, None, None], scores, NEG_INF)
     masked = jnp.where(is_own[:, None, None, None], routing.POS_INF, masked)
-    kk = min(cfg.top_k, npg)
-    top_s, top_idx = jax.lax.top_k(masked, kk)
-    if kk < cfg.top_k:
-        padw = cfg.top_k - kk
-        top_s = jnp.concatenate(
-            [top_s, jnp.full(top_s.shape[:-1] + (padw,), NEG_INF)], -1)
-        top_idx = jnp.concatenate(
-            [top_idx, jnp.zeros(top_idx.shape[:-1] + (padw,),
-                                top_idx.dtype)], -1)
-    sel_valid = top_s > NEG_INF / 2
-    idx = jnp.where(sel_valid, top_idx, 0)                   # logical ids
-    return idx, sel_valid
+    return _topk_pages(masked, cfg.top_k)
 
 
 def moba_paged_decode_attention(q: jax.Array, pages_k: jax.Array,
@@ -224,6 +236,106 @@ def moba_paged_decode_attention(q: jax.Array, pages_k: jax.Array,
     p = jax.nn.softmax(sf, axis=-1).reshape(s.shape)
     o = jnp.einsum("bhgqkl,bhgqkld->bhgqd", p, vg.astype(jnp.float32))
     return o.reshape(b, h, 1, d).astype(q.dtype)
+
+
+def moba_paged_prefill_route(q: jax.Array, centroids: jax.Array,
+                             block_table: jax.Array, kv_len: jax.Array,
+                             q_len: jax.Array, cfg: MoBAConfig,
+                             page_size: Optional[int] = None):
+    """Chunked-prefill page routing on the per-page centroid cache.
+
+    Multi-token sibling of :func:`moba_paged_route`: query j of row i sits
+    at absolute position ``kv_len[i] + j`` and scores every logical page
+    of its sequence, with future pages masked, the own page forced, and
+    unassigned table entries invalid.  Call *after* the chunk's keys (and
+    centroid recomputes) are appended, so complete pages carry exactly
+    the centroids one-shot prefill would compute — any non-own page a
+    query can select is complete by then, which is what makes chunked and
+    one-shot prefill routing-equivalent (DESIGN.md §6; pinned by test).
+
+    q: (B, H, L, d) right-padded chunk queries; centroids: (P, Hkv, d);
+    block_table: (B, npg); kv_len: (B,) pre-chunk lengths; q_len: (B,)
+    valid chunk tokens per row.
+
+    Returns (idx, sel_valid): logical page ids (B, Hkv, G, L, top_k)
+    int32 (invalid slots 0) and their validity mask.
+    """
+    b, h, nq, d = q.shape
+    hkv = centroids.shape[1]
+    npg = block_table.shape[1]
+    ps = page_size or cfg.block_size  # one page == one routable block
+    tbl = jnp.maximum(block_table, 0)
+    cents = centroids[tbl].transpose(0, 2, 1, 3)             # (B,Hkv,npg,d)
+    qg = _group_queries(q, hkv).astype(jnp.float32)          # (B,Hkv,G,L,d)
+    scores = jnp.einsum("bhgqd,bhnd->bhgqn", qg,
+                        cents.astype(jnp.float32))
+    pos = kv_len[:, None] + jnp.arange(nq)                   # (B,L) abs pos
+    own = pos // ps                                          # (B,L)
+    blk = jnp.arange(npg)
+    future = blk[None, None, :] > own[:, :, None]            # (B,L,npg)
+    is_own = blk[None, None, :] == own[:, :, None]
+    assigned = (block_table >= 0)[:, None, :]                # (B,1,npg)
+    # broadcast (B,L,npg) masks into (B,Hkv,G,L,npg)
+    masked = jnp.where((future | ~assigned)[:, None, None], NEG_INF, scores)
+    masked = jnp.where(is_own[:, None, None], routing.POS_INF, masked)
+    idx, sel_valid = _topk_pages(masked, cfg.top_k)
+    # padded query rows (beyond q_len) select nothing
+    row_valid = (jnp.arange(nq) < q_len[:, None])            # (B,L)
+    sel_valid = sel_valid & row_valid[:, None, None, :, None]
+    return jnp.where(sel_valid, idx, 0), sel_valid
+
+
+def moba_paged_prefill_attention(q: jax.Array, pages_k: jax.Array,
+                                 pages_v: jax.Array, centroids: jax.Array,
+                                 block_table: jax.Array, kv_len: jax.Array,
+                                 q_len: jax.Array, cfg: MoBAConfig,
+                                 scale: Optional[float] = None) -> jax.Array:
+    """Chunked-prefill MoBA attention against a paged cache.
+
+    The chunk's queries route on the per-page centroid cache
+    (:func:`moba_paged_prefill_route`), then attend over the densified
+    sequence view of the pool under the selection × causal mask — earlier
+    chunks' keys are visible through the block table, which is what the
+    fresh-prefill path cannot do.  Padded query rows (beyond ``q_len``)
+    select nothing and output zeros.
+
+    q: (B, H, L, d); pages_k/v: (P, ps, Hkv, d); centroids: (P, Hkv, d);
+    block_table: (B, npg); kv_len: (B,) pre-chunk lengths (the chunk and
+    its centroid updates must already be appended); q_len: (B,).
+    """
+    b, h, nq, d = q.shape
+    _, ps, hkv, _ = pages_k.shape
+    npg = block_table.shape[1]
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+
+    idx, sel_valid = moba_paged_prefill_route(q, centroids, block_table,
+                                              kv_len, q_len, cfg,
+                                              page_size=ps)
+    sel_mask = routing.selection_mask(
+        jnp.where(sel_valid, idx, npg), npg)                 # (B,Hkv,G,L,npg)
+    pos = kv_len[:, None] + jnp.arange(nq)                   # (B,L) abs pos
+    key_pos = (jnp.arange(npg * ps))                         # logical order
+    causal = pos[:, :, None] >= key_pos[None, None, :]       # (B,L,n)
+    tok_sel = jnp.repeat(sel_mask, ps, axis=-1)              # (B,Hkv,G,L,n)
+    mask = tok_sel & causal[:, None, None]
+
+    tbl = jnp.maximum(block_table, 0)
+
+    def densify(pool):
+        g = pool[tbl]                                        # (B,npg,ps,h,d)
+        return g.transpose(0, 3, 1, 2, 4).reshape(b, hkv, npg * ps, d)
+
+    kf = densify(pages_k)
+    vf = densify(pages_v)
+    qg = _group_queries(q, hkv).astype(jnp.float32)          # (B,Hkv,G,L,d)
+    s = jnp.einsum("bhgqd,bhsd->bhgqs", qg,
+                   kf.astype(jnp.float32)) * scale
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(mask.any(-1, keepdims=True), p, 0.0)
+    o = jnp.einsum("bhgqs,bhsd->bhgqd", p, vf.astype(jnp.float32))
+    return o.reshape(b, h, nq, d).astype(q.dtype)
 
 
 def moba_decode_attention(q: jax.Array, k_cache: jax.Array,

@@ -31,7 +31,8 @@ def _round_up(n: int, m: int) -> int:
 
 def serve(arch: str, batch: int = 4, prompt_len: int = 64, gen: int = 32,
           smoke: bool = True, attn_backend: str = "reference",
-          seed: int = 0, use_engine: str = "auto"):
+          seed: int = 0, use_engine: str = "auto",
+          prefill_chunk: int = 0):
     """Decode ``gen`` greedy tokens for ``batch`` random prompts.
 
     Routes through the paged continuous-batching engine when the arch
@@ -53,7 +54,8 @@ def serve(arch: str, batch: int = 4, prompt_len: int = 64, gen: int = 32,
                            dtype=np.int32)
     eng = Engine(cfg, params, EngineConfig(
         max_seqs=batch, max_seq_len=_round_up(prompt_len + gen, 16),
-        max_prefill_batch=min(batch, 4), attn_backend=attn_backend))
+        max_prefill_batch=min(batch, 4), attn_backend=attn_backend,
+        prefill_chunk=prefill_chunk))
     reqs = [eng.submit(prompts[i], max_new_tokens=gen)
             for i in range(batch)]
     eng.run()
@@ -70,7 +72,8 @@ def serve_stream(arch: str, n_requests: int = 16, rate: float = 8.0,
                  prompt_range=(16, 96), gen_range=(8, 48),
                  max_seqs: int = 8, num_pages: int = 0,
                  smoke: bool = True, attn_backend: str = "reference",
-                 seed: int = 0, realtime: bool = True) -> dict:
+                 seed: int = 0, realtime: bool = True,
+                 prefill_chunk: int = 0) -> dict:
     """Continuous-batching scenario: Poisson arrivals (``rate`` req/s),
     mixed prompt/generation lengths.  Reports tokens/s and p50/p99
     time-to-first-token + end-to-end latency.
@@ -85,7 +88,7 @@ def serve_stream(arch: str, n_requests: int = 16, rate: float = 8.0,
     max_len = _round_up(prompt_range[1] + gen_range[1], 16)
     eng = Engine(cfg, params, EngineConfig(
         max_seqs=max_seqs, max_seq_len=max_len, num_pages=num_pages,
-        attn_backend=attn_backend))
+        attn_backend=attn_backend, prefill_chunk=prefill_chunk))
     t = 0.0
     for _ in range(n_requests):
         t += rng.exponential(1.0 / rate)
@@ -187,6 +190,10 @@ def main():
     ap.add_argument("--num-pages", type=int, default=0,
                     help="page pool size (0 = fully provisioned); "
                          "undersize it to exercise preemption")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked prefill: cache prompts in chunks of "
+                         "this many tokens across engine steps "
+                         "(0 = whole-prompt prefill)")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--attn-backend", default=None,
                     help="registered attention backend "
@@ -212,13 +219,15 @@ def main():
             serve_stream(args.arch, n_requests=args.requests,
                          rate=args.rate, max_seqs=args.max_seqs,
                          num_pages=args.num_pages, smoke=args.smoke,
-                         attn_backend=backend, seed=args.seed)
+                         attn_backend=backend, seed=args.seed,
+                         prefill_chunk=args.prefill_chunk)
         else:
             serve(args.arch, batch=args.batch or 4,
                   prompt_len=args.prompt_len or 64, gen=args.gen or 32,
                   smoke=args.smoke,
                   attn_backend=backend, seed=args.seed,
-                  use_engine="never" if args.mode == "fixed" else "auto")
+                  use_engine="never" if args.mode == "fixed" else "auto",
+                  prefill_chunk=args.prefill_chunk)
     except ServingError as e:  # unsupported arch / impossible sizing;
         # genuine internal errors keep their tracebacks
         print(f"error: {e}", file=sys.stderr)

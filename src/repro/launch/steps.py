@@ -124,18 +124,30 @@ def make_decode_step(cfg: ModelConfig, backend: str = "reference",
     return decode_step
 
 
-def make_paged_prefill_step(cfg: ModelConfig, backend: str = "reference"):
+def make_paged_prefill_step(cfg: ModelConfig, backend: str = "reference",
+                            chunked: bool = False):
     """Ragged prefill into a paged cache: tokens (B, L) right-padded with
     per-row valid length ``q_len``; rows with q_len == 0 are padding.
-    Returns (first sampled token (B,), new caches)."""
+    ``kv_len`` gives each row's pre-step cache length (all zeros for
+    one-shot prefill; chunk offsets under chunked prefill) and ``slots``
+    maps prefill rows to scheduler sequence slots (for the per-slot
+    key-conv ring buffer; -1 on padding rows).  ``chunked=True``
+    (static) selects the chunk-aware attention path that sees earlier
+    chunks through the block table.  Returns (sampled next token (B,) —
+    meaningful only for rows whose prompt is now fully cached, new
+    caches)."""
 
-    def prefill_step(params, tokens, caches, block_table, q_len, active):
-        page_state = {"block_table": block_table,
-                      "kv_len": jnp.zeros_like(q_len),
-                      "q_len": q_len, "active": active}
+    def prefill_step(params, tokens, caches, block_table, kv_len, q_len,
+                     slots, active):
+        page_state = {"block_table": block_table, "kv_len": kv_len,
+                      "q_len": q_len, "slots": slots, "active": active,
+                      "chunked": chunked}
+        positions = (kv_len[:, None] + jnp.arange(tokens.shape[1])
+                     if chunked else None)
         logits, new_caches = T.prefill(params, tokens, cfg, caches,
                                        backend=backend,
-                                       page_state=page_state)
+                                       page_state=page_state,
+                                       positions=positions)
         last = jnp.maximum(q_len - 1, 0)[:, None, None]      # (B,1,1)
         lg = jnp.take_along_axis(logits, last, axis=1)[:, 0]  # (B,V)
         return jnp.argmax(lg, axis=-1).astype(jnp.int32), new_caches

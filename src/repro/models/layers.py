@@ -176,14 +176,8 @@ def apply_attention(p: dict, x: jax.Array, cfg: ModelConfig, kind: str,
     kv_len = None
     new_cache = None
     if cache is not None and "pages_k" in cache and cross_kv is None:
-        if conv_w is not None:
-            from repro.serving.scheduler import UnsupportedFeatureError
-            raise UnsupportedFeatureError(
-                "key_conv",
-                "key-conv with paged caches is an open item (DESIGN.md "
-                "§4); the engine rejects such configs at admission")
         o, new_cache = _paged_attend(q, k, v, cache, page_state, cfg,
-                                     kind, positions, backend)
+                                     kind, positions, backend, conv_w)
         o = o.transpose(0, 2, 1, 3).reshape(b, n, h * dh)
         out = o @ wcast(p["wo"], dt)
         return out, new_cache
@@ -245,14 +239,28 @@ def apply_attention(p: dict, x: jax.Array, cfg: ModelConfig, kind: str,
 
 
 def _paged_attend(q, k, v, cache, page_state, cfg: ModelConfig, kind: str,
-                  positions, backend: str):
+                  positions, backend: str, conv_w=None):
     """Paged-cache attention: append new K/V through the block table, then
     attend via the backend resolved for (kind, phase, paged).  MoBA decode
     routes on the per-page centroid cache and reads only the selected
     pages; swa decode gathers only the window's pages; dense decode
     densifies via the table.  Prefill is ragged (right-padded rows of
-    ``q_len`` valid tokens) and backend-shared (see core.backends)."""
+    ``q_len`` valid tokens) and backend-shared (see core.backends);
+    ``page_state['chunked']`` (a static bool) selects the chunk-aware
+    prefill that attends through the block table to earlier chunks.
+
+    Key-conv (``conv_w``): keys are convolved *before* the page write, so
+    centroids and attention always see convolved keys, exactly like the
+    dense cache.  The raw-key left context lives in the pool's per-slot
+    ring buffer ``key_conv_state`` — prefill rows address it via
+    ``page_state['slots']``, decode rows are the slots.  Fresh rows
+    (``kv_len`` 0) read a zero state, which both matches the dense path's
+    zero padding bitwise and makes recycled slots' stale state harmless.
+    """
     from repro.core import backends as B
+    from repro.core.key_conv import (apply_key_conv_decode,
+                                     apply_key_conv_with_state,
+                                     key_conv_state_update)
     from repro.serving import paged_cache as PC
 
     assert page_state is not None, "paged cache requires page_state"
@@ -261,16 +269,52 @@ def _paged_attend(q, k, v, cache, page_state, cfg: ModelConfig, kind: str,
     bt = page_state["block_table"]
     kvl = page_state["kv_len"]
     q_len = page_state["q_len"]
+    active = page_state["active"]
     post_len = kvl + q_len                     # lengths after this step
+    needs_conv = conv_w is not None
+    if needs_conv and "key_conv_state" not in cache:
+        from repro.serving.scheduler import UnsupportedFeatureError
+        raise UnsupportedFeatureError(
+            "key_conv",
+            "paged pool lacks the per-slot raw-key ring buffer; build "
+            "caches with init_paged_caches(..., max_seqs > 0) for "
+            "key-conv configs (DESIGN.md §4)")
+    new_ring = None
     if n == 1:                                 # decode: one token per seq
-        be = B.resolve(backend, kind=kind, phase="decode", cache="paged")
-        new_cache = PC.paged_append_decode(cache, bt, kvl,
-                                           page_state["active"], k, v)
+        if needs_conv:
+            ring = cache["key_conv_state"]     # decode rows ARE the slots
+            k, stepped = apply_key_conv_decode(conv_w, k, ring)
+            new_ring = jnp.where(active[:, None, None, None], stepped, ring)
+        be = B.resolve(backend, kind=kind, phase="decode", cache="paged",
+                       key_conv=needs_conv)
+        new_cache = PC.paged_append_decode(cache, bt, kvl, active, k, v)
+        if new_ring is not None:
+            new_cache["key_conv_state"] = new_ring
         o = be.paged_decode(a, kind, q, new_cache, bt, post_len,
                             positions=positions)
-    else:                                      # ragged fresh prefill
-        be = B.resolve(backend, kind=kind, phase="prefill", cache="paged")
-        new_cache = PC.paged_append_prefill(cache, bt, q_len, k, v)
+        return o, new_cache
+    # ragged prefill (fresh one-shot, or one chunk of a chunked prompt)
+    if needs_conv:
+        ring = cache["key_conv_state"]
+        slots = page_state["slots"]            # (B,) row -> sequence slot
+        state = ring[jnp.maximum(slots, 0)]
+        fresh = (kvl == 0) | (slots < 0)
+        state = jnp.where(fresh[:, None, None, None],
+                          jnp.zeros_like(state), state)
+        k_raw = k
+        k = apply_key_conv_with_state(conv_w, k, state)
+        stepped = key_conv_state_update(state, k_raw, q_len)
+        write = jnp.where(active & (slots >= 0), slots, ring.shape[0])
+        new_ring = ring.at[write].set(stepped.astype(ring.dtype),
+                                      mode="drop")
+    be = B.resolve(backend, kind=kind, phase="prefill", cache="paged",
+                   key_conv=needs_conv)
+    new_cache = PC.paged_append_prefill(cache, bt, q_len, k, v, kv_len=kvl)
+    if new_ring is not None:
+        new_cache["key_conv_state"] = new_ring
+    if page_state.get("chunked"):
+        o = be.paged_chunk_prefill(a, kind, q, new_cache, bt, kvl, q_len)
+    else:
         o = be.paged_prefill(a, kind, q, k, v, post_len=post_len,
                              positions=jnp.arange(n))
     return o, new_cache

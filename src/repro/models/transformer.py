@@ -276,12 +276,14 @@ def init_caches(cfg: ModelConfig, batch: int, max_len: int,
 
 
 def init_paged_caches(cfg: ModelConfig, num_pages: int, page_size: int,
-                      dtype=jnp.bfloat16) -> dict:
+                      dtype=jnp.bfloat16, max_seqs: int = 0) -> dict:
     """Stacked paged caches (page pools) in the same group/slot layout as
     :func:`init_caches`, so either cache kind flows through the same scan.
 
     Only attention slots are pageable; recurrent (ssm) and cross/decoder
     slots have no paging granularity — the engine rejects those archs.
+    ``max_seqs`` sizes the per-slot key-conv ring buffers on MoBA slots
+    of key-conv models (zero skips them — dryrun/inspection use).
     """
     from repro.serving import paged_cache as PC
 
@@ -295,7 +297,8 @@ def init_paged_caches(cfg: ModelConfig, num_pages: int, page_size: int,
     def one_group(_):
         return {f"slot_{i}": PC.init_page_pool(
                     cfg, num_pages, page_size,
-                    with_centroids=(kind == "moba"), dtype=dtype)
+                    with_centroids=(kind == "moba"), dtype=dtype,
+                    max_seqs=max_seqs)
                 for i, kind in enumerate(pattern)}
 
     return jax.vmap(one_group)(jnp.arange(n_groups))
@@ -303,11 +306,15 @@ def init_paged_caches(cfg: ModelConfig, num_pages: int, page_size: int,
 
 def prefill(params, tokens: jax.Array, cfg: ModelConfig, caches,
             backend="reference", cross_kv=None, unroll: bool = False,
-            page_state=None):
+            page_state=None, positions=None):
+    """``positions`` defaults to [0, S) (fresh prompts); chunked paged
+    prefill passes per-row (B, S) offsets instead."""
+    if positions is None:
+        positions = jnp.arange(tokens.shape[1])
     logits, aux, new_caches = lm_apply(
         params, tokens, cfg, caches=caches, backend=backend,
         cross_kv=cross_kv, unroll=unroll, page_state=page_state,
-        positions=jnp.arange(tokens.shape[1]))
+        positions=positions)
     return logits, new_caches
 
 

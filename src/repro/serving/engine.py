@@ -12,8 +12,9 @@ the engine compiles O(log max_seq_len) prefill variants and exactly one
 decode variant.
 
 Supported: attention-only layer patterns (dense / swa / moba /
-shared_attn), dense and MoE families, no key-conv.  Recurrent (ssm) and
-cross-attention archs fall back to the fixed-batch loop in
+shared_attn), dense and MoE families, key-conv (per-slot raw-key ring
+buffers, DESIGN.md §4), and chunked prefill (DESIGN.md §6).  Recurrent
+(ssm) and cross-attention archs fall back to the fixed-batch loop in
 ``launch/serve.py``.
 """
 from __future__ import annotations
@@ -37,18 +38,18 @@ from repro.serving.scheduler import (Request, Scheduler,
 
 
 def unsupported_reason(cfg: ModelConfig) -> Optional[Tuple[str, str]]:
-    """(feature, reason) the paged engine cannot serve, or None."""
+    """(feature, reason) the paged engine cannot serve, or None.
+
+    Key-conv configs are no longer rejected here: the per-slot raw-key
+    ring buffer (DESIGN.md §4) made them a backend *capability* — the
+    admission-time capability query in :class:`Engine` checks the chosen
+    backend declares paged key-conv support instead."""
     bad = [k for k in cfg.layer_pattern
            if k not in ("dense", "swa", "moba", "shared_attn")]
     if bad:
         return ("layer_pattern",
                 f"slots {bad} have no paging granularity; use the "
                 f"fixed-batch loop")
-    a = cfg.attention
-    if a.moba is not None and a.moba.key_conv_width:
-        return ("key_conv",
-                "key-conv caches need a per-slot raw-key ring buffer "
-                "(DESIGN.md §4 open item); use the fixed-batch loop")
     if cfg.family not in ("dense", "moe"):
         return ("family",
                 f"family {cfg.family!r} is not engine-supported; use "
@@ -67,6 +68,9 @@ class EngineConfig:
     num_pages: int = 0                 # 0 → max_seqs * pages_per_seq
     page_size: int = 0                 # 0 → MoBA block size (or 16)
     max_prefill_batch: int = 4
+    prefill_chunk: int = 0             # split prompts into chunks of this
+    #                                    many tokens across engine steps
+    #                                    (0 = whole-prompt prefill)
     attn_backend: str = ""             # registered backend (core.backends);
     #                                    "" → moba_impl or "reference"
     moba_impl: str = ""                # deprecated alias for attn_backend
@@ -87,15 +91,18 @@ class Engine:
         self.attn_backend = (ecfg.attn_backend or ecfg.moba_impl
                              or "reference")
         # admission-time capability query: every layer kind must resolve
-        # for both paged phases, or the request stream would die inside a
-        # jitted step
+        # for both paged phases (with key-conv where the config carries
+        # it), or the request stream would die inside a jitted step
+        a = cfg.attention
+        conv = bool(a.moba is not None and a.moba.key_conv_width)
         kinds = {"dense" if k == "shared_attn" else k
                  for k in cfg.layer_pattern}
         for kind in sorted(kinds):
             for phase in ("prefill", "decode"):
                 try:
                     B.resolve(self.attn_backend, kind=kind, phase=phase,
-                              cache="paged")
+                              cache="paged",
+                              key_conv=conv and kind == "moba")
                 except B.BackendCapabilityError as e:
                     raise UnsupportedFeatureError("attn_backend",
                                                   str(e)) from e
@@ -105,13 +112,15 @@ class Engine:
                           or ecfg.max_seqs * self.pages_per_seq)
         self.caches = T.init_paged_caches(
             cfg, self.num_pages, self.page_size,
-            dtype=jnp.dtype(cfg.dtype))
+            dtype=jnp.dtype(cfg.dtype), max_seqs=ecfg.max_seqs)
         self.sched = Scheduler(
             num_pages=self.num_pages, page_size=self.page_size,
             max_seqs=ecfg.max_seqs, max_pages_per_seq=self.pages_per_seq,
-            max_prefill_batch=ecfg.max_prefill_batch)
+            max_prefill_batch=ecfg.max_prefill_batch,
+            chunk_tokens=ecfg.prefill_chunk)
         self._prefill = jax.jit(
-            S.make_paged_prefill_step(cfg, backend=self.attn_backend),
+            S.make_paged_prefill_step(cfg, backend=self.attn_backend,
+                                      chunked=bool(ecfg.prefill_chunk)),
             donate_argnums=(2,))
         self._decode = jax.jit(
             S.make_paged_decode_step(cfg, backend=self.attn_backend),
@@ -145,28 +154,45 @@ class Engine:
         return b
 
     def _run_prefill(self, reqs: List[Request], now: float) -> None:
+        """One ragged prefill batch: each row is a request's whole context
+        (one-shot mode) or its next ``prefill_chunk`` tokens (chunked
+        mode, with ``kv_len`` carrying the chunk offset).  Only rows whose
+        context completes this step record the sampled token and join
+        decoding."""
         bp = self.ecfg.max_prefill_batch
-        lens = [len(r.context) for r in reqs]
-        lmax = self._bucket(max(lens))
+        chunk = self.ecfg.prefill_chunk
+        takes = []
+        for r in reqs:
+            left = len(r.context) - r.cache_len
+            takes.append(min(chunk, left) if chunk else left)
+        lmax = self._bucket(max(takes))
         tokens = np.zeros((bp, lmax), np.int32)
+        kv_len = np.zeros((bp,), np.int32)
         q_len = np.zeros((bp,), np.int32)
+        slots = np.full((bp,), -1, np.int32)
         active = np.zeros((bp,), bool)
         table = np.full((bp, self.pages_per_seq), -1, np.int32)
-        for i, r in enumerate(reqs):
+        for i, (r, take) in enumerate(zip(reqs, takes)):
             ctx = r.context
-            tokens[i, :len(ctx)] = ctx
-            q_len[i] = len(ctx)
+            tokens[i, :take] = ctx[r.cache_len:r.cache_len + take]
+            kv_len[i] = r.cache_len
+            q_len[i] = take
+            slots[i] = r.slot
             active[i] = True
             table[i] = self.sched.block_table[r.slot]
         t0 = time.perf_counter()
         tok, self.caches = self._prefill(
             self.params, jnp.asarray(tokens), self.caches,
-            jnp.asarray(table), jnp.asarray(q_len), jnp.asarray(active))
+            jnp.asarray(table), jnp.asarray(kv_len), jnp.asarray(q_len),
+            jnp.asarray(slots), jnp.asarray(active))
         tok = np.asarray(tok)
         self.stats["prefill_s"] += time.perf_counter() - t0
-        self.stats["prefill_tokens"] += int(sum(lens))
-        for i, r in enumerate(reqs):
-            r.cache_len = lens[i]
+        self.stats["prefill_tokens"] += int(sum(takes))
+        for i, (r, take) in enumerate(zip(reqs, takes)):
+            r.cache_len += take
+            if r.cache_len < len(r.context):
+                continue                     # more chunks to come
+            r.state = "running"              # final chunk: join decoding
             r.out.append(int(tok[i]))
             self._cur_tok[r.slot] = tok[i]
             if r.t_first is None:
@@ -203,9 +229,10 @@ class Engine:
         self.stats["preemptions"] += len(plan.preempted)
         if plan.prefills:
             self._run_prefill(plan.prefills, now)
-        # plan.decodes already includes this step's prefills: every
-        # admitted request joins the decode batch in the same iteration
-        decodes = [r for r in plan.decodes
+        # recomputed after prefill so every request whose context
+        # completed this step — one-shot admissions and final chunks
+        # alike — joins the decode batch in the same iteration
+        decodes = [r for r in self.sched.running
                    if r.state == "running" and not r.done]
         if decodes:
             self._run_decode(decodes, now)

@@ -42,12 +42,23 @@ def resolve_page_size(cfg: ModelConfig) -> int:
 
 
 def init_page_pool(cfg: ModelConfig, num_pages: int, page_size: int,
-                   with_centroids: bool, dtype=jnp.bfloat16) -> Dict:
+                   with_centroids: bool, dtype=jnp.bfloat16,
+                   max_seqs: int = 0) -> Dict:
+    """One layer slot's pool.  MoBA slots of key-conv models additionally
+    carry a per-sequence-slot ring buffer ``key_conv_state`` of the last
+    ``key_conv_width - 1`` raw (post-RoPE, pre-conv) keys, sized by
+    ``max_seqs`` — the single-step decode conv and chunked prefill both
+    read/write it by scheduler slot id (DESIGN.md §4)."""
     hkv, dh = cfg.num_kv_heads, cfg.resolved_head_dim
     pool = {"pages_k": jnp.zeros((num_pages, page_size, hkv, dh), dtype),
             "pages_v": jnp.zeros((num_pages, page_size, hkv, dh), dtype)}
     if with_centroids:
         pool["centroids"] = jnp.zeros((num_pages, hkv, dh), jnp.float32)
+        a = cfg.attention
+        width = a.moba.key_conv_width if a.moba is not None else 0
+        if width and max_seqs:
+            pool["key_conv_state"] = jnp.zeros(
+                (max_seqs, hkv, width - 1, dh), dtype)
     return pool
 
 
@@ -91,22 +102,29 @@ def paged_append_decode(cache: Dict, block_table: jax.Array,
 
 def paged_append_prefill(cache: Dict, block_table: jax.Array,
                          q_len: jax.Array, k_new: jax.Array,
-                         v_new: jax.Array) -> Dict:
-    """Scatter a right-padded ragged prompt batch into fresh pages.
+                         v_new: jax.Array,
+                         kv_len: Optional[jax.Array] = None) -> Dict:
+    """Scatter a right-padded ragged prompt chunk into its pages.
 
-    k_new/v_new: (B, hkv, L, dh); sequence i occupies positions
-    [0, q_len[i]).  Sequences are assumed fresh (cache length 0 — the
-    engine prefills whole prompts; chunked prefill is an open item).
-    Touched pages get their centroid recomputed from the stored keys.
+    k_new/v_new: (B, hkv, L, dh); row i's valid tokens occupy absolute
+    positions [kv_len[i], kv_len[i] + q_len[i]).  ``kv_len`` of None (or
+    zeros) is a fresh one-shot prefill; non-zero offsets are chunked
+    prefill continuations writing into a partially-filled tail page.
+    Every page the chunk touches gets its centroid recomputed from the
+    stored keys — for a tail page that earlier chunks started, the
+    recompute reads those chunks' keys back from the pool, so the result
+    is identical to a one-shot prefill of the whole prefix.
     """
     pk, pv = cache["pages_k"], cache["pages_v"]
     num_pages, ps, hkv, dh = pk.shape
     b, _, length, _ = k_new.shape
     npg = block_table.shape[1]
-    pos = jnp.arange(length)
+    if kv_len is None:
+        kv_len = jnp.zeros((b,), jnp.int32)
+    pos = kv_len[:, None] + jnp.arange(length)               # (B,L) abs pos
     logical = jnp.minimum(pos // ps, npg - 1)
-    phys = jnp.take(block_table, logical, axis=1)            # (B,L)
-    valid = (pos[None, :] < q_len[:, None]) & (phys >= 0)
+    phys = jnp.take_along_axis(block_table, logical, axis=1)  # (B,L)
+    valid = (jnp.arange(length)[None, :] < q_len[:, None]) & (phys >= 0)
     slot = jnp.where(valid, phys * ps + pos % ps,
                      num_pages * ps).reshape(-1)
     vals_k = k_new.transpose(0, 2, 1, 3).reshape(b * length, hkv, dh)
@@ -119,8 +137,11 @@ def paged_append_prefill(cache: Dict, block_table: jax.Array,
     new_pv = flat_v.reshape(num_pages, ps, hkv, dh)
     new = dict(cache, pages_k=new_pk, pages_v=new_pv)
     if "centroids" in cache:
-        cnt = jnp.clip(q_len[:, None] - jnp.arange(npg) * ps, 0, ps)
-        touched = (cnt > 0) & (block_table >= 0)             # (B,npg)
+        post = q_len + kv_len                                # (B,)
+        page_start = jnp.arange(npg) * ps
+        cnt = jnp.clip(post[:, None] - page_start, 0, ps)
+        touched = ((cnt > 0) & (block_table >= 0)
+                   & (page_start + ps > kv_len[:, None]))    # (B,npg)
         pages = new_pk[jnp.maximum(block_table, 0)]          # (B,npg,ps,h,d)
         wmask = jnp.arange(ps)[None, None, :] < cnt[..., None]
         sums = (pages.astype(jnp.float32)

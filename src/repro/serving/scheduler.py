@@ -53,7 +53,9 @@ class Request:
     eos_id: Optional[int] = None
     # runtime state
     out: List[int] = dataclasses.field(default_factory=list)
-    state: str = "waiting"              # waiting | running | done
+    state: str = "waiting"              # waiting | prefill | running | done
+    #   "prefill": admitted under chunked prefill with context tokens
+    #   still to cache; holds a slot and pages but does not decode yet.
     slot: int = -1
     cache_len: int = 0                  # tokens whose KV is in the cache
     n_preempt: int = 0
@@ -99,17 +101,28 @@ class PageAllocator:
 @dataclasses.dataclass
 class StepPlan:
     prefills: List[Request]
+    # requests already in the decode phase at *plan* time.  The engine
+    # recomputes the authoritative decode batch after running prefills,
+    # because requests whose final chunk (or one-shot prefill) lands this
+    # step join decoding in the same iteration.
     decodes: List[Request]
     preempted: List[Request]
 
 
 class Scheduler:
     def __init__(self, *, num_pages: int, page_size: int, max_seqs: int,
-                 max_pages_per_seq: int, max_prefill_batch: int = 4):
+                 max_pages_per_seq: int, max_prefill_batch: int = 4,
+                 chunk_tokens: int = 0):
         self.page_size = page_size
         self.max_seqs = max_seqs
         self.max_pages_per_seq = max_pages_per_seq
         self.max_prefill_batch = max_prefill_batch
+        # chunked prefill: admit long prompts in fixed-token chunks spread
+        # over engine steps (0 = whole-prompt prefill).  Pages for the
+        # full context are still reserved at admission, so chunking
+        # bounds per-step prefill *compute*, not memory — no new
+        # deadlock conditions.
+        self.chunk_tokens = chunk_tokens
         self.alloc = PageAllocator(num_pages)
         self.block_table = np.full((max_seqs, max_pages_per_seq), -1,
                                    np.int32)
@@ -193,9 +206,16 @@ class Scheduler:
             if req.state != "running":       # req itself was the victim
                 continue
 
-        # 2. admission (FIFO, arrivals only): whole context + one decode
-        #    token must fit — no partial/chunked prefill yet.
-        prefills: List[Request] = []
+        # 2. chunk continuation: admitted requests with context still to
+        #    cache run their next chunk before any new admission (they
+        #    already hold slots and pages); overflow waits a step.
+        prefills: List[Request] = [r for r in self.running
+                                   if r.state == "prefill"
+                                   ][:self.max_prefill_batch]
+
+        # 3. admission (FIFO, arrivals only): whole context + one decode
+        #    token must fit (chunking spreads the *compute*, not the
+        #    reservation).
         while (self.waiting and self._free_slots
                and len(prefills) < self.max_prefill_batch
                and self.waiting[0].arrival <= now):
@@ -205,7 +225,10 @@ class Scheduler:
                 break                        # FIFO head-of-line blocking
             self.waiting.popleft()
             req.slot = self._free_slots.pop()
-            req.state = "running"
+            # chunked mode admits into the "prefill" phase; the engine
+            # flips it to "running" once the final chunk is cached.
+            req.state = ("prefill" if self.chunk_tokens
+                         and ctx > self.chunk_tokens else "running")
             req.cache_len = 0
             ok = self._grow_to(req, ctx + 1)
             assert ok, "admission checked page availability"

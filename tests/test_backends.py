@@ -217,13 +217,26 @@ def test_flash_engine_preemption_replay_exact():
 
 
 # ----------------------------------------------------- admission-time errors
-def test_key_conv_rejected_at_admission():
+def test_key_conv_admitted_and_served():
+    """Key-conv configs are engine-servable (per-slot raw-key ring
+    buffer, DESIGN.md §4): admission succeeds for every paged backend
+    that declares paged key-conv, and the engine decodes greedily."""
     cfg = get_smoke_config("moba-340m", key_conv_width=3)
     params = T.init_lm(jax.random.PRNGKey(0), cfg)
-    assert not engine_supported(cfg)
+    assert engine_supported(cfg)
+    for name in ("reference", "xla", "flash"):
+        assert B.resolve(name, kind="moba", phase="decode", cache="paged",
+                         key_conv=True).name == name
+    eng = Engine(cfg, params, EngineConfig(max_seqs=2, max_seq_len=64))
+    rng = np.random.default_rng(0)
+    req = eng.submit(rng.integers(0, cfg.vocab_size, 20, dtype=np.int32),
+                     max_new_tokens=4)
+    eng.run()
+    assert len(req.out) == 4
+    # sp stays dense-only, and the old rejection remains structured
     with pytest.raises(UnsupportedFeatureError) as ei:
-        Engine(cfg, params, EngineConfig())
-    assert ei.value.feature == "key_conv"
+        Engine(cfg, params, EngineConfig(attn_backend="sp"))
+    assert ei.value.feature == "attn_backend"
     assert isinstance(ei.value, ServingError)  # CLI handling unchanged
 
 
