@@ -4,12 +4,20 @@ Rows: decode tokens/s and per-step prefill/decode latency for the paged
 engine across batch sizes, against the legacy lockstep loop on the same
 workload.  Derived column = tokens/s (engine rows additionally carry
 ttft_p50 for the stream row).
+
+``--shards N`` instead benchmarks the sharded engine (one shard_map
+decode across N page-pool shards) on a Poisson stream and reports
+per-shard tokens/s plus p50/p99 TTFT and end-to-end latency.  Devices
+are simulated on the host platform when fewer than N are visible, so
+the flag works on a laptop (throughput numbers are then about dispatch
+overheads, not real parallel speedup).
 """
 from __future__ import annotations
 
+import argparse
+import os
 import time
 
-import jax
 import numpy as np
 
 ARCH = "moba-340m"
@@ -17,6 +25,7 @@ PROMPT, GEN = 48, 24
 
 
 def _engine_row(batch: int):
+    import jax
     from repro.configs import get_smoke_config
     from repro.models import transformer as T
     from repro.serving.engine import Engine, EngineConfig
@@ -68,7 +77,52 @@ def bench():
     return rows
 
 
-if __name__ == "__main__":
+def bench_sharded(shards: int, n_requests: int = 16):
+    """Sharded-engine stream benchmark: per-shard tokens/s + latency
+    percentiles (the PR-4 acceptance row)."""
+    from repro.launch.serve import serve_stream
+
+    m = serve_stream(ARCH, n_requests=n_requests, rate=100.0, max_seqs=4,
+                     prompt_range=(16, 48), gen_range=(8, 24),
+                     smoke=True, realtime=False, attn_backend="sharded",
+                     shards=shards)
+    rows = [(f"serve_sharded_s{shards}_stream",
+             m["wall_s"] * 1e6 / n_requests,
+             f"{m['tokens_per_s']:.1f} tok/s "
+             f"ttft_p50/p99={m['ttft_p50_ms']:.0f}/"
+             f"{m['ttft_p99_ms']:.0f}ms "
+             f"lat_p50/p99={m['latency_p50_ms']:.0f}/"
+             f"{m['latency_p99_ms']:.0f}ms")]
+    for s, tps in enumerate(m["per_shard_tokens_per_s"]):
+        rows.append((f"serve_sharded_s{shards}_shard{s}", 0.0,
+                     f"{tps:.1f} tok/s "
+                     f"{m['per_shard_requests'][s]} requests"))
+    return rows
+
+
+def _main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--shards", type=int, default=0,
+                    help="benchmark the sharded engine with N page-pool "
+                         "shards (0 = single-host rows)")
+    ap.add_argument("--requests", type=int, default=16)
+    args = ap.parse_args()
+    if args.shards:
+        # must happen before jax initializes (transitively via repro.*);
+        # append so a pre-existing XLA_FLAGS keeps its flags, unless the
+        # user already pinned a device count themselves
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "xla_force_host_platform_device_count" not in flags:
+            os.environ["XLA_FLAGS"] = (
+                f"{flags} --xla_force_host_platform_device_count="
+                f"{args.shards}").strip()
+        rows = bench_sharded(args.shards, n_requests=args.requests)
+    else:
+        rows = bench()
     print("name,us_per_call,derived")
-    for name, us, derived in bench():
+    for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    _main()

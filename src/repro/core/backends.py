@@ -20,6 +20,10 @@ Registered backends:
                 (aliases: ``kernel``, ``pallas``)
   sp            context/sequence-parallel MoBA (dense caches only)
   sp_unrolled   same, unrolled (dry-run)
+  sharded       multi-host serving seam: per-shard math delegates to an
+                inner single-host backend (default ``xla``); the sharded
+                engine runs it inside one shard_map over the mesh
+                ``data`` axis (``serving/sharded.py``, DESIGN.md §7)
 
 Dense and sliding-window kinds share one implementation across backends
 (base-class methods); MoBA is where backends differ.  Paged *prefill* is
@@ -66,18 +70,26 @@ class Capabilities:
     ``models/layers.py`` before keys reach any backend — paged caches
     additionally need the engine's per-slot raw-key ring buffer
     (DESIGN.md §4), so a backend declares the protocols whose conv state
-    plumbing it is validated against rather than a single bool."""
+    plumbing it is validated against rather than a single bool.
+
+    ``sharded`` declares the backend safe inside the sharded serving
+    engine's per-shard ``shard_map`` body (DESIGN.md §7): its math must
+    be mesh-free — no collectives, no axis names — because each shard
+    runs it on a local pool slice.  ``sp``/``sp_unrolled`` issue their
+    own collectives over a mesh axis and so cannot nest."""
 
     kinds: Tuple[str, ...] = KINDS
     phases: Tuple[str, ...] = PHASES
     caches: Tuple[str, ...] = CACHES
     key_conv: Tuple[str, ...] = CACHES
+    sharded: bool = True
 
     def supports(self, kind: str, phase: str, cache: str = "dense",
-                 key_conv: bool = False) -> bool:
+                 key_conv: bool = False, sharded: bool = False) -> bool:
         return (kind in self.kinds and phase in self.phases
                 and cache in self.caches
-                and (not key_conv or cache in self.key_conv))
+                and (not key_conv or cache in self.key_conv)
+                and (not sharded or self.sharded))
 
 
 class AttentionBackend:
@@ -279,11 +291,14 @@ class FlashBackend(AttentionBackend):
 
 class SPBackend(AttentionBackend):
     """Sequence/context-parallel MoBA (distributed/moba_sp.py).  Dense
-    caches only: the paged pools are engine-local today (multi-host
-    serving is the ROADMAP item this registry is the seam for)."""
+    caches only, and never inside the sharded engine's shard_map (it
+    issues its own collectives over a mesh axis); the sharded engine
+    instead uses it *around* the paged path as the context-parallel
+    fallback for requests longer than one shard's pool (DESIGN.md §7)."""
 
     name = "sp"
-    capabilities = Capabilities(caches=("dense",), key_conv=("dense",))
+    capabilities = Capabilities(caches=("dense",), key_conv=("dense",),
+                                sharded=False)
     use_scan = True
 
     def moba_prefill(self, cfg, q, k, v, *, q_positions=None, **opts):
@@ -301,6 +316,35 @@ class SPBackend(AttentionBackend):
 class SPUnrolledBackend(SPBackend):
     name = "sp_unrolled"
     use_scan = False
+
+
+class ShardedBackend(AttentionBackend):
+    """Multi-host serving backend (DESIGN.md §7): the name the sharded
+    engine's admission query resolves.  Per-shard attention math is
+    delegated to a mesh-free ``inner`` backend (default ``xla``) — the
+    sharding itself lives in the engine's ``shard_map``-wrapped step
+    functions (``launch/steps.py``), not in the attention math, which is
+    exactly why a shard's tokens are bit-identical to a single-host
+    engine's.  Usable on a single host too (it is just ``inner`` then).
+    """
+
+    name = "sharded"
+    inner = "xla"
+
+    def _delegate(self, opts) -> AttentionBackend:
+        return get(opts.pop("inner", None) or self.inner)
+
+    def moba_prefill(self, cfg, q, k, v, *, q_positions=None, **opts):
+        return self._delegate(opts).moba_prefill(
+            cfg, q, k, v, q_positions=q_positions, **opts)
+
+    def moba_decode(self, cfg, q, k, v, kv_len, *, centroids=None, **opts):
+        return self._delegate(opts).moba_decode(
+            cfg, q, k, v, kv_len, centroids=centroids, **opts)
+
+    def moba_paged_decode(self, cfg, q, cache, block_table, kv_len, **opts):
+        return self._delegate(opts).moba_paged_decode(
+            cfg, q, cache, block_table, kv_len, **opts)
 
 
 # ---------------------------------------------------------------- registry
@@ -335,33 +379,39 @@ def get(name: str) -> AttentionBackend:
 
 
 def resolve(name: str, *, kind: str, phase: str, cache: str = "dense",
-            key_conv: bool = False) -> AttentionBackend:
-    """Name + capability query: the single entry point call sites use."""
+            key_conv: bool = False, sharded: bool = False
+            ) -> AttentionBackend:
+    """Name + capability query: the single entry point call sites use.
+    ``sharded=True`` additionally demands mesh-free per-shard math (the
+    sharded serving engine's admission query, DESIGN.md §7)."""
     be = get(name)
-    if not be.capabilities.supports(kind, phase, cache, key_conv):
+    if not be.capabilities.supports(kind, phase, cache, key_conv, sharded):
         able = [b.name for b in _REGISTRY.values()
-                if b.capabilities.supports(kind, phase, cache, key_conv)]
+                if b.capabilities.supports(kind, phase, cache, key_conv,
+                                           sharded)]
         raise BackendCapabilityError(
             f"backend {be.name!r} does not support kind={kind!r} "
-            f"phase={phase!r} cache={cache!r} key_conv={key_conv}; "
-            f"backends that do: {able}")
+            f"phase={phase!r} cache={cache!r} key_conv={key_conv} "
+            f"sharded={sharded}; backends that do: {able}")
     return be
 
 
 for _be in (ReferenceBackend(), XLABackend(), XLAUnrolledBackend(),
-            FlashBackend(), SPBackend(), SPUnrolledBackend()):
+            FlashBackend(), SPBackend(), SPUnrolledBackend(),
+            ShardedBackend()):
     register(_be)
 
 
 def capability_matrix() -> str:
     """Human-readable support table (also the CI registry-drift check)."""
     lines = [f"{'backend':<14}{'aliases':<22}{'kinds':<18}"
-             f"{'phases':<18}{'caches':<14}key_conv"]
+             f"{'phases':<18}{'caches':<14}{'key_conv':<14}sharded"]
     for be in _REGISTRY.values():
         c = be.capabilities
         lines.append(f"{be.name:<14}{','.join(be.aliases) or '-':<22}"
                      f"{','.join(c.kinds):<18}{','.join(c.phases):<18}"
-                     f"{','.join(c.caches):<14}{','.join(c.key_conv)}")
+                     f"{','.join(c.caches):<14}{','.join(c.key_conv):<14}"
+                     f"{'yes' if c.sharded else '-'}")
     return "\n".join(lines)
 
 

@@ -38,24 +38,30 @@ from repro.kernels import ref as kref
 NEG_INF = routing.NEG_INF
 
 
-def _mesh_info():
+def _mesh_info(axis: str = "model"):
+    """Active mesh + the data axes usable for batch sharding.  ``axis``
+    names the SP/CP axis (``model`` on training meshes; the sharded
+    serving engine may CP over its own axis) and is excluded from the
+    batch axes so the two never collide."""
     mesh = shmod._ACTIVE["mesh"]
-    if mesh is None or "model" not in mesh.axis_names:
+    if mesh is None or axis not in mesh.axis_names:
         return None, None
-    return mesh, shmod.data_axes(mesh)
+    dp = tuple(a for a in shmod.data_axes(mesh) if a != axis)
+    return mesh, dp
 
 
 def moba_attention_sp(q: jax.Array, k: jax.Array, v: jax.Array,
                       cfg: MoBAConfig, scale: Optional[float] = None,
                       q_positions: Optional[jax.Array] = None,
-                      tile: int = 128, use_scan: bool = True) -> jax.Array:
-    """SP MoBA: q (B,H,Nq,d) seq-sharded over 'model'; K/V replicated."""
+                      tile: int = 128, use_scan: bool = True,
+                      axis: str = "model") -> jax.Array:
+    """SP MoBA: q (B,H,Nq,d) seq-sharded over ``axis``; K/V replicated."""
     b, h, nq, d = q.shape
     n = k.shape[2]
     if scale is None:
         scale = 1.0 / (d ** 0.5)
-    mesh, dp = _mesh_info()
-    tp = mesh.shape["model"] if mesh else 1
+    mesh, dp = _mesh_info(axis)
+    tp = mesh.shape[axis] if mesh else 1
     if mesh is None or nq % tp or nq // tp < 1:
         return kref.moba_sparse_xla(q, k, v, cfg, q_positions=q_positions,
                                     scale=scale, tile=tile,
@@ -69,7 +75,7 @@ def moba_attention_sp(q: jax.Array, k: jax.Array, v: jax.Array,
     # instead of being stored by AD through the tile scan.
     @jax.checkpoint
     def local_fn(q_l, k_l, v_l):
-        shard = jax.lax.axis_index("model")
+        shard = jax.lax.axis_index(axis)
         qpos = shard * nq_local + jnp.arange(nq_local) + offset
         return kref.moba_sparse_xla(
             q_l, k_l, v_l, cfg, q_positions=qpos, scale=scale,
@@ -77,10 +83,10 @@ def moba_attention_sp(q: jax.Array, k: jax.Array, v: jax.Array,
 
     fn = shard_map(
         local_fn, mesh=mesh,
-        in_specs=(P(bspec, None, "model", None),
+        in_specs=(P(bspec, None, axis, None),
                   P(bspec, None, None, None),
                   P(bspec, None, None, None)),
-        out_specs=P(bspec, None, "model", None), check_rep=False)
+        out_specs=P(bspec, None, axis, None), check_rep=False)
     return fn(q, k, v)
 
 
@@ -94,12 +100,18 @@ def _axes_size(mesh, axes):
 def moba_decode_cp(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                    kv_len: jax.Array, cfg: MoBAConfig,
                    scale: Optional[float] = None,
-                   centroids: Optional[jax.Array] = None) -> jax.Array:
+                   centroids: Optional[jax.Array] = None,
+                   axis: str = "model") -> jax.Array:
     """Context-parallel MoBA decode.
 
-    q (B,H,1,d) replicated over 'model'; caches (B,Hkv,Nmax,d) sharded over
-    'model' on the sequence dim.  Distributed top-k: local candidates →
-    global agreement → local block attention → lse merge.
+    q (B,H,1,d) replicated over ``axis``; caches (B,Hkv,Nmax,d) sharded
+    over ``axis`` on the sequence dim.  Distributed top-k: local
+    candidates → global agreement → local block attention → lse merge.
+
+    Falls back to single-host decode when there is no mesh OR the cache
+    layout cannot shard cleanly (``nmax`` not a multiple of shards ×
+    block size) — a serving engine must degrade, not crash, on an
+    awkward cache length.
     """
     b, h, _, d = q.shape
     _, hkv, nmax, _ = k_cache.shape
@@ -108,20 +120,19 @@ def moba_decode_cp(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     tk = cfg.top_k
     if scale is None:
         scale = 1.0 / (d ** 0.5)
-    mesh, dp = _mesh_info()
-    if mesh is None:
+    mesh, dp = _mesh_info(axis)
+    tp = mesh.shape[axis] if mesh is not None else 1
+    if mesh is None or nmax % (tp * bs) != 0:
         from repro.core.moba import moba_decode_attention
         return moba_decode_attention(q, k_cache, v_cache, kv_len, cfg,
                                      scale=scale, centroids=centroids)
-    tp = mesh.shape["model"]
     bspec = dp if b % _axes_size(mesh, dp) == 0 else None
     n_local = nmax // tp
-    assert n_local % bs == 0, "shard size must be a block multiple"
     nb_local = n_local // bs
 
     def local_fn(q_l, k_l, v_l, kv_len_l, cents_l):
         kv_len_s = kv_len_l.reshape(())
-        shard = jax.lax.axis_index("model")
+        shard = jax.lax.axis_index(axis)
         base = shard * n_local                       # global pos of shard
         qg = q_l.reshape(b_local(q_l), hkv, g, d).astype(jnp.float32)
 
@@ -159,8 +170,8 @@ def moba_decode_cp(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
         glob_i = base // bs + loc_i
 
         # gather candidates from all shards: tiny (tp·k scalars per head)
-        all_s = jax.lax.all_gather(loc_s, "model", axis=3)   # (...,tp,tk)
-        all_i = jax.lax.all_gather(glob_i, "model", axis=3)
+        all_s = jax.lax.all_gather(loc_s, axis, axis=3)   # (...,tp,tk)
+        all_i = jax.lax.all_gather(glob_i, axis, axis=3)
         all_s = all_s.reshape(*loc_s.shape[:3], tp * tk)
         all_i = all_i.reshape(*loc_s.shape[:3], tp * tk)
         gtop_s, gtop_pos = jax.lax.top_k(all_s, tk)          # global top-k
@@ -195,9 +206,9 @@ def moba_decode_cp(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
         m = jnp.where(l > 0, m, NEG_INF)
 
         # merge partials across shards (tiny: d+2 floats per head)
-        o_all = jax.lax.all_gather(o, "model")                # (tp,...)
-        m_all = jax.lax.all_gather(m, "model")
-        l_all = jax.lax.all_gather(l, "model")
+        o_all = jax.lax.all_gather(o, axis)                # (tp,...)
+        m_all = jax.lax.all_gather(m, axis)
+        l_all = jax.lax.all_gather(l, axis)
         mm = jnp.max(m_all, axis=0)
         mm_safe = jnp.maximum(mm, NEG_INF / 2)
         w = jnp.exp(m_all - mm_safe[None])
@@ -208,15 +219,15 @@ def moba_decode_cp(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     def b_local(q_l):
         return q_l.shape[0]
 
-    cent_spec = (P(bspec, None, "model", None) if centroids is not None
+    cent_spec = (P(bspec, None, axis, None) if centroids is not None
                  else P())
     if centroids is None:
         fn = shard_map(
             lambda q_l, k_l, v_l, kl: local_fn(q_l, k_l, v_l, kl, None),
             mesh=mesh,
             in_specs=(P(bspec, None, None, None),
-                      P(bspec, None, "model", None),
-                      P(bspec, None, "model", None),
+                      P(bspec, None, axis, None),
+                      P(bspec, None, axis, None),
                       P()),
             out_specs=P(bspec, None, None, None), check_rep=False)
         return fn(q, k_cache, v_cache,
@@ -224,8 +235,8 @@ def moba_decode_cp(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     fn = shard_map(
         local_fn, mesh=mesh,
         in_specs=(P(bspec, None, None, None),
-                  P(bspec, None, "model", None),
-                  P(bspec, None, "model", None),
+                  P(bspec, None, axis, None),
+                  P(bspec, None, axis, None),
                   P(), cent_spec),
         out_specs=P(bspec, None, None, None), check_rep=False)
     return fn(q, k_cache, v_cache, kv_len.reshape(1).astype(jnp.int32),

@@ -29,18 +29,28 @@ def _round_up(n: int, m: int) -> int:
     return -(-n // m) * m
 
 
+def _make_engine(cfg, params, ecfg: EngineConfig, shards: int):
+    """Single-host Engine (shards == 0) or the sharded fleet.  Sharded
+    sizing in ``ecfg`` is per shard, matching ShardedEngine semantics."""
+    if shards:
+        from repro.serving.sharded import ShardedEngine
+        return ShardedEngine(cfg, params, ecfg, n_shards=shards)
+    return Engine(cfg, params, ecfg)
+
+
 def serve(arch: str, batch: int = 4, prompt_len: int = 64, gen: int = 32,
           smoke: bool = True, attn_backend: str = "reference",
           seed: int = 0, use_engine: str = "auto",
-          prefill_chunk: int = 0):
+          prefill_chunk: int = 0, shards: int = 0):
     """Decode ``gen`` greedy tokens for ``batch`` random prompts.
 
     Routes through the paged continuous-batching engine when the arch
     supports it (``use_engine='auto'``); otherwise — recurrent, enc-dec
     and cross-attention archs — through the legacy fixed-batch loop.
     ``attn_backend`` names a registered attention backend
-    (``core.backends``).  Returns int32 tokens of shape (batch, gen)
-    either way.
+    (``core.backends``).  ``shards > 0`` serves through the sharded
+    engine (``serving/sharded.py``) with that many page-pool shards.
+    Returns int32 tokens of shape (batch, gen) either way.
     """
     cfg = configs.get_smoke_config(arch) if smoke else configs.get_config(arch)
     if use_engine == "never" or (use_engine == "auto"
@@ -52,10 +62,10 @@ def serve(arch: str, batch: int = 4, prompt_len: int = 64, gen: int = 32,
     rng = np.random.default_rng(seed)
     prompts = rng.integers(0, cfg.vocab_size, (batch, prompt_len),
                            dtype=np.int32)
-    eng = Engine(cfg, params, EngineConfig(
+    eng = _make_engine(cfg, params, EngineConfig(
         max_seqs=batch, max_seq_len=_round_up(prompt_len + gen, 16),
         max_prefill_batch=min(batch, 4), attn_backend=attn_backend,
-        prefill_chunk=prefill_chunk))
+        prefill_chunk=prefill_chunk), shards)
     reqs = [eng.submit(prompts[i], max_new_tokens=gen)
             for i in range(batch)]
     eng.run()
@@ -73,10 +83,11 @@ def serve_stream(arch: str, n_requests: int = 16, rate: float = 8.0,
                  max_seqs: int = 8, num_pages: int = 0,
                  smoke: bool = True, attn_backend: str = "reference",
                  seed: int = 0, realtime: bool = True,
-                 prefill_chunk: int = 0) -> dict:
+                 prefill_chunk: int = 0, shards: int = 0) -> dict:
     """Continuous-batching scenario: Poisson arrivals (``rate`` req/s),
     mixed prompt/generation lengths.  Reports tokens/s and p50/p99
-    time-to-first-token + end-to-end latency.
+    time-to-first-token + end-to-end latency (per shard too when
+    ``shards > 0``).
 
     ``realtime=False`` collapses the arrival process (every request is
     queued at t=0) so percentiles stay meaningful as queueing-free
@@ -86,9 +97,9 @@ def serve_stream(arch: str, n_requests: int = 16, rate: float = 8.0,
     params = T.init_lm(jax.random.PRNGKey(seed), cfg)
     rng = np.random.default_rng(seed)
     max_len = _round_up(prompt_range[1] + gen_range[1], 16)
-    eng = Engine(cfg, params, EngineConfig(
+    eng = _make_engine(cfg, params, EngineConfig(
         max_seqs=max_seqs, max_seq_len=max_len, num_pages=num_pages,
-        attn_backend=attn_backend, prefill_chunk=prefill_chunk))
+        attn_backend=attn_backend, prefill_chunk=prefill_chunk), shards)
     t = 0.0
     for _ in range(n_requests):
         t += rng.exponential(1.0 / rate)
@@ -114,6 +125,12 @@ def serve_stream(arch: str, n_requests: int = 16, rate: float = 8.0,
         "preemptions": eng.stats["preemptions"],
         "decode_steps": eng.stats["decode_steps"],
     }
+    if shards:
+        dec_s = max(eng.stats["decode_s"], 1e-9)
+        metrics["per_shard_tokens_per_s"] = [
+            st["decode_tokens"] / dec_s for st in eng.shard_stats]
+        metrics["per_shard_requests"] = [st["requests"]
+                                         for st in eng.shard_stats]
     print(f"stream: {metrics['requests']} requests, "
           f"{metrics['generated_tokens']} tokens in {wall:.2f}s "
           f"({metrics['tokens_per_s']:.1f} tok/s); "
@@ -122,6 +139,10 @@ def serve_stream(arch: str, n_requests: int = 16, rate: float = 8.0,
           f"latency p50/p99 {metrics['latency_p50_ms']:.0f}/"
           f"{metrics['latency_p99_ms']:.0f} ms; "
           f"{metrics['preemptions']} preemptions")
+    if shards:
+        for s, tps in enumerate(metrics["per_shard_tokens_per_s"]):
+            print(f"  shard {s}: {metrics['per_shard_requests'][s]} "
+                  f"requests, {tps:.1f} tok/s")
     return metrics
 
 
@@ -194,6 +215,10 @@ def main():
                     help="chunked prefill: cache prompts in chunks of "
                          "this many tokens across engine steps "
                          "(0 = whole-prompt prefill)")
+    ap.add_argument("--shards", type=int, default=0,
+                    help="page-pool shards over the mesh data axis "
+                         "(0 = single-host engine); per-shard sizing "
+                         "comes from --max-seqs / --num-pages")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--attn-backend", default=None,
                     help="registered attention backend "
@@ -220,14 +245,15 @@ def main():
                          rate=args.rate, max_seqs=args.max_seqs,
                          num_pages=args.num_pages, smoke=args.smoke,
                          attn_backend=backend, seed=args.seed,
-                         prefill_chunk=args.prefill_chunk)
+                         prefill_chunk=args.prefill_chunk,
+                         shards=args.shards)
         else:
             serve(args.arch, batch=args.batch or 4,
                   prompt_len=args.prompt_len or 64, gen=args.gen or 32,
                   smoke=args.smoke,
                   attn_backend=backend, seed=args.seed,
                   use_engine="never" if args.mode == "fixed" else "auto",
-                  prefill_chunk=args.prefill_chunk)
+                  prefill_chunk=args.prefill_chunk, shards=args.shards)
     except ServingError as e:  # unsupported arch / impossible sizing;
         # genuine internal errors keep their tracebacks
         print(f"error: {e}", file=sys.stderr)

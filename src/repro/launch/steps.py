@@ -172,6 +172,48 @@ def make_paged_decode_step(cfg: ModelConfig, backend: str = "reference"):
     return decode_step
 
 
+# ------------------------------------------------------- sharded serving
+def _shard_over_data(fn, mesh, n_host_args: int):
+    """Wrap a per-shard step so the whole fleet runs as ONE jitted
+    shard_map over the mesh ``data`` axis (DESIGN.md §7).
+
+    Every argument after ``params`` carries a leading shard dim equal to
+    the data-axis size; the body strips its local slice (leading dim 1),
+    runs the unmodified single-host step, and re-stacks.  Params are
+    replicated (spec ``P()``); the attention math inside is mesh-free
+    (``Capabilities.sharded``), so no collective crosses shards — decode
+    for S shards costs one dispatch instead of S."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    def local(params, *args):
+        tok, new_caches = fn(params,
+                             *jax.tree.map(lambda x: x[0], list(args)))
+        return tok[None], jax.tree.map(lambda x: x[None], new_caches)
+
+    return shard_map(local, mesh=mesh,
+                     in_specs=(P(),) + (P("data"),) * n_host_args,
+                     out_specs=(P("data"), P("data")), check_rep=False)
+
+
+def make_sharded_paged_prefill_step(cfg: ModelConfig, mesh,
+                                    backend: str = "reference",
+                                    chunked: bool = False):
+    """Sharded :func:`make_paged_prefill_step`: every array argument
+    gains a leading shard dim (S, ...) laid out over ``data``."""
+    return _shard_over_data(
+        make_paged_prefill_step(cfg, backend=backend, chunked=chunked),
+        mesh, n_host_args=7)
+
+
+def make_sharded_paged_decode_step(cfg: ModelConfig, mesh,
+                                   backend: str = "reference"):
+    """Sharded :func:`make_paged_decode_step`: one jitted shard_map
+    advances every shard's decode batch in a single dispatch."""
+    return _shard_over_data(
+        make_paged_decode_step(cfg, backend=backend), mesh, n_host_args=5)
+
+
 # -------------------------------------------------------------- shardings
 def _dp(mesh: Mesh):
     return shmod.data_axes(mesh)

@@ -8,8 +8,13 @@ Layering (DESIGN.md §4):
     allocator, admit / finish / preempt, prefill batching decisions.
   * :mod:`repro.serving.engine` — glues the two: owns the jitted step
     functions and the device cache state, drains a request stream.
+  * :mod:`repro.serving.sharded` — the multi-host tier (DESIGN.md §7):
+    per-shard pools over the mesh ``data`` axis, a least-loaded host
+    router, shard_map step functions, and a context-parallel fallback
+    for requests longer than one shard's pool.
 """
-__all__ = ["Engine", "EngineConfig", "Request", "Scheduler"]
+__all__ = ["Engine", "EngineConfig", "Request", "Router", "Scheduler",
+           "ShardedEngine"]
 
 
 def __getattr__(name):  # lazy: models.layers imports paged_cache at call
@@ -17,6 +22,9 @@ def __getattr__(name):  # lazy: models.layers imports paged_cache at call
     if name in ("Engine", "EngineConfig"):
         from repro.serving import engine
         return getattr(engine, name)
+    if name in ("Router", "ShardedEngine"):
+        from repro.serving import sharded
+        return getattr(sharded, name)
     if name in ("Request", "Scheduler"):
         from repro.serving import scheduler
         return getattr(scheduler, name)

@@ -37,6 +37,114 @@ from repro.serving.scheduler import (Request, Scheduler,
                                      UnsupportedFeatureError)
 
 
+def prefill_bucket(n: int, page_size: int) -> int:
+    """Power-of-two token bucket for ragged prefill rows.
+
+    Deliberately a pure function of ``(n, page_size)`` — independent of
+    any engine or shard state — so every shard of a sharded engine pads
+    its rows to the same width for the same longest take and the jit
+    cache cannot fragment across shards (one compile per bucket,
+    engine-wide).  ``tests/test_sharded_serving.py`` pins this."""
+    b = max(16, page_size)
+    while b < n:
+        b *= 2
+    return b
+
+
+def admission_capability_check(cfg: ModelConfig, backend: str,
+                               sharded: bool = False) -> None:
+    """Admission-time capability query shared by the single-host and
+    sharded engines: every layer kind must resolve for both paged
+    phases (with key-conv where the config carries it, and mesh-free
+    per-shard math when ``sharded``), or the request stream would die
+    inside a jitted step."""
+    a = cfg.attention
+    conv = bool(a.moba is not None and a.moba.key_conv_width)
+    kinds = {"dense" if k == "shared_attn" else k
+             for k in cfg.layer_pattern}
+    for kind in sorted(kinds):
+        for phase in ("prefill", "decode"):
+            try:
+                B.resolve(backend, kind=kind, phase=phase, cache="paged",
+                          key_conv=conv and kind == "moba",
+                          sharded=sharded)
+            except B.BackendCapabilityError as e:
+                raise UnsupportedFeatureError("attn_backend",
+                                              str(e)) from e
+
+
+def resolve_pool_sizes(cfg: ModelConfig, ecfg: "EngineConfig"
+                       ) -> Tuple[int, int, int]:
+    """(page_size, pages_per_seq, num_pages) for one pool/shard."""
+    page_size = ecfg.page_size or PC.resolve_page_size(cfg)
+    pages_per_seq = math.ceil(ecfg.max_seq_len / page_size)
+    num_pages = ecfg.num_pages or ecfg.max_seqs * pages_per_seq
+    return page_size, pages_per_seq, num_pages
+
+
+def prefill_takes(reqs: List[Request], chunk: int) -> List[int]:
+    """Tokens each request contributes this step: the whole remaining
+    context, or at most ``chunk`` of it under chunked prefill."""
+    return [min(chunk, left) if chunk else left
+            for left in (len(r.context) - r.cache_len for r in reqs)]
+
+
+def build_prefill_batch(sched, reqs: List[Request], takes: List[int],
+                        bp: int, pages_per_seq: int, lmax: int):
+    """Host-side arrays for one ragged prefill batch (shared by the
+    single-host and sharded engines).  Rows past ``len(reqs)`` are
+    padding: q_len 0, slot −1, table −1, inactive."""
+    tokens = np.zeros((bp, lmax), np.int32)
+    kv_len = np.zeros((bp,), np.int32)
+    q_len = np.zeros((bp,), np.int32)
+    slots = np.full((bp,), -1, np.int32)
+    active = np.zeros((bp,), bool)
+    table = np.full((bp, pages_per_seq), -1, np.int32)
+    for i, (r, take) in enumerate(zip(reqs, takes)):
+        ctx = r.context
+        tokens[i, :take] = ctx[r.cache_len:r.cache_len + take]
+        kv_len[i] = r.cache_len
+        q_len[i] = take
+        slots[i] = r.slot
+        active[i] = True
+        table[i] = sched.block_table[r.slot]
+    return tokens, kv_len, q_len, slots, active, table
+
+
+def build_decode_batch(reqs: List[Request], max_seqs: int):
+    """Per-slot (kv_len, active) arrays for one decode step."""
+    kv_len = np.zeros((max_seqs,), np.int32)
+    active = np.zeros((max_seqs,), bool)
+    for r in reqs:
+        kv_len[r.slot] = r.cache_len
+        active[r.slot] = True
+    return kv_len, active
+
+
+def record_prefill(reqs: List[Request], takes: List[int], tok: np.ndarray,
+                   cur_tok: np.ndarray, wall: float) -> None:
+    """Post-prefill request bookkeeping: advance chunk offsets; rows
+    whose context completed this step record the sampled token and join
+    decoding."""
+    for i, (r, take) in enumerate(zip(reqs, takes)):
+        r.cache_len += take
+        if r.cache_len < len(r.context):
+            continue                     # more chunks to come
+        r.state = "running"              # final chunk: join decoding
+        r.out.append(int(tok[i]))
+        cur_tok[r.slot] = tok[i]
+        if r.t_first is None:
+            r.t_first = wall
+
+
+def record_decode(reqs: List[Request], tok: np.ndarray,
+                  cur_tok: np.ndarray) -> None:
+    for r in reqs:
+        r.cache_len += 1
+        r.out.append(int(tok[r.slot]))
+        cur_tok[r.slot] = tok[r.slot]
+
+
 def unsupported_reason(cfg: ModelConfig) -> Optional[Tuple[str, str]]:
     """(feature, reason) the paged engine cannot serve, or None.
 
@@ -90,26 +198,9 @@ class Engine:
         # when the new field is unset
         self.attn_backend = (ecfg.attn_backend or ecfg.moba_impl
                              or "reference")
-        # admission-time capability query: every layer kind must resolve
-        # for both paged phases (with key-conv where the config carries
-        # it), or the request stream would die inside a jitted step
-        a = cfg.attention
-        conv = bool(a.moba is not None and a.moba.key_conv_width)
-        kinds = {"dense" if k == "shared_attn" else k
-                 for k in cfg.layer_pattern}
-        for kind in sorted(kinds):
-            for phase in ("prefill", "decode"):
-                try:
-                    B.resolve(self.attn_backend, kind=kind, phase=phase,
-                              cache="paged",
-                              key_conv=conv and kind == "moba")
-                except B.BackendCapabilityError as e:
-                    raise UnsupportedFeatureError("attn_backend",
-                                                  str(e)) from e
-        self.page_size = ecfg.page_size or PC.resolve_page_size(cfg)
-        self.pages_per_seq = math.ceil(ecfg.max_seq_len / self.page_size)
-        self.num_pages = (ecfg.num_pages
-                          or ecfg.max_seqs * self.pages_per_seq)
+        admission_capability_check(cfg, self.attn_backend)
+        self.page_size, self.pages_per_seq, self.num_pages = \
+            resolve_pool_sizes(cfg, ecfg)
         self.caches = T.init_paged_caches(
             cfg, self.num_pages, self.page_size,
             dtype=jnp.dtype(cfg.dtype), max_seqs=ecfg.max_seqs)
@@ -148,10 +239,10 @@ class Engine:
 
     # -------------------------------------------------------------- steps
     def _bucket(self, n: int) -> int:
-        b = max(16, self.page_size)
-        while b < n:
-            b *= 2
-        return b
+        return prefill_bucket(n, self.page_size)
+
+    def _takes(self, reqs: List[Request]) -> List[int]:
+        return prefill_takes(reqs, self.ecfg.prefill_chunk)
 
     def _run_prefill(self, reqs: List[Request], now: float) -> None:
         """One ragged prefill batch: each row is a request's whole context
@@ -159,27 +250,11 @@ class Engine:
         mode, with ``kv_len`` carrying the chunk offset).  Only rows whose
         context completes this step record the sampled token and join
         decoding."""
-        bp = self.ecfg.max_prefill_batch
-        chunk = self.ecfg.prefill_chunk
-        takes = []
-        for r in reqs:
-            left = len(r.context) - r.cache_len
-            takes.append(min(chunk, left) if chunk else left)
+        takes = self._takes(reqs)
         lmax = self._bucket(max(takes))
-        tokens = np.zeros((bp, lmax), np.int32)
-        kv_len = np.zeros((bp,), np.int32)
-        q_len = np.zeros((bp,), np.int32)
-        slots = np.full((bp,), -1, np.int32)
-        active = np.zeros((bp,), bool)
-        table = np.full((bp, self.pages_per_seq), -1, np.int32)
-        for i, (r, take) in enumerate(zip(reqs, takes)):
-            ctx = r.context
-            tokens[i, :take] = ctx[r.cache_len:r.cache_len + take]
-            kv_len[i] = r.cache_len
-            q_len[i] = take
-            slots[i] = r.slot
-            active[i] = True
-            table[i] = self.sched.block_table[r.slot]
+        tokens, kv_len, q_len, slots, active, table = build_prefill_batch(
+            self.sched, reqs, takes, self.ecfg.max_prefill_batch,
+            self.pages_per_seq, lmax)
         t0 = time.perf_counter()
         tok, self.caches = self._prefill(
             self.params, jnp.asarray(tokens), self.caches,
@@ -188,23 +263,10 @@ class Engine:
         tok = np.asarray(tok)
         self.stats["prefill_s"] += time.perf_counter() - t0
         self.stats["prefill_tokens"] += int(sum(takes))
-        for i, (r, take) in enumerate(zip(reqs, takes)):
-            r.cache_len += take
-            if r.cache_len < len(r.context):
-                continue                     # more chunks to come
-            r.state = "running"              # final chunk: join decoding
-            r.out.append(int(tok[i]))
-            self._cur_tok[r.slot] = tok[i]
-            if r.t_first is None:
-                r.t_first = self._wall()
+        record_prefill(reqs, takes, tok, self._cur_tok, self._wall())
 
     def _run_decode(self, reqs: List[Request], now: float) -> None:
-        ms = self.ecfg.max_seqs
-        kv_len = np.zeros((ms,), np.int32)
-        active = np.zeros((ms,), bool)
-        for r in reqs:
-            kv_len[r.slot] = r.cache_len
-            active[r.slot] = True
+        kv_len, active = build_decode_batch(reqs, self.ecfg.max_seqs)
         t0 = time.perf_counter()
         tok, self.caches = self._decode(
             self.params, jnp.asarray(self._cur_tok), self.caches,
@@ -214,10 +276,7 @@ class Engine:
         self.stats["decode_s"] += time.perf_counter() - t0
         self.stats["decode_steps"] += 1
         self.stats["decode_tokens"] += len(reqs)
-        for r in reqs:
-            r.cache_len += 1
-            r.out.append(int(tok[r.slot]))
-            self._cur_tok[r.slot] = tok[r.slot]
+        record_decode(reqs, tok, self._cur_tok)
 
     def _wall(self) -> float:
         return (0.0 if self._t0 is None

@@ -66,6 +66,25 @@ def is_paged(cache) -> bool:
     return cache is not None and "pages_k" in cache
 
 
+def shard_pools(caches, mesh, n_shards: int):
+    """Stack ``n_shards`` copies of a (zero-initialised) cache pytree
+    along a new leading shard axis and lay the result out over the
+    mesh's ``data`` axis — each shard owns its own pool slice (pages,
+    centroid cache, key-conv ring buffers); nothing is replicated.
+
+    The stacked layout is what the sharded engine's ``shard_map`` step
+    functions split: inside the body each device sees leading dim 1,
+    strips it, and runs the unmodified single-host step (DESIGN.md §7).
+    """
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    spec = NamedSharding(mesh, P("data"))
+    return jax.tree.map(
+        lambda x: jax.device_put(
+            jnp.broadcast_to(x[None], (n_shards,) + x.shape), spec),
+        caches)
+
+
 def paged_append_decode(cache: Dict, block_table: jax.Array,
                         kv_len: jax.Array, active: jax.Array,
                         k_new: jax.Array, v_new: jax.Array) -> Dict:

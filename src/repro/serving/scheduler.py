@@ -57,6 +57,8 @@ class Request:
     #   "prefill": admitted under chunked prefill with context tokens
     #   still to cache; holds a slot and pages but does not decode yet.
     slot: int = -1
+    shard: int = -1                     # owning shard (sharded engine);
+    #   -1 = single-host or context-parallel fallback
     cache_len: int = 0                  # tokens whose KV is in the cache
     n_preempt: int = 0
     t_first: Optional[float] = None     # first-token wall time
@@ -148,6 +150,33 @@ class Scheduler:
 
     def has_work(self) -> bool:
         return bool(self.waiting or self.running)
+
+    # ------------------------------------------------------- router metrics
+    @property
+    def committed_pages(self) -> int:
+        """Pages currently held by running/prefilling sequences."""
+        return self.alloc.num_pages - self.alloc.available
+
+    @property
+    def queued_pages(self) -> int:
+        """Pages the waiting queue will need (whole context + 1 token
+        each — the same reservation admission makes)."""
+        return sum(self._pages_for(len(r.context) + 1)
+                   for r in self.waiting)
+
+    @property
+    def load(self) -> int:
+        """Router load metric: committed + queued page demand.  A pure
+        function of scheduler state so least-loaded routing is
+        deterministic for a given submission order."""
+        return self.committed_pages + self.queued_pages
+
+    def fits(self, req: Request) -> bool:
+        """Whether this shard can ever serve ``req`` (same conditions
+        ``submit`` enforces, as a predicate instead of a raise)."""
+        need = len(req.prompt) + req.max_new_tokens
+        return (need <= self.max_pages_per_seq * self.page_size
+                and self._pages_for(need) <= self.alloc.num_pages)
 
     # ------------------------------------------------------------ helpers
     def _pages_for(self, n_tokens: int) -> int:

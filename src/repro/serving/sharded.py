@@ -1,0 +1,357 @@
+"""Sharded multi-host serving engine (DESIGN.md §7).
+
+The single-host :class:`~repro.serving.engine.Engine` owns ONE page pool
+and ONE scheduler; this module scales it over the mesh ``data`` axis
+without changing any attention math:
+
+  * every shard owns its own slice of the paged state — page pool,
+    centroid cache, key-conv ring buffers — stacked along a leading
+    shard dim and laid out over ``data`` (`paged_cache.shard_pools`);
+  * a host-side :class:`Router` assigns each incoming request to the
+    least-loaded shard, after which its whole lifetime (admission,
+    growth, preemption, replay) is handled by that shard's own
+    :class:`~repro.serving.scheduler.Scheduler`;
+  * each engine step runs at most one jitted ``shard_map`` prefill and
+    one jitted ``shard_map`` decode across ALL shards
+    (`launch/steps.make_sharded_paged_*`): inside the body each device
+    strips its local pool slice and runs the unmodified single-host
+    step, so zero collectives cross shards and a request's greedy
+    tokens are bit-identical to the single-host engine's
+    (`tests/test_sharded_serving.py`);
+  * a single request longer than one shard's pool cannot be paged — it
+    falls back to context-parallel decode over the same devices
+    (`distributed/moba_sp.moba_decode_cp`), routing on shard-local
+    centroids from the dense cache's incremental centroid cache.
+
+Prefill rows are padded to ONE bucket computed from the global longest
+take via the pure function :func:`~repro.serving.engine.prefill_bucket`
+— bucket sizes are shard-invariant by construction (asserted), so the
+jit cache holds one prefill variant per bucket engine-wide instead of
+fragmenting per shard.
+"""
+from __future__ import annotations
+
+import collections
+import time
+from typing import Deque, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShardingConfig
+from repro.distributed import sharding as shmod
+from repro.launch import steps as S
+from repro.models import transformer as T
+from repro.serving import paged_cache as PC
+from repro.serving.engine import (EngineConfig,
+                                  admission_capability_check,
+                                  build_decode_batch, build_prefill_batch,
+                                  prefill_bucket, prefill_takes,
+                                  record_decode, record_prefill,
+                                  resolve_pool_sizes, unsupported_reason)
+from repro.serving.scheduler import (Request, Scheduler, ServingError,
+                                     UnsupportedFeatureError)
+
+
+class Router:
+    """Host-side least-loaded router over per-shard schedulers.
+
+    ``pick`` returns the shard with the smallest page-demand ``load``
+    (committed + queued pages) among the shards that can ever serve the
+    request, ties broken by lowest shard id — fully deterministic for a
+    given submission order, which the equivalence suite relies on.
+    Returns −1 when no shard can serve it (context-parallel fallback or
+    rejection is the engine's call)."""
+
+    def __init__(self, scheds: Sequence[Scheduler]):
+        self.scheds = scheds
+
+    def pick(self, req: Request) -> int:
+        fitting = [s for s, sch in enumerate(self.scheds) if sch.fits(req)]
+        if not fitting:
+            return -1
+        return min(fitting, key=lambda s: (self.scheds[s].load, s))
+
+
+class ShardedEngine:
+    """Continuous-batching engine whose page pools are sharded over the
+    mesh ``data`` axis.  ``ecfg`` sizes are PER SHARD (``max_seqs``
+    slots and ``num_pages`` pages on every shard); total capacity is
+    ``n_shards`` times that.  API mirrors :class:`Engine`:
+    ``submit`` / ``step`` / ``run`` / ``stats`` (+ ``shard_stats``)."""
+
+    def __init__(self, cfg: ModelConfig, params,
+                 ecfg: Optional[EngineConfig] = None, n_shards: int = 2,
+                 mesh=None):
+        reason = unsupported_reason(cfg)
+        if reason is not None:
+            raise UnsupportedFeatureError(*reason)
+        self.cfg = cfg
+        self.ecfg = ecfg = ecfg or EngineConfig()
+        self.attn_backend = (ecfg.attn_backend or ecfg.moba_impl
+                             or "sharded")
+        if mesh is None:
+            if n_shards > len(jax.devices()):
+                raise ServingError(
+                    f"n_shards={n_shards} exceeds the {len(jax.devices())}"
+                    f" visible devices; simulate with XLA_FLAGS="
+                    f"--xla_force_host_platform_device_count=N")
+            mesh = shmod.make_compat_mesh((n_shards,), ("data",))
+        if "data" not in mesh.axis_names:
+            raise ServingError(
+                f"sharded engine needs a 'data' mesh axis, got "
+                f"{mesh.axis_names}")
+        self.mesh = mesh
+        self.n_shards = ns = mesh.shape["data"]
+        # same admission query as Engine, additionally demanding the
+        # backend's per-shard math is mesh-free (Capabilities.sharded)
+        admission_capability_check(cfg, self.attn_backend, sharded=True)
+        self.page_size, self.pages_per_seq, self.num_pages = \
+            resolve_pool_sizes(cfg, ecfg)
+        self.params = jax.device_put(params, NamedSharding(mesh, P()))
+        base = T.init_paged_caches(cfg, self.num_pages, self.page_size,
+                                   dtype=jnp.dtype(cfg.dtype),
+                                   max_seqs=ecfg.max_seqs)
+        self.caches = PC.shard_pools(base, mesh, ns)
+        self.scheds = [Scheduler(
+            num_pages=self.num_pages, page_size=self.page_size,
+            max_seqs=ecfg.max_seqs, max_pages_per_seq=self.pages_per_seq,
+            max_prefill_batch=ecfg.max_prefill_batch,
+            chunk_tokens=ecfg.prefill_chunk) for _ in range(ns)]
+        self.router = Router(self.scheds)
+        self._prefill = jax.jit(
+            S.make_sharded_paged_prefill_step(
+                cfg, mesh, backend=self.attn_backend,
+                chunked=bool(ecfg.prefill_chunk)),
+            donate_argnums=(2,))
+        self._decode = jax.jit(
+            S.make_sharded_paged_decode_step(cfg, mesh,
+                                             backend=self.attn_backend),
+            donate_argnums=(2,))
+        self._cur_tok = np.zeros((ns, ecfg.max_seqs), np.int32)
+        self._next_rid = 0
+        self._t0 = None
+        self.finished: List[Request] = []
+        self.stats = {"prefill_s": 0.0, "decode_s": 0.0,
+                      "prefill_tokens": 0, "decode_steps": 0,
+                      "decode_tokens": 0, "preemptions": 0,
+                      "cp_requests": 0, "cp_tokens": 0, "cp_s": 0.0}
+        self.shard_stats = [{"prefill_tokens": 0, "decode_tokens": 0,
+                             "requests": 0} for _ in range(ns)]
+        # jit-cache hygiene: every prefill width ever compiled (the
+        # shard-invariance regression test asserts this stays one entry
+        # per distinct global bucket, never one per shard)
+        self.prefill_widths: set = set()
+        # context-parallel fallback state (built lazily on first use)
+        self._cp_queue: Deque[Request] = collections.deque()
+        self._cp_mesh = None
+        self._cp_prefill = None
+        self._cp_decode = None
+
+    # ------------------------------------------------------------- intake
+    def submit(self, prompt: Sequence[int], max_new_tokens: int,
+               arrival: float = 0.0, eos_id: Optional[int] = None
+               ) -> Request:
+        req = Request(rid=self._next_rid,
+                      prompt=np.asarray(prompt, np.int32),
+                      max_new_tokens=max_new_tokens, arrival=arrival,
+                      eos_id=eos_id)
+        self._next_rid += 1
+        shard = self.router.pick(req)
+        if shard < 0:
+            need = len(req.prompt) + max_new_tokens
+            if need > self.cp_capacity:
+                raise ServingError(
+                    f"request {req.rid}: prompt+gen {need} tokens exceed "
+                    f"even the context-parallel capacity "
+                    f"{self.cp_capacity} ({self.n_shards} shards)")
+            self._cp_queue.append(req)       # longer than one shard's pool
+            return req
+        req.shard = shard
+        self.scheds[shard].submit(req)
+        self.shard_stats[shard]["requests"] += 1
+        return req
+
+    # --------------------------------------------------------------- sizes
+    @property
+    def shard_capacity(self) -> int:
+        """Tokens one shard's pool can hold."""
+        return self.num_pages * self.page_size
+
+    @property
+    def cp_capacity(self) -> int:
+        """Max context the context-parallel fallback can decode: the
+        fleet-wide pool equivalent, dense-cached over all shards."""
+        return self.n_shards * self.shard_capacity
+
+    # -------------------------------------------------------------- steps
+    def _run_prefill(self, per_shard: List[List[Request]]) -> None:
+        """One shard_map prefill over every shard's batch.  All shards
+        pad to ONE bucket derived from the global longest take via the
+        pure :func:`prefill_bucket`, so the jit cache holds one prefill
+        variant per bucket engine-wide instead of one per shard."""
+        ns, bp = self.n_shards, self.ecfg.max_prefill_batch
+        takes = [prefill_takes(reqs, self.ecfg.prefill_chunk)
+                 for reqs in per_shard]
+        gmax = max(max(t) for t in takes if t)
+        lmax = prefill_bucket(gmax, self.page_size)
+        self.prefill_widths.add(lmax)
+        rows = [build_prefill_batch(self.scheds[s], per_shard[s], takes[s],
+                                    bp, self.pages_per_seq, lmax)
+                for s in range(ns)]
+        # shard-invariant bucketing: every shard's rows must be padded to
+        # the one global bucket — fires if a refactor reintroduces
+        # per-shard local buckets (the jit-cache fragmentation bug)
+        assert all(r[0].shape == (bp, lmax) for r in rows), \
+            [r[0].shape for r in rows]
+        tokens, kv_len, q_len, slots, active, table = (
+            np.stack([r[i] for r in rows]) for i in range(6))
+        t0 = time.perf_counter()
+        tok, self.caches = self._prefill(
+            self.params, jnp.asarray(tokens), self.caches,
+            jnp.asarray(table), jnp.asarray(kv_len), jnp.asarray(q_len),
+            jnp.asarray(slots), jnp.asarray(active))
+        tok = np.asarray(tok)
+        self.stats["prefill_s"] += time.perf_counter() - t0
+        wall = self._wall()
+        for s in range(ns):
+            n_tok = int(sum(takes[s]))
+            self.stats["prefill_tokens"] += n_tok
+            self.shard_stats[s]["prefill_tokens"] += n_tok
+            record_prefill(per_shard[s], takes[s], tok[s],
+                           self._cur_tok[s], wall)
+
+    def _run_decode(self, per_shard: List[List[Request]]) -> None:
+        ns, ms = self.n_shards, self.ecfg.max_seqs
+        rows = [build_decode_batch(reqs, ms) for reqs in per_shard]
+        kv_len = np.stack([r[0] for r in rows])
+        active = np.stack([r[1] for r in rows])
+        table = np.stack([sch.block_table for sch in self.scheds])
+        t0 = time.perf_counter()
+        tok, self.caches = self._decode(
+            self.params, jnp.asarray(self._cur_tok), self.caches,
+            jnp.asarray(table), jnp.asarray(kv_len), jnp.asarray(active))
+        tok = np.asarray(tok)
+        self.stats["decode_s"] += time.perf_counter() - t0
+        self.stats["decode_steps"] += 1
+        for s in range(ns):
+            self.stats["decode_tokens"] += len(per_shard[s])
+            self.shard_stats[s]["decode_tokens"] += len(per_shard[s])
+            record_decode(per_shard[s], tok[s], self._cur_tok[s])
+
+    def _wall(self) -> float:
+        return (0.0 if self._t0 is None
+                else time.perf_counter() - self._t0)
+
+    def step(self, now: float = float("inf")) -> Dict:
+        """One fleet iteration: at most one arrived context-parallel
+        request (they are served solo and synchronously), then per-shard
+        admission plans and at most one shard_map prefill + one
+        shard_map decode across shards."""
+        n_cp = 0
+        if self._cp_queue and self._cp_queue[0].arrival <= now:
+            self._run_cp(self._cp_queue.popleft())
+            n_cp = 1
+        plans = [sch.plan_step(now) for sch in self.scheds]
+        self.stats["preemptions"] += sum(len(p.preempted) for p in plans)
+        prefills = [p.prefills for p in plans]
+        if any(prefills):
+            self._run_prefill(prefills)
+        decodes = [[r for r in sch.running
+                    if r.state == "running" and not r.done]
+                   for sch in self.scheds]
+        if any(decodes):
+            self._run_decode(decodes)
+        n_done = 0
+        for sch in self.scheds:
+            for r in [r for r in list(sch.running) if r.done]:
+                sch.finish(r)
+                r.t_done = self._wall()
+                self.finished.append(r)
+                n_done += 1
+        return {"prefilled": sum(len(p) for p in prefills),
+                "decoded": sum(len(d) for d in decodes),
+                "finished": n_done + n_cp, "cp_served": n_cp,
+                "preempted": sum(len(p.preempted) for p in plans)}
+
+    # ------------------------------------------- context-parallel fallback
+    def _cp_setup(self):
+        """Lazily build the CP mesh (same devices, ``model`` axis for
+        `moba_decode_cp`'s collectives) and the dense-cache step pair on
+        the ``sp`` backend.  ShardingConfig turns every other constraint
+        off: only the MoBA KV cache is sequence-sharded."""
+        if self._cp_mesh is None:
+            self._cp_mesh = shmod.make_compat_mesh(
+                (1, self.n_shards), ("data", "model"))
+            self._cp_prefill = jax.jit(
+                S.make_prefill_step(self.cfg, backend="sp"),
+                donate_argnums=(2,))
+            self._cp_decode = jax.jit(
+                S.make_decode_step(self.cfg, backend="sp"),
+                donate_argnums=(2,))
+        return self._cp_mesh
+
+    def _run_cp(self, req: Request) -> None:
+        """Serve one over-long request with context-parallel decode: the
+        dense KV cache (and its incremental centroid cache) is sharded
+        over the mesh on the sequence dim inside `moba_decode_cp`'s
+        shard_map; routing happens on shard-local centroids and only
+        centroid scores cross chips (DESIGN.md §7)."""
+        cfg = self.cfg
+        mesh = self._cp_setup()
+        # cache length: a multiple of shards × block size so every shard
+        # holds whole blocks (moba_decode_cp's layout requirement)
+        unit = self.n_shards * self.page_size
+        need = len(req.prompt) + req.max_new_tokens
+        max_len = -(-need // unit) * unit
+        caches = T.init_caches(cfg, 1, max_len, dtype=jnp.dtype(cfg.dtype))
+        scfg = ShardingConfig(fsdp=False, tensor_parallel=False,
+                              sequence_parallel=False)
+        t0 = time.perf_counter()
+        with shmod.use_mesh(mesh, scfg):
+            logits, caches = self._cp_prefill(
+                self.params, jnp.asarray(req.prompt[None]), caches)
+            tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(
+                jnp.int32)
+            req.cache_len = len(req.prompt)
+            req.out.append(int(np.asarray(tok)[0, 0]))
+            req.t_first = self._wall()
+            while not req.done:
+                tok, caches = self._cp_decode(self.params, tok, caches)
+                req.out.append(int(np.asarray(tok)[0, 0]))
+                req.cache_len += 1
+        # CP wall time is tracked apart from the paged counters so
+        # per-shard tokens/s (decode_tokens / decode_s) stays honest
+        self.stats["cp_s"] += time.perf_counter() - t0
+        self.stats["cp_requests"] += 1
+        self.stats["cp_tokens"] += len(req.out)
+        req.state = "done"
+        req.t_done = self._wall()
+        self.finished.append(req)
+
+    # ---------------------------------------------------------------- run
+    def has_work(self) -> bool:
+        return (any(sch.has_work() for sch in self.scheds)
+                or bool(self._cp_queue))
+
+    def run(self, realtime: bool = False) -> List[Request]:
+        """Drain all submitted requests (paged shards + CP fallback, in
+        arrival order within each path) and return the ones finished by
+        this call."""
+        n0 = len(self.finished)
+        if self._t0 is None:
+            self._t0 = time.perf_counter()
+        while self.has_work():
+            now = self._wall() if realtime else float("inf")
+            self.step(now=now)
+            if realtime and not any(sch.running for sch in self.scheds):
+                pending = [sch.waiting[0].arrival for sch in self.scheds
+                           if sch.waiting]
+                pending += [r.arrival for r in list(self._cp_queue)[:1]]
+                if pending:
+                    wait = min(pending) - self._wall()
+                    if wait > 0:
+                        time.sleep(min(wait, 0.05))
+        return self.finished[n0:]

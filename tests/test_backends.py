@@ -48,9 +48,42 @@ def _build_paged(rng, kv_lens, *, hkv=2, d=16, ps=16, npg=8, num_pages=32):
 
 
 # ------------------------------------------------------------------ registry
+PAGED_BACKENDS = ("xla", "flash", "sharded")
+
+
+@pytest.fixture(params=PAGED_BACKENDS)
+def paged_backend(request):
+    """Every paged-capable non-reference backend.  Engine-level paged
+    tests parametrize over this one fixture instead of keeping a copy
+    per backend — a new paged backend gets the whole sweep by adding
+    its name here."""
+    return request.param
+
+
+_REF = {}
+
+
+def _reference_fixture():
+    """Shared (cfg, params, prompts, reference-engine outputs) for the
+    cross-backend sweep — computed once, not once per fixture param."""
+    if not _REF:
+        cfg = get_smoke_config("moba-340m")
+        params = T.init_lm(jax.random.PRNGKey(0), cfg)
+        rng = np.random.default_rng(5)
+        prompts = [rng.integers(0, cfg.vocab_size, n, dtype=np.int32)
+                   for n in (40, 33, 21)]
+        eng = Engine(cfg, params, EngineConfig(
+            max_seqs=3, max_seq_len=64, attn_backend="reference"))
+        reqs = [eng.submit(p, max_new_tokens=10) for p in prompts]
+        eng.run()
+        _REF.update(cfg=cfg, params=params, prompts=prompts,
+                    outs=[r.out for r in reqs])
+    return _REF
+
+
 def test_registry_names_and_aliases():
     assert set(B.names()) >= {"reference", "xla", "xla_unrolled", "flash",
-                              "sp", "sp_unrolled"}
+                              "sp", "sp_unrolled", "sharded"}
     assert B.get("sparse") is B.get("xla")
     assert B.get("sparse_unrolled") is B.get("xla_unrolled")
     assert B.get("kernel") is B.get("flash")
@@ -81,7 +114,7 @@ def test_capability_matrix_backends_run_what_they_declare():
     qd = q[:, :, :1]
     kv_len = jnp.asarray(40)          # dense caches share one length
     ref = B.get("reference")
-    for name in ("reference", "xla", "xla_unrolled", "flash"):
+    for name in ("reference", "xla", "xla_unrolled", "flash", "sharded"):
         be = B.get(name)
         caps = be.capabilities
         for kind in caps.kinds:
@@ -175,42 +208,35 @@ def test_swa_windowed_decode_matches_densify():
 
 
 # ------------------------------------------------------------------- engine
-def test_engine_backends_agree_token_for_token():
-    """reference / xla / flash engines emit identical greedy streams
-    (moba-340m interleaves swa + moba, so this also pins the windowed
-    swa decode path against the old densify numerics)."""
-    cfg = get_smoke_config("moba-340m")
-    params = T.init_lm(jax.random.PRNGKey(0), cfg)
-    rng = np.random.default_rng(5)
-    prompts = [rng.integers(0, cfg.vocab_size, n, dtype=np.int32)
-               for n in (40, 33, 21)]
-    outs = {}
-    for name in ("reference", "xla", "flash"):
-        eng = Engine(cfg, params, EngineConfig(
-            max_seqs=3, max_seq_len=64, attn_backend=name))
-        reqs = [eng.submit(p, max_new_tokens=10) for p in prompts]
-        eng.run()
-        outs[name] = [r.out for r in reqs]
-    assert outs["reference"] == outs["xla"] == outs["flash"]
+def test_engine_backend_agrees_token_for_token(paged_backend):
+    """Every paged backend's engine emits the reference engine's greedy
+    stream (moba-340m interleaves swa + moba, so this also pins the
+    windowed swa decode path against the old densify numerics)."""
+    ref = _reference_fixture()
+    eng = Engine(ref["cfg"], ref["params"], EngineConfig(
+        max_seqs=3, max_seq_len=64, attn_backend=paged_backend))
+    reqs = [eng.submit(p, max_new_tokens=10) for p in ref["prompts"]]
+    eng.run()
+    assert [r.out for r in reqs] == ref["outs"]
 
 
-def test_flash_engine_preemption_replay_exact():
-    """Recompute-preemption through the Pallas decode backend reproduces
-    every request's solo greedy stream."""
-    cfg = get_smoke_config("moba-340m")
-    params = T.init_lm(jax.random.PRNGKey(0), cfg)
+def test_engine_preemption_replay_exact(paged_backend):
+    """Recompute-preemption through every paged backend reproduces each
+    request's solo greedy stream."""
+    ref = _reference_fixture()
+    cfg, params = ref["cfg"], ref["params"]
     rng = np.random.default_rng(6)
     prompts = [rng.integers(0, cfg.vocab_size, n, dtype=np.int32)
                for n in (40, 35, 30)]
     eng = Engine(cfg, params, EngineConfig(max_seqs=3, max_seq_len=64,
                                            num_pages=8,
-                                           attn_backend="flash"))
+                                           attn_backend=paged_backend))
     reqs = [eng.submit(p, max_new_tokens=14) for p in prompts]
     eng.run()
     assert eng.stats["preemptions"] > 0, "test should exercise preemption"
     for p, r in zip(prompts, reqs):
         solo = Engine(cfg, params, EngineConfig(max_seqs=1, max_seq_len=64,
-                                                attn_backend="flash"))
+                                                attn_backend=paged_backend))
         rs = solo.submit(p, max_new_tokens=14)
         solo.run()
         assert r.out == rs.out, (r.rid, r.out, rs.out)
@@ -224,7 +250,7 @@ def test_key_conv_admitted_and_served():
     cfg = get_smoke_config("moba-340m", key_conv_width=3)
     params = T.init_lm(jax.random.PRNGKey(0), cfg)
     assert engine_supported(cfg)
-    for name in ("reference", "xla", "flash"):
+    for name in ("reference",) + PAGED_BACKENDS:
         assert B.resolve(name, kind="moba", phase="decode", cache="paged",
                          key_conv=True).name == name
     eng = Engine(cfg, params, EngineConfig(max_seqs=2, max_seq_len=64))
