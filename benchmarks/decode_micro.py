@@ -1,17 +1,38 @@
 """Paged-decode microbenchmark: XLA gather-and-densify vs fused Pallas.
 
 Runs one decode-attention step (routing + page gather + attend) against a
-populated page pool across context lengths × block sizes, for both the
-XLA path (`core.moba.moba_paged_decode_attention`) and the fused
-scalar-prefetched Pallas kernel (`kernels.moba_decode`).  As with
-``kernels_micro``, interpret-mode wall time is not TPU-meaningful; the
-recorded signal is (a) the two paths agree at benchmark shapes and (b)
-the analytic per-step HBM bytes each path moves (the XLA path
-materializes the (B,Hkv,G,1,k,ps,d) gather in HBM; the kernel streams
-pages once), which is the §Roofline memory-side input for decode.
+populated page pool across context lengths × block sizes, for three
+paths: the XLA gather path (`core.moba.moba_paged_decode_attention`),
+the grouped MXU-tiled Pallas kernel and the legacy flat Pallas grid
+(`kernels.moba_decode`, DESIGN.md §5).  As with ``kernels_micro``,
+interpret-mode wall time is not TPU-meaningful; the recorded signal is
+(a) the paths agree at benchmark shapes and (b) the analytic per-step
+HBM bytes each path moves — the §Roofline memory-side input for decode.
+
+Analytic HBM accounting (fp32 = 4 bytes, K and V both counted):
+
+  route            every path reads the B·npg·Hkv·d centroid gather
+  xla              gathers per *query* head with no dedup — source
+                   reads + the densified (B,H,k,ps,d) copy written then
+                   re-read: 3 × B·H·k·ps·d·8
+  pallas_flat      per-(query head, slot) page streamed once from the
+                   pool: B·H·k·ps·d·8
+  pallas_grouped   per-kv-head deduplicated union of the group's pages
+                   (Σ n_uniq, measured from the actual routing):
+                   Σ n_uniq·ps·d·8
+
+``--json out.json`` writes the stable machine-readable schema consumed
+by the CI ``bench-smoke`` job (see ``_report``): shapes, per-path
+``hbm_bytes`` / ``wall_us`` / ``max_abs_diff_vs_xla``, and a top-level
+``agree`` verdict.  The process exits non-zero when any path disagrees
+with the XLA oracle beyond ``AGREE_TOL``, so the CI leg fails on
+numerical drift, not just on crashes.
 """
 from __future__ import annotations
 
+import argparse
+import json
+import sys
 import time
 
 import jax
@@ -21,6 +42,13 @@ import numpy as np
 from repro.configs.base import MoBAConfig
 from repro.core import moba as M
 from repro.kernels import moba_decode as MD
+from repro.kernels.runtime import resolve_interpret
+
+SCHEMA_VERSION = 1
+AGREE_TOL = 1e-3
+ITERS = 3
+SHAPES = [(512, 64, 4), (1024, 64, 4), (1024, 128, 4)]   # (ctx, ps, top_k)
+SMOKE_SHAPES = [(256, 32, 2)]
 
 
 def _build_pool(rng, b, n_ctx, hkv, d, ps):
@@ -46,39 +74,132 @@ def _build_pool(rng, b, n_ctx, hkv, d, ps):
     return cache, jnp.asarray(table), jnp.asarray(kv_lens)
 
 
-def bench():
-    rows = []
+def _hbm_bytes(path, *, b, h, hkv, d, ps, tk, npg, union_pages):
+    route = b * npg * hkv * d * 4
+    per_head = b * h * tk * ps * d * 4 * 2            # K and V, no dedup
+    if path == "xla":
+        return route + 3 * per_head                   # src + copy w/r
+    if path == "pallas_flat":
+        return route + per_head
+    if path == "pallas_grouped":
+        return route + union_pages * ps * d * 4 * 2
+    raise ValueError(path)
+
+
+def run_cases(shapes):
+    cases = []
     b, h, hkv, d = 4, 4, 2, 64
-    for (n_ctx, bs, tk) in [(512, 64, 4), (1024, 64, 4), (1024, 128, 4)]:
-        cfg = MoBAConfig(block_size=bs, top_k=tk)
-        rng = np.random.default_rng(n_ctx + bs)
-        cache, table, kv_lens = _build_pool(rng, b, n_ctx, hkv, d, bs)
+    for (n_ctx, ps, tk) in shapes:
+        cfg = MoBAConfig(block_size=ps, top_k=tk)
+        rng = np.random.default_rng(n_ctx + ps)
+        cache, table, kv_lens = _build_pool(rng, b, n_ctx, hkv, d, ps)
         q = jnp.asarray(rng.normal(size=(b, h, 1, d)), jnp.float32)
         args = (q, cache["pages_k"], cache["pages_v"], cache["centroids"],
-                table, kv_lens, cfg)
+                table, kv_lens)
+        npg = table.shape[1]
 
-        xla_fn = jax.jit(lambda *a: M.moba_paged_decode_attention(*a, cfg))
-        pl_fn = jax.jit(lambda *a: MD.moba_paged_decode_pallas(*a, cfg))
-        o_x = xla_fn(*args[:-1]).block_until_ready()
-        o_p = pl_fn(*args[:-1]).block_until_ready()
-        err = float(jnp.abs(o_x - o_p).max())
+        # measured union size: the grouped grid's realized page count
+        idx, sel_valid = M.moba_paged_route(q, cache["centroids"], table,
+                                            kv_lens, cfg, page_size=ps)
+        _, n_uniq = MD.union_pages(idx, sel_valid, npg)
+        union_pages = int(jnp.sum(n_uniq))
 
-        for name, fn in (("xla", xla_fn), ("pallas", pl_fn)):
-            t0 = time.time()
-            for _ in range(3):
-                fn(*args[:-1]).block_until_ready()
-            us = (time.time() - t0) / 3 * 1e6
-            npg = table.shape[1]
-            # per-step HBM bytes (fp32): routing reads + page reads, plus
-            # the densified gather copy the XLA path writes and re-reads
-            route = b * npg * hkv * d * 4
-            pages = b * hkv * tk * bs * d * 4 * 2          # K and V
-            gather = pages * 2 * (h // hkv) if name == "xla" else 0
-            rows.append((f"paged_decode_{name}_N{n_ctx}_B{bs}", us,
-                         f"maxerr={err:.1e};hbm_bytes={route+pages+gather:.2e}"))
+        fns = {
+            "xla": jax.jit(
+                lambda *a, c=cfg: M.moba_paged_decode_attention(*a, c)),
+            "pallas_grouped": jax.jit(
+                lambda *a, c=cfg: MD.moba_paged_decode_pallas(
+                    *a, c, grid="grouped")),
+            "pallas_flat": jax.jit(
+                lambda *a, c=cfg: MD.moba_paged_decode_pallas(
+                    *a, c, grid="flat")),
+        }
+        outs = {name: np.asarray(fn(*args).block_until_ready())
+                for name, fn in fns.items()}
+        active = np.asarray(kv_lens) > 0  # kv_len==0 rows: kernels emit
+        #                                   zeros, XLA emits garbage
+
+        paths = {}
+        for name, fn in fns.items():
+            t0 = time.perf_counter()
+            for _ in range(ITERS):
+                fn(*args).block_until_ready()
+            wall_us = (time.perf_counter() - t0) / ITERS * 1e6
+            err = float(np.abs(outs[name][active]
+                               - outs["xla"][active]).max())
+            paths[name] = {
+                "wall_us": wall_us,
+                "hbm_bytes": _hbm_bytes(name, b=b, h=h, hkv=hkv, d=d,
+                                        ps=ps, tk=tk, npg=npg,
+                                        union_pages=union_pages),
+                "max_abs_diff_vs_xla": err,
+            }
+        cases.append({
+            "name": f"paged_decode_N{n_ctx}_B{ps}",
+            "shape": {"batch": b, "heads": h, "kv_heads": hkv,
+                      "head_dim": d, "ctx": n_ctx, "page_size": ps,
+                      "top_k": tk, "pages_per_seq": npg},
+            "union_pages": union_pages,
+            "agree_tol": AGREE_TOL,
+            "agree": all(p["max_abs_diff_vs_xla"] <= AGREE_TOL
+                         for p in paths.values()),
+            "paths": paths,
+        })
+    return cases
+
+
+def _report(cases):
+    return {
+        "benchmark": "decode_micro",
+        "schema_version": SCHEMA_VERSION,
+        "dtype": "float32",
+        "jax_version": jax.__version__,
+        "device": jax.default_backend(),
+        "interpret": resolve_interpret(None),
+        "agree_tol": AGREE_TOL,
+        "agree": all(c["agree"] for c in cases),
+        "cases": cases,
+    }
+
+
+def bench():
+    """run.py hook: flatten the JSON cases into its CSV row format."""
+    rows = []
+    for case in run_cases(SHAPES):
+        for pname, p in case["paths"].items():
+            rows.append((f"{case['name']}_{pname}", p["wall_us"],
+                         f"maxerr={p['max_abs_diff_vs_xla']:.1e};"
+                         f"hbm_bytes={p['hbm_bytes']:.2e}"))
     return rows
 
 
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--json", metavar="OUT",
+                    help="write the machine-readable report here "
+                         "(the BENCH_decode.json schema)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="one small shape only (the CI bench-smoke leg)")
+    args = ap.parse_args(argv)
+    cases = run_cases(SMOKE_SHAPES if args.smoke else SHAPES)
+    report = _report(cases)
+    if args.json:
+        with open(args.json, "w", encoding="utf-8") as f:
+            json.dump(report, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {args.json}", file=sys.stderr)
+    for case in cases:
+        for pname, p in case["paths"].items():
+            print(f"{case['name']}_{pname},{p['wall_us']:.1f},"
+                  f"maxerr={p['max_abs_diff_vs_xla']:.1e};"
+                  f"hbm_bytes={p['hbm_bytes']:.2e}")
+    if not report["agree"]:
+        bad = [c["name"] for c in cases if not c["agree"]]
+        print(f"PATH DISAGREEMENT beyond {AGREE_TOL}: {bad}",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
 if __name__ == "__main__":
-    for r in bench():
-        print(r)
+    raise SystemExit(main())

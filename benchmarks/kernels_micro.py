@@ -4,40 +4,109 @@ Wall-time in interpret mode is not meaningful for TPU perf; what this
 records is that each kernel runs and matches its oracle at benchmark
 shapes, plus the analytic FLOPs each kernel performs (the §Roofline
 compute-side inputs for the kernel path).
+
+``--json out.json`` writes the same stable schema family as
+``decode_micro`` (per-case shapes, wall time, agreement vs the
+reference oracle, analytic FLOPs); the process exits non-zero when any
+case disagrees beyond ``AGREE_TOL``.
 """
 from __future__ import annotations
 
+import argparse
+import json
+import sys
 import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import MoBAConfig
 from repro.core import moba as M
 from repro.kernels import ops
+from repro.kernels.runtime import resolve_interpret
+
+SCHEMA_VERSION = 1
+AGREE_TOL = 5e-3
+SHAPES = [(512, 64, 2, 64), (1024, 128, 2, 64)]    # (n, bs, top_k, d)
+SMOKE_SHAPES = [(256, 32, 2, 32)]
 
 
-def bench():
-    rows = []
-    for (n, bs, k, d) in [(512, 64, 2, 64), (1024, 128, 2, 64)]:
+def run_cases(shapes):
+    cases = []
+    for (n, bs, k, d) in shapes:
         cfg = MoBAConfig(block_size=bs, top_k=k)
         keys = jax.random.split(jax.random.PRNGKey(n), 3)
         q = jax.random.normal(keys[0], (1, 2, n, d), jnp.float32) * 0.5
         kk = jax.random.normal(keys[1], (1, 1, n, d), jnp.float32) * 0.5
         v = jax.random.normal(keys[2], (1, 1, n, d), jnp.float32)
-        t0 = time.time()
+        t0 = time.perf_counter()
         o = ops.flash_moba(q, kk, v, cfg, q_tile=128)
         o.block_until_ready()
-        us = (time.time() - t0) * 1e6
+        wall_us = (time.perf_counter() - t0) * 1e6
         oref = M.moba_attention_reference(q, kk, v, cfg)
         err = float(jnp.abs(o - oref).max())
         flops = 2 * 2 * n * k * bs * d * 2 + 2 * n * (n // bs) * d * 2
-        rows.append((f"flash_moba_N{n}_B{bs}", us,
-                     f"maxerr={err:.1e};flops={flops:.2e}"))
-    return rows
+        cases.append({
+            "name": f"flash_moba_N{n}_B{bs}",
+            "shape": {"batch": 1, "heads": 2, "kv_heads": 1,
+                      "head_dim": d, "seq_len": n, "block_size": bs,
+                      "top_k": k},
+            "wall_us": wall_us,
+            "flops": flops,
+            "max_abs_diff_vs_reference": err,
+            "agree_tol": AGREE_TOL,
+            "agree": err <= AGREE_TOL,
+        })
+    return cases
+
+
+def _report(cases):
+    return {
+        "benchmark": "kernels_micro",
+        "schema_version": SCHEMA_VERSION,
+        "dtype": "float32",
+        "jax_version": jax.__version__,
+        "device": jax.default_backend(),
+        "interpret": resolve_interpret(None),
+        "agree_tol": AGREE_TOL,
+        "agree": all(c["agree"] for c in cases),
+        "cases": cases,
+    }
+
+
+def bench():
+    """run.py hook: flatten the JSON cases into its CSV row format."""
+    return [(c["name"], c["wall_us"],
+             f"maxerr={c['max_abs_diff_vs_reference']:.1e};"
+             f"flops={c['flops']:.2e}")
+            for c in run_cases(SHAPES)]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--json", metavar="OUT",
+                    help="write the machine-readable report here")
+    ap.add_argument("--smoke", action="store_true",
+                    help="one small shape only (CI)")
+    args = ap.parse_args(argv)
+    cases = run_cases(SMOKE_SHAPES if args.smoke else SHAPES)
+    report = _report(cases)
+    if args.json:
+        with open(args.json, "w", encoding="utf-8") as f:
+            json.dump(report, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {args.json}", file=sys.stderr)
+    for c in cases:
+        print(f"{c['name']},{c['wall_us']:.1f},"
+              f"maxerr={c['max_abs_diff_vs_reference']:.1e};"
+              f"flops={c['flops']:.2e}")
+    if not report["agree"]:
+        bad = [c["name"] for c in cases if not c["agree"]]
+        print(f"ORACLE DISAGREEMENT beyond {AGREE_TOL}: {bad}",
+              file=sys.stderr)
+        return 1
+    return 0
 
 
 if __name__ == "__main__":
-    for r in bench():
-        print(r)
+    raise SystemExit(main())

@@ -11,7 +11,6 @@ import time
 
 import numpy as np
 
-from repro.launch.train import train
 
 
 def run(steps: int = 120, batch: int = 8, seq: int = 256, seed: int = 0):

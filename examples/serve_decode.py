@@ -22,7 +22,9 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--attn-backend", default="reference",
-                    help="registered attention backend (core.backends)")
+                    help="registered attention backend (core.backends); "
+                         "Pallas backends take an option suffix, e.g. "
+                         "flash:compiled or flash:flat")
     ap.add_argument("--prefill-chunk", type=int, default=0,
                     help="chunked prefill token budget per engine step "
                          "(0 = whole-prompt prefill)")

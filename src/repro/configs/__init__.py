@@ -2,12 +2,11 @@
 from __future__ import annotations
 
 import importlib
-from typing import Callable, Dict
 
-from repro.configs.base import (ASSIGNED_SHAPES, AttentionConfig, Config,
-                                MeshConfig, MoBAConfig, ModelConfig,
-                                MoEConfig, ServeConfig, ShardingConfig,
-                                SSMConfig, TrainConfig, with_moba)
+from repro.configs.base import (  # noqa: F401  (public re-exports)
+    ASSIGNED_SHAPES, AttentionConfig, Config, MeshConfig, MoBAConfig,
+    ModelConfig, MoEConfig, ServeConfig, ShardingConfig, SSMConfig,
+    TrainConfig, with_moba)
 
 # assigned architectures (10) + the paper's own models (2)
 ARCHS = {

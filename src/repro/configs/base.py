@@ -8,7 +8,7 @@ smoke tests).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence, Tuple
+from typing import Optional, Tuple
 
 
 @dataclasses.dataclass(frozen=True)
@@ -89,7 +89,8 @@ class ModelConfig:
     rms_norm_eps: float = 1e-6
     # attention layout: a repeating pattern of per-layer attention kinds,
     # e.g. ("swa", "moba"). Length must divide num_layers.
-    attention: AttentionConfig = dataclasses.field(default_factory=AttentionConfig)
+    attention: AttentionConfig = dataclasses.field(
+        default_factory=AttentionConfig)
     layer_pattern: Tuple[str, ...] = ("dense",)
     moe: MoEConfig = dataclasses.field(default_factory=MoEConfig)
     ssm: SSMConfig = dataclasses.field(default_factory=SSMConfig)
@@ -165,7 +166,8 @@ class ServeConfig:
 class Config:
     model: ModelConfig
     mesh: MeshConfig = dataclasses.field(default_factory=MeshConfig)
-    sharding: ShardingConfig = dataclasses.field(default_factory=ShardingConfig)
+    sharding: ShardingConfig = dataclasses.field(
+        default_factory=ShardingConfig)
     train: TrainConfig = dataclasses.field(default_factory=TrainConfig)
     serve: ServeConfig = dataclasses.field(default_factory=ServeConfig)
 

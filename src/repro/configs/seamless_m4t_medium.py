@@ -5,7 +5,7 @@ The audio frontend is a STUB: ``input_specs()`` provides precomputed frame
 embeddings (B, T_src, d) to the bidirectional encoder; the decoder is
 causal with cross-attention.  MoBA applies to decoder self-attn (causal)
 and encoder self-attn (bidirectional variant); cross-attn stays dense."""
-from repro.configs.base import AttentionConfig, ModelConfig, with_moba
+from repro.configs.base import ModelConfig, with_moba
 
 NUM_AUDIO_FRAMES = 1024
 

@@ -5,8 +5,7 @@ vocab=32000, ssm_state=64 — Mamba2 backbone + shared attention blocks.
 Layout: 2 groups × (18 mamba2 blocks + 1 shared-weight attention block)
 = 38 layers; the attention block's parameters are a single shared copy
 (zamba2's signature trick).  MoBA applies to the shared attention block."""
-from repro.configs.base import (AttentionConfig, ModelConfig, SSMConfig,
-                                with_moba)
+from repro.configs.base import ModelConfig, SSMConfig, with_moba
 
 _PATTERN = ("ssm",) * 9 + ("shared_attn",) + ("ssm",) * 9
 

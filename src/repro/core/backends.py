@@ -265,15 +265,21 @@ class FlashBackend(AttentionBackend):
 
     name = "flash"
     aliases = ("kernel", "pallas")
-    # interpret mode is the validated default everywhere: compiled
-    # lowering needs the decode kernel's (ps, d) blocks padded to TPU
-    # tiles first (ROADMAP "Compiled-mode tiling").  Flip per-call via
-    # opts or globally via `backends.get("flash").interpret = False`
-    # once that lands.
-    interpret: bool = True
+    # interpret vs compiled Pallas lowering.  None defers to
+    # `kernels.runtime.resolve_interpret`: the REPRO_PALLAS_INTERPRET
+    # env var if set, else compiled on TPU hosts / interpret everywhere
+    # else — CPU CI and a TPU pod run the same code with no edits.
+    # Override per call via opts, per process via
+    # `backends.get("flash").interpret = False`, or per CLI via
+    # `--attn-backend flash:compiled` (see :func:`parse_backend_spec`).
+    interpret: Optional[bool] = None
+    # paged-decode grid: "grouped" = (B·Hkv, U) MXU tiles (default),
+    # "flat" = legacy (B·H, top_k) per-query-head VPU products
+    decode_grid: str = "grouped"
 
     def _interpret(self, opts) -> bool:
-        return bool(opts.get("interpret", self.interpret))
+        from repro.kernels.runtime import resolve_interpret
+        return resolve_interpret(opts.get("interpret", self.interpret))
 
     def moba_prefill(self, cfg, q, k, v, *, q_positions=None, **opts):
         from repro.kernels import ops
@@ -286,7 +292,8 @@ class FlashBackend(AttentionBackend):
         return moba_decode.moba_paged_decode_pallas(
             q, cache["pages_k"], cache["pages_v"], cache["centroids"],
             block_table, kv_len, cfg.moba, scale=cfg.scale,
-            interpret=self._interpret(opts))
+            interpret=self._interpret(opts),
+            grid=opts.get("grid", self.decode_grid))
 
 
 class SPBackend(AttentionBackend):
@@ -376,6 +383,41 @@ def get(name: str) -> AttentionBackend:
             f"unknown attention backend {name!r}; registered: "
             f"{sorted(_ALIASES)}")
     return _REGISTRY[canonical]
+
+
+def parse_backend_spec(spec: str) -> str:
+    """``name[:option]`` → registered backend name, applying the option
+    to the backend instance — the one string every CLI/EngineConfig
+    surface accepts (``--attn-backend flash:compiled``).
+
+    Options: ``interpret`` / ``compiled`` toggle the Pallas lowering on
+    backends that expose an ``interpret`` attribute (process-wide, like
+    setting ``backends.get(name).interpret`` directly); ``grouped`` /
+    ``flat`` select the paged-decode grid on backends with a
+    ``decode_grid`` attribute.  Unknown names or options raise
+    :class:`BackendCapabilityError`.
+    """
+    name, _, opt = spec.partition(":")
+    if not opt:
+        return name
+    be = get(name)
+    if opt in ("interpret", "compiled"):
+        if not hasattr(be, "interpret"):
+            raise BackendCapabilityError(
+                f"backend {be.name!r} has no interpret/compiled toggle "
+                f"(only Pallas backends do); got {spec!r}")
+        be.interpret = opt == "interpret"
+    elif opt in ("grouped", "flat"):
+        if not hasattr(be, "decode_grid"):
+            raise BackendCapabilityError(
+                f"backend {be.name!r} has no decode-grid option; "
+                f"got {spec!r}")
+        be.decode_grid = opt
+    else:
+        raise BackendCapabilityError(
+            f"unknown backend option {opt!r} in {spec!r}; expected "
+            f"interpret | compiled | grouped | flat")
+    return name
 
 
 def resolve(name: str, *, kind: str, phase: str, cache: str = "dense",

@@ -11,7 +11,6 @@ index remapping; here expressed via reshape).
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

@@ -16,8 +16,7 @@ Selection semantics (faithful to the paper / Lu et al.):
 """
 from __future__ import annotations
 
-import functools
-from typing import NamedTuple, Tuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -145,8 +144,9 @@ def build_varlen_layout(top_idx: jax.Array, nq: int, nb: int,
     padded_counts = ((counts + tile - 1) // tile) * tile
     # sentinel pairs live in the trailing region; give them whatever space
     # remains so slot indices stay in-bounds.
-    starts = jnp.concatenate([jnp.zeros(1, jnp.int32),
-                              jnp.cumsum(padded_counts[:-1]).astype(jnp.int32)])
+    starts = jnp.concatenate(
+        [jnp.zeros(1, jnp.int32),
+         jnp.cumsum(padded_counts[:-1]).astype(jnp.int32)])
     offsets = jnp.concatenate([jnp.zeros(1, jnp.int32),
                                jnp.cumsum(counts[:-1]).astype(jnp.int32)])
 

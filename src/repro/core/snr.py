@@ -35,7 +35,6 @@ def p_fail(d: int, block_size: int, delta_mu_eff: float) -> float:
 def required_snr(num_blocks: int, top_k: int) -> float:
     """SNR needed for reliable top-k retrieval among n blocks:
     SNR > Φ⁻¹(1 − k/n)  (paper App. A.4)."""
-    from math import sqrt
     q = 1.0 - top_k / num_blocks
     # inverse normal CDF via Acklam-style rational approx (scipy-free)
     return _norm_ppf(q)
@@ -59,16 +58,22 @@ def _norm_ppf(p: float) -> float:
     plow, phigh = 0.02425, 1 - 0.02425
     if p < plow:
         ql = math.sqrt(-2 * math.log(p))
-        return (((((c[0] * ql + c[1]) * ql + c[2]) * ql + c[3]) * ql + c[4]) * ql + c[5]) / \
-               ((((dd[0] * ql + dd[1]) * ql + dd[2]) * ql + dd[3]) * ql + 1)
+        num = ((((c[0] * ql + c[1]) * ql + c[2]) * ql + c[3]) * ql + c[4])
+        num = num * ql + c[5]
+        den = (((dd[0] * ql + dd[1]) * ql + dd[2]) * ql + dd[3]) * ql + 1
+        return num / den
     if p > phigh:
         ql = math.sqrt(-2 * math.log(1 - p))
-        return -(((((c[0] * ql + c[1]) * ql + c[2]) * ql + c[3]) * ql + c[4]) * ql + c[5]) / \
-               ((((dd[0] * ql + dd[1]) * ql + dd[2]) * ql + dd[3]) * ql + 1)
+        num = ((((c[0] * ql + c[1]) * ql + c[2]) * ql + c[3]) * ql + c[4])
+        num = num * ql + c[5]
+        den = (((dd[0] * ql + dd[1]) * ql + dd[2]) * ql + dd[3]) * ql + 1
+        return -num / den
     ql = p - 0.5
     r = ql * ql
-    return (((((a[0] * r + a[1]) * r + a[2]) * r + a[3]) * r + a[4]) * r + a[5]) * ql / \
-           (((((b[0] * r + b[1]) * r + b[2]) * r + b[3]) * r + b[4]) * r + 1)
+    num = ((((a[0] * r + a[1]) * r + a[2]) * r + a[3]) * r + a[4])
+    num = (num * r + a[5]) * ql
+    den = ((((b[0] * r + b[1]) * r + b[2]) * r + b[3]) * r + b[4]) * r + 1
+    return num / den
 
 
 class PlantedProblem(NamedTuple):

@@ -7,7 +7,7 @@ benchmarks/table34_niah.py and the SNR validation.
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict
 
 import numpy as np
 

@@ -22,7 +22,6 @@ head-sharded sort triggers involuntary full rematerialization (measured:
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

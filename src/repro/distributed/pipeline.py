@@ -9,12 +9,11 @@ schedule symmetrically.
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 
 def pipeline_forward(stage_fn: Callable, params_stacked, x, mesh: Mesh,

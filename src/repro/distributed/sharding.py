@@ -16,7 +16,6 @@ from contextlib import contextmanager
 from typing import Optional, Sequence, Tuple
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import MeshConfig, ShardingConfig
@@ -29,7 +28,9 @@ def use_mesh(mesh: Mesh, cfg: ShardingConfig):
     prev = dict(_ACTIVE)
     _ACTIVE.update(mesh=mesh, cfg=cfg)
     try:
-        with jax.sharding.use_mesh(mesh) if hasattr(jax.sharding, "use_mesh") else mesh:
+        use = (jax.sharding.use_mesh(mesh)
+               if hasattr(jax.sharding, "use_mesh") else mesh)
+        with use:
             yield
     finally:
         _ACTIVE.update(prev)

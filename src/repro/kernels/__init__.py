@@ -1,1 +1,2 @@
+from repro.kernels.runtime import ENV_VAR, resolve_interpret  # noqa: F401
 from repro.kernels import moba_decode, ops, ref  # noqa: F401

@@ -14,7 +14,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.runtime import resolve_interpret
 
 
 def _centroid_kernel(k_ref, out_ref, *, block_size: int, n_tokens: int):
@@ -30,9 +31,10 @@ def _centroid_kernel(k_ref, out_ref, *, block_size: int, n_tokens: int):
 
 
 def block_centroids_kernel(k: jax.Array, block_size: int,
-                           interpret: bool = True) -> jax.Array:
+                           interpret: bool | None = None) -> jax.Array:
     """k: (H, N, d) -> (H, nb, d).  N padded to a block multiple by caller
     or handled via the ragged-tail mask here."""
+    interpret = resolve_interpret(interpret)
     h, n, d = k.shape
     nb = -(-n // block_size)
     pad = nb * block_size - n

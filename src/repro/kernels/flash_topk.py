@@ -23,6 +23,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.runtime import resolve_interpret
+
 NEG_INF = -1e30       # mask level (matches core.routing)
 EXTRACTED = -2e30     # strictly below mask level: never re-picked as valid
 INIT = -3e30
@@ -87,13 +89,15 @@ def flash_topk(q: jax.Array, centroids: jax.Array, top_k: int,
                block_size: int, *, group: int = 1,
                num_q_heads: int = 0, causal: bool = True,
                q_pos_offset: int = 0, q_tile: int = 128,
-               cent_tile: int = 128, interpret: bool = True) -> jax.Array:
+               cent_tile: int = 128,
+               interpret: bool | None = None) -> jax.Array:
     """q: (BH, Nq, d); centroids: (BKV, nb, d) where the leading dims are
     flattened (batch · heads) and BH = batch*H, BKV = batch*Hkv,
     H = Hkv*group.  ``num_q_heads`` is H (defaults to BH: single batch).
 
     Returns (BH, Nq, top_k) int32 selected block ids (sentinel nb).
     """
+    interpret = resolve_interpret(interpret)
     bh, nq, d = q.shape
     bkv, nb, _ = centroids.shape
     h = num_q_heads or bh

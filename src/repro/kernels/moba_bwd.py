@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.runtime import resolve_interpret
+
 NEG_INF = -1e30
 
 
@@ -82,7 +84,7 @@ def moba_bwd(tile_block: jax.Array, q_sorted: jax.Array, q_pos: jax.Array,
              v_blocks: jax.Array, *, scale: float, block_size: int,
              n_tokens: int, num_q_heads: int, group: int,
              causal: bool = True, q_tile: int = 128,
-             interpret: bool = True
+             interpret: bool | None = None
              ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Backward over flattened (batch·head) layouts.
 
@@ -91,6 +93,7 @@ def moba_bwd(tile_block: jax.Array, q_sorted: jax.Array, q_pos: jax.Array,
     flags (unvisited blocks hold garbage) and (b) reduced over the GQA
     group by the wrapper.
     """
+    interpret = resolve_interpret(interpret)
     bh, L, d = q_sorted.shape
     bkv, nb, bs, _ = k_blocks.shape
     n_tiles = L // q_tile

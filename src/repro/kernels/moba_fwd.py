@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.runtime import resolve_interpret
+
 NEG_INF = -1e30
 
 
@@ -66,7 +68,7 @@ def moba_fwd(tile_block: jax.Array, q_sorted: jax.Array, q_pos: jax.Array,
              k_blocks: jax.Array, v_blocks: jax.Array, *,
              scale: float, block_size: int, n_tokens: int,
              num_q_heads: int, group: int, causal: bool = True,
-             q_tile: int = 128, interpret: bool = True
+             q_tile: int = 128, interpret: bool | None = None
              ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Run the forward kernel over flattened (batch·head) layouts.
 
@@ -76,6 +78,7 @@ def moba_fwd(tile_block: jax.Array, q_sorted: jax.Array, q_pos: jax.Array,
 
     Returns (o_partial (BH, L, d) f32, m (BH, L) f32, l (BH, L) f32).
     """
+    interpret = resolve_interpret(interpret)
     bh, L, d = q_sorted.shape
     bkv, nb, bs, _ = k_blocks.shape
     n_tiles = L // q_tile

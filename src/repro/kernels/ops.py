@@ -15,13 +15,14 @@ key convolution learn clustering (paper App. B.2).
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple, Optional, Tuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import MoBAConfig
 from repro.core import routing
+from repro.kernels.runtime import resolve_interpret
 from repro.kernels import ref as kref
 from repro.kernels.centroids import block_centroids_kernel
 from repro.kernels.flash_topk import flash_topk
@@ -166,7 +167,7 @@ _flash_moba.defvjp(_flash_moba_fwd, _flash_moba_bwd)
 def flash_moba(q: jax.Array, k: jax.Array, v: jax.Array, cfg: MoBAConfig,
                q_positions: Optional[jax.Array] = None,
                scale: Optional[float] = None, q_tile: int = 128,
-               interpret: bool = True) -> jax.Array:
+               interpret: Optional[bool] = None) -> jax.Array:
     """FlashMoBA attention (Pallas kernel path).
 
     q (B,H,Nq,d); k,v (B,Hkv,N,d).  ``q_positions`` must be the contiguous
@@ -176,5 +177,5 @@ def flash_moba(q: jax.Array, k: jax.Array, v: jax.Array, cfg: MoBAConfig,
     if scale is None:
         scale = 1.0 / (q.shape[-1] ** 0.5)
     meta = _Meta(cfg.block_size, cfg.top_k, cfg.causal,
-                 q_tile, float(scale), interpret)
+                 q_tile, float(scale), resolve_interpret(interpret))
     return _flash_moba(q, k, v, meta)

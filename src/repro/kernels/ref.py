@@ -7,7 +7,6 @@ Single-(batch·head) shapes here; batching handled by callers/vmap.
 """
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple, Optional, Tuple
 
 import jax

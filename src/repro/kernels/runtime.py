@@ -1,0 +1,44 @@
+"""Kernel-runtime policy: interpret vs compiled Pallas lowering.
+
+Every Pallas wrapper in ``repro.kernels`` takes ``interpret=None`` and
+resolves it here, so the repo has exactly ONE switch instead of
+hardcoded per-kernel defaults (DESIGN.md §5):
+
+  1. an explicit ``interpret=`` argument (or backend ``opts`` entry)
+     always wins;
+  2. else the ``REPRO_PALLAS_INTERPRET`` environment variable
+     (``1/true/on/interpret`` vs ``0/false/off/compiled``);
+  3. else auto-detect: compiled on TPU hosts, interpret everywhere
+     else — so CPU CI and a real TPU pod run the same code with no
+     edits, which is the whole point of the toggle.
+
+CLI surfaces reach the same switch through the backend registry
+(``--attn-backend flash:compiled`` / ``flash:interpret``, see
+``core.backends.parse_backend_spec``).
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+ENV_VAR = "REPRO_PALLAS_INTERPRET"
+_TRUE = ("1", "true", "yes", "on", "interpret")
+_FALSE = ("0", "false", "no", "off", "compiled")
+
+
+def resolve_interpret(interpret: Optional[bool] = None) -> bool:
+    """Resolve an ``interpret`` request to a concrete bool (see module
+    docstring for the precedence chain)."""
+    if interpret is not None:
+        return bool(interpret)
+    env = os.environ.get(ENV_VAR, "").strip().lower()
+    if env in _TRUE:
+        return True
+    if env in _FALSE:
+        return False
+    if env:
+        raise ValueError(
+            f"{ENV_VAR}={env!r}: expected one of "
+            f"{', '.join(_TRUE + _FALSE)}")
+    import jax
+    return jax.default_backend() != "tpu"

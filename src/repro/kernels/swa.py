@@ -16,6 +16,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.runtime import resolve_interpret
+
 NEG_INF = -1e30
 
 
@@ -75,8 +77,10 @@ def _swa_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 def swa_attention(q: jax.Array, k: jax.Array, v: jax.Array, window: int,
                   *, num_q_heads: int = 0, group: int = 1,
                   scale: Optional[float] = None, q_tile: int = 128,
-                  k_tile: int = 128, interpret: bool = True) -> jax.Array:
+                  k_tile: int = 128,
+                  interpret: Optional[bool] = None) -> jax.Array:
     """q: (BH, N, d); k, v: (BKV, N, d); BH = batch·H, BKV = batch·Hkv."""
+    interpret = resolve_interpret(interpret)
     bh, n, d = q.shape
     h = num_q_heads or bh
     if scale is None:

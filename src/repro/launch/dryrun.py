@@ -167,8 +167,8 @@ def lower_cell(arch: str, shape: str, multi_pod: bool,
               f" out={ma.output_size_in_bytes/1e9:.2f}GB (per device)")
         print(f"  flops/dev={rl.flops_per_device:.3e}"
               f" bytes/dev={rl.bytes_per_device:.3e}")
-        print(f"  collectives/dev: "
-              f"{ {k: f'{v/1e6:.1f}MB' for k, v in rl.coll_breakdown.items()} }")
+        mb = {k: f"{v/1e6:.1f}MB" for k, v in rl.coll_breakdown.items()}
+        print(f"  collectives/dev: {mb}")
         print(f"  terms: compute={rl.t_compute:.3e}s memory={rl.t_memory:.3e}s"
               f" collective={rl.t_collective:.3e}s -> {rl.bottleneck}-bound,"
               f" useful={rl.useful_flops_ratio:.2f},"

@@ -6,7 +6,6 @@ calling it.
 """
 from __future__ import annotations
 
-import jax
 
 from repro.configs.base import MeshConfig
 from repro.distributed.sharding import make_compat_mesh

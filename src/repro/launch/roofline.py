@@ -16,9 +16,8 @@ its payload per device; others ~1×).
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
-from typing import Dict, Optional
+from typing import Dict
 
 PEAK_FLOPS = 197e12       # bf16 / chip
 HBM_BW = 819e9            # B/s / chip

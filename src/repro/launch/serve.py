@@ -152,6 +152,8 @@ def serve_fixed(arch: str, batch: int = 4, prompt_len: int = 64,
     """Legacy synchronous loop: one dense-cache prefill + lockstep greedy
     decode.  Baseline for benchmarks and the fallback for recurrent /
     enc-dec / cross-attention archs the paged engine does not cover."""
+    from repro.core import backends as B
+    attn_backend = B.parse_backend_spec(attn_backend)
     cfg = configs.get_smoke_config(arch) if smoke else configs.get_config(arch)
     params = T.init_lm(jax.random.PRNGKey(seed), cfg)
     rng = np.random.default_rng(seed)
@@ -221,9 +223,16 @@ def main():
                          "comes from --max-seqs / --num-pages")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--attn-backend", default=None,
-                    help="registered attention backend "
-                         "(reference | xla | flash | sp, see "
-                         "core.backends; default reference)")
+                    help="registered attention backend, optionally with "
+                         "a backend option suffix "
+                         "(reference | xla | flash | sp | ..., see "
+                         "core.backends; default reference).  Pallas "
+                         "backends take :interpret / :compiled to force "
+                         "the lowering mode and :grouped / :flat to pick "
+                         "the paged-decode grid, e.g. "
+                         "--attn-backend flash:compiled; default is the "
+                         "REPRO_PALLAS_INTERPRET env var, else compiled "
+                         "on TPU hosts and interpret elsewhere")
     ap.add_argument("--moba-impl", default=None,
                     help="deprecated alias for --attn-backend")
     ap.add_argument("--seed", type=int, default=0)

@@ -2,15 +2,13 @@
 train.py, serve.py and dryrun.py."""
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.configs.base import (ASSIGNED_SHAPES, ModelConfig,
-                                ShardingConfig, TrainConfig)
+from repro.configs.base import ASSIGNED_SHAPES, ModelConfig, TrainConfig
 from repro.distributed import sharding as shmod
 from repro.models import api
 from repro.models import transformer as T

@@ -21,7 +21,7 @@ import numpy as np
 from repro import configs
 from repro.checkpoint.manager import CheckpointManager
 from repro.distributed.monitor import HeartbeatMonitor
-from repro.configs.base import ShardingConfig, TrainConfig
+from repro.configs.base import TrainConfig
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.launch import steps as S
 from repro.models import transformer as T

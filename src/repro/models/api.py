@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import functools
 import math
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

@@ -14,8 +14,7 @@ single (non-scanned) copy applied every group: weight sharing is exact.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp

@@ -5,7 +5,6 @@ the paper's recipe: β=(0.9, 0.95), wd 0.1, clip 1.0, cosine to 10% peak.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Callable, NamedTuple, Tuple
 
 import jax

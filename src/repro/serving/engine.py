@@ -51,6 +51,17 @@ def prefill_bucket(n: int, page_size: int) -> int:
     return b
 
 
+def parse_attn_backend(spec: str) -> str:
+    """``core.backends.parse_backend_spec`` with admission-style errors:
+    a bad option string (e.g. ``flash:typo``) fails engine construction
+    as a structured :class:`UnsupportedFeatureError`, like every other
+    admission-time backend problem."""
+    try:
+        return B.parse_backend_spec(spec)
+    except B.BackendCapabilityError as e:
+        raise UnsupportedFeatureError("attn_backend", str(e)) from e
+
+
 def admission_capability_check(cfg: ModelConfig, backend: str,
                                sharded: bool = False) -> None:
     """Admission-time capability query shared by the single-host and
@@ -180,7 +191,12 @@ class EngineConfig:
     #                                    many tokens across engine steps
     #                                    (0 = whole-prompt prefill)
     attn_backend: str = ""             # registered backend (core.backends);
-    #                                    "" → moba_impl or "reference"
+    #                                    "" → moba_impl or "reference".
+    #                                    A "name:option" spec (e.g.
+    #                                    "flash:compiled") configures the
+    #                                    registry instance PROCESS-WIDE —
+    #                                    the last spec parsed wins for
+    #                                    every engine sharing the process
     moba_impl: str = ""                # deprecated alias for attn_backend
 
 
@@ -195,9 +211,10 @@ class Engine:
         self.ecfg = ecfg = ecfg or EngineConfig()
         # same precedence as the serve.py CLI shim: an explicitly set
         # attn_backend always wins; the deprecated alias applies only
-        # when the new field is unset
-        self.attn_backend = (ecfg.attn_backend or ecfg.moba_impl
-                             or "reference")
+        # when the new field is unset.  Spec options ("flash:compiled")
+        # are applied to the backend instance here.
+        self.attn_backend = parse_attn_backend(
+            ecfg.attn_backend or ecfg.moba_impl or "reference")
         admission_capability_check(cfg, self.attn_backend)
         self.page_size, self.pages_per_seq, self.num_pages = \
             resolve_pool_sizes(cfg, ecfg)

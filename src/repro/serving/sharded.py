@@ -48,9 +48,10 @@ from repro.serving import paged_cache as PC
 from repro.serving.engine import (EngineConfig,
                                   admission_capability_check,
                                   build_decode_batch, build_prefill_batch,
-                                  prefill_bucket, prefill_takes,
-                                  record_decode, record_prefill,
-                                  resolve_pool_sizes, unsupported_reason)
+                                  parse_attn_backend, prefill_bucket,
+                                  prefill_takes, record_decode,
+                                  record_prefill, resolve_pool_sizes,
+                                  unsupported_reason)
 from repro.serving.scheduler import (Request, Scheduler, ServingError,
                                      UnsupportedFeatureError)
 
@@ -90,8 +91,8 @@ class ShardedEngine:
             raise UnsupportedFeatureError(*reason)
         self.cfg = cfg
         self.ecfg = ecfg = ecfg or EngineConfig()
-        self.attn_backend = (ecfg.attn_backend or ecfg.moba_impl
-                             or "sharded")
+        self.attn_backend = parse_attn_backend(
+            ecfg.attn_backend or ecfg.moba_impl or "sharded")
         if mesh is None:
             if n_shards > len(jax.devices()):
                 raise ServingError(

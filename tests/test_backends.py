@@ -2,10 +2,14 @@
 
 Covers the PR-2 acceptance surface: registry aliases and capability
 declarations (every backend must actually run what it declares), the
-Pallas decode kernel vs the XLA paged path on ragged batches, the SWA
-window-bounded page gather vs densify, admission-time
-UnsupportedFeatureError, and preemption-replay equality through the
-engine on the flash backend."""
+Pallas decode kernel vs the XLA paged path on ragged batches — through
+both the grouped MXU grid and the legacy flat grid, including the
+kv_len==0 / non-8-multiple page_size / non-128 head_dim / G==1 edge
+geometries — the SWA window-bounded page gather vs densify,
+admission-time UnsupportedFeatureError, preemption-replay equality
+through the engine on the flash backend, and the interpret/compiled
+lowering toggle (env var, registry attribute, ``flash:compiled`` spec,
+and the compiled-mode tiling contract)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -16,6 +20,8 @@ from repro.configs.base import AttentionConfig, MoBAConfig
 from repro.core import backends as B
 from repro.core import moba
 from repro.core.attention import attention_dispatch, dense_attention
+from repro.kernels import moba_decode as MD
+from repro.kernels import runtime as KR
 from repro.kernels.moba_decode import moba_paged_decode_pallas
 from repro.models import transformer as T
 from repro.serving import paged_cache as PC
@@ -149,32 +155,61 @@ def test_attention_dispatch_routes_legacy_strings():
 
 
 # ------------------------------------------------------- fused decode kernel
-def test_pallas_paged_decode_matches_xla_ragged():
-    """Acceptance: the fused kernel matches the XLA paged path within
-    1e-3 on ragged batches (including a tail page mid-fill and an
-    inactive kv_len=0 row)."""
+GRIDS = ("grouped", "flat")
+
+GEOMETRIES = {
+    # ragged batch incl. a tail page mid-fill and an inactive kv_len=0 row
+    "ragged": dict(kv_lens=(37, 16, 5, 128, 0), top_k=3, h=4, hkv=2,
+                   d=16, ps=16, npg=8, num_pages=48),
+    # page_size not a multiple of the 8-row sublane grain, head_dim not
+    # a multiple of the 128 lane count: interpret mode must still agree
+    "odd-tiles": dict(kv_lens=(25, 60, 3), top_k=2, h=4, hkv=2,
+                      d=24, ps=12, npg=6, num_pages=24),
+    # G == 1 (Hkv == H): the grouped grid degenerates to one query row
+    # per kv head and must still dedupe/mask correctly
+    "g1": dict(kv_lens=(40, 1, 16), top_k=3, h=4, hkv=4,
+               d=16, ps=16, npg=4, num_pages=16),
+}
+
+
+def _decode_case(geom):
     rng = np.random.default_rng(2)
-    kv_lens = np.array([37, 16, 5, 128, 0])
-    cfg = MoBAConfig(block_size=16, top_k=3)
-    cache, table, _, _ = _build_paged(rng, kv_lens, num_pages=48)
-    q = jnp.asarray(rng.normal(size=(len(kv_lens), 4, 1, 16)), jnp.float32)
+    kv_lens = np.array(geom["kv_lens"])
+    cfg = MoBAConfig(block_size=geom["ps"], top_k=geom["top_k"])
+    cache, table, _, _ = _build_paged(
+        rng, kv_lens, hkv=geom["hkv"], d=geom["d"], ps=geom["ps"],
+        npg=geom["npg"], num_pages=geom["num_pages"])
+    q = jnp.asarray(rng.normal(size=(len(kv_lens), geom["h"], 1,
+                                     geom["d"])), jnp.float32)
     args = (q, cache["pages_k"], cache["pages_v"], cache["centroids"],
             table, jnp.asarray(kv_lens), cfg)
+    return args, kv_lens, cfg
+
+
+@pytest.mark.parametrize("grid", GRIDS)
+@pytest.mark.parametrize("geom", GEOMETRIES, ids=GEOMETRIES)
+def test_pallas_paged_decode_matches_xla(geom, grid):
+    """Acceptance: both kernel grids match the XLA paged path within
+    1e-3 on ragged batches and the edge geometries above, and emit
+    zeros on inactive (kv_len == 0) rows."""
+    args, kv_lens, cfg = _decode_case(GEOMETRIES[geom])
     ref = moba.moba_paged_decode_attention(*args)
-    out = moba_paged_decode_pallas(*args)
+    out = moba_paged_decode_pallas(*args, grid=grid)
     active = kv_lens > 0
     np.testing.assert_allclose(np.asarray(out)[active],
                                np.asarray(ref)[active],
                                atol=1e-3, rtol=1e-3)
     assert np.all(np.asarray(out)[~active] == 0.0)
     # and under jit (the engine always runs it jitted)
-    jout = jax.jit(lambda *a: moba_paged_decode_pallas(*a, cfg))(*args[:-1])
+    jout = jax.jit(lambda *a: moba_paged_decode_pallas(
+        *a, cfg, grid=grid))(*args[:-1])
     np.testing.assert_allclose(np.asarray(jout)[active],
                                np.asarray(ref)[active],
                                atol=1e-3, rtol=1e-3)
 
 
-def test_pallas_paged_decode_short_table():
+@pytest.mark.parametrize("grid", GRIDS)
+def test_pallas_paged_decode_short_table(grid):
     """Tables shorter than top_k: selection pads with invalid slots."""
     rng = np.random.default_rng(3)
     kv_lens = np.array([17, 9])
@@ -184,9 +219,156 @@ def test_pallas_paged_decode_short_table():
     args = (q, cache["pages_k"], cache["pages_v"], cache["centroids"],
             table, jnp.asarray(kv_lens), cfg)
     ref = moba.moba_paged_decode_attention(*args)
-    out = moba_paged_decode_pallas(*args)
+    out = moba_paged_decode_pallas(*args, grid=grid)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                atol=1e-3, rtol=1e-3)
+
+
+def test_union_pages_dedupes_and_compacts():
+    """The grouped grid's page union: unique valid ids, sorted and
+    compacted to the front, padding zeros past n_uniq."""
+    idx = jnp.asarray([[[[[3, 1, 3]], [[1, 1, 0]]]]])   # (1,1,2,1,3)
+    valid = jnp.asarray([[[[[True, True, False]],
+                           [[True, False, True]]]]])
+    union, n_uniq = MD.union_pages(idx, valid, npg=8)
+    assert union.shape == (1, 1, 6)
+    assert int(n_uniq[0, 0]) == 3
+    assert union[0, 0, :3].tolist() == [0, 1, 3]        # sorted unique
+    assert union[0, 0, 3:].tolist() == [0, 0, 0]        # padding
+
+
+def test_pallas_decode_unknown_grid_rejected():
+    args, _, cfg = _decode_case(GEOMETRIES["ragged"])
+    with pytest.raises(ValueError, match="grouped"):
+        moba_paged_decode_pallas(*args, grid="typo")
+
+
+# ------------------------------------------- interpret/compiled toggle
+def test_resolve_interpret_precedence(monkeypatch):
+    """Explicit arg > env var > auto (non-TPU hosts interpret)."""
+    monkeypatch.delenv(KR.ENV_VAR, raising=False)
+    assert KR.resolve_interpret(True) is True
+    assert KR.resolve_interpret(False) is False
+    assert KR.resolve_interpret(None) is True           # CPU test host
+    monkeypatch.setenv(KR.ENV_VAR, "0")
+    assert KR.resolve_interpret(None) is False
+    assert KR.resolve_interpret(True) is True           # arg still wins
+    monkeypatch.setenv(KR.ENV_VAR, "compiled")
+    assert KR.resolve_interpret(None) is False
+    monkeypatch.setenv(KR.ENV_VAR, "interpret")
+    assert KR.resolve_interpret(None) is True
+    monkeypatch.setenv(KR.ENV_VAR, "maybe")
+    with pytest.raises(ValueError, match=KR.ENV_VAR):
+        KR.resolve_interpret(None)
+
+
+def test_compiled_mode_tiling_asserts():
+    """The grouped grid's compiled-mode tiling contract: non-conforming
+    page_size / head_dim raise a shaped error *before* any pallas_call
+    (so a TPU host misconfiguration fails loudly, not inside Mosaic)."""
+    with pytest.raises(ValueError, match="multiple of 8"):
+        MD.check_decode_tiling(12, 128, jnp.float32)
+    with pytest.raises(ValueError, match="multiple of 128"):
+        MD.check_decode_tiling(16, 64, jnp.float32)
+    with pytest.raises(ValueError, match="multiple of 16"):
+        MD.check_decode_tiling(8, 128, jnp.bfloat16)    # bf16 sublane=16
+    MD.check_decode_tiling(8, 128, jnp.float32)         # conforming: ok
+    # end-to-end: a compiled request on a non-tileable pool raises
+    args, _, cfg = _decode_case(GEOMETRIES["odd-tiles"])
+    with pytest.raises(ValueError, match="tileable"):
+        moba_paged_decode_pallas(*args, interpret=False, grid="grouped")
+
+
+def test_registry_interpret_toggle_reaches_pallas_call(monkeypatch):
+    """Acceptance: flipping the registry toggle makes the flash backend
+    invoke ``pl.pallas_call`` with interpret=False — asserted by
+    monkeypatching pallas_call itself (execution is forced back to
+    interpret so the CPU host can still run the kernel)."""
+    seen = []
+    real = MD.pl.pallas_call
+
+    def spy(*a, **kw):
+        seen.append(kw.get("interpret"))
+        kw["interpret"] = True
+        return real(*a, **kw)
+
+    monkeypatch.setattr(MD.pl, "pallas_call", spy)
+    flash = B.get("flash")
+    monkeypatch.setattr(flash, "interpret", False)
+    args, kv_lens, cfg = _decode_case(GEOMETRIES["ragged"])
+    q, pk, pv, cents, table, kvl, _ = args
+    cache = {"pages_k": pk, "pages_v": pv, "centroids": cents}
+    acfg = AttentionConfig(kind="moba", moba=cfg)
+    # flat grid: the ragged test geometry (d=16) is not compiled-
+    # tileable, and the toggle wiring is grid-independent
+    out = flash.moba_paged_decode(acfg, q, cache, table, kvl,
+                                  grid="flat")
+    assert seen == [False]
+    ref = moba.moba_paged_decode_attention(*args)
+    active = kv_lens > 0
+    np.testing.assert_allclose(np.asarray(out)[active],
+                               np.asarray(ref)[active],
+                               atol=1e-3, rtol=1e-3)
+    # env var reaches the same seam when the attribute is unset
+    monkeypatch.setattr(flash, "interpret", None)
+    monkeypatch.setenv(KR.ENV_VAR, "compiled")
+    flash.moba_paged_decode(acfg, q, cache, table, kvl, grid="flat")
+    assert seen == [False, False]
+
+
+def test_no_hardcoded_interpret_defaults_in_kernels():
+    """Acceptance: kernels/ carries no ``interpret=True`` defaults —
+    every wrapper defers to ``kernels.runtime.resolve_interpret``."""
+    import pathlib
+    import re
+
+    import repro.kernels
+    kdir = pathlib.Path(repro.kernels.__file__).parent
+    for p in sorted(kdir.glob("*.py")):
+        src = p.read_text()
+        assert not re.search(r"interpret\s*:\s*bool\s*=\s*True", src), p
+        assert not re.search(r"interpret\s*=\s*True", src), p
+
+
+def test_parse_backend_spec(monkeypatch):
+    flash = B.get("flash")
+    monkeypatch.setattr(flash, "interpret", None)
+    monkeypatch.setattr(flash, "decode_grid", "grouped")
+    assert B.parse_backend_spec("xla") == "xla"
+    assert B.parse_backend_spec("flash:compiled") == "flash"
+    assert flash.interpret is False
+    assert B.parse_backend_spec("flash:interpret") == "flash"
+    assert flash.interpret is True
+    assert B.parse_backend_spec("pallas:flat") == "pallas"  # via alias
+    assert flash.decode_grid == "flat"
+    assert B.parse_backend_spec("flash:grouped") == "flash"
+    assert flash.decode_grid == "grouped"
+    with pytest.raises(B.BackendCapabilityError, match="option"):
+        B.parse_backend_spec("flash:typo")
+    with pytest.raises(B.BackendCapabilityError, match="toggle"):
+        B.parse_backend_spec("xla:compiled")
+    with pytest.raises(B.BackendCapabilityError, match="unknown"):
+        B.parse_backend_spec("no_such:compiled")
+
+
+def test_engine_accepts_backend_spec(monkeypatch):
+    """EngineConfig.attn_backend takes the 'name:option' spec: the
+    option lands on the registry instance and the engine stores the
+    bare name; bad specs fail admission as UnsupportedFeatureError."""
+    flash = B.get("flash")
+    monkeypatch.setattr(flash, "decode_grid", "grouped")
+    ref = _reference_fixture()
+    eng = Engine(ref["cfg"], ref["params"], EngineConfig(
+        max_seqs=3, max_seq_len=64, attn_backend="flash:flat"))
+    assert eng.attn_backend == "flash"
+    assert flash.decode_grid == "flat"
+    reqs = [eng.submit(p, max_new_tokens=10) for p in ref["prompts"]]
+    eng.run()
+    assert [r.out for r in reqs] == ref["outs"]
+    with pytest.raises(UnsupportedFeatureError) as ei:
+        Engine(ref["cfg"], ref["params"],
+               EngineConfig(attn_backend="flash:typo"))
+    assert ei.value.feature == "attn_backend"
 
 
 def test_swa_windowed_decode_matches_densify():

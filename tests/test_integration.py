@@ -3,7 +3,6 @@ bit-exact, serve decodes, benchmarks run."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.launch.train import train
 from repro.launch.serve import serve

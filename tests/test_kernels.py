@@ -66,7 +66,8 @@ def test_moba_fwd_partials_vs_oracle():
     tile = 32
     nb = 8
     sel = moba.moba_selection(q, k, cfg).reshape(2, 128, 3)
-    lay = jax.vmap(lambda s: routing.build_varlen_layout(s, 128, nb, tile))(sel)
+    lay = jax.vmap(
+        lambda s: routing.build_varlen_layout(s, 128, nb, tile))(sel)
     qf = q.reshape(2, 128, 16)
     qi = jnp.maximum(lay.q_index, 0)
     q_sorted = jnp.take_along_axis(qf, qi[..., None], axis=1)

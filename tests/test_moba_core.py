@@ -26,8 +26,9 @@ def brute_force_moba(q, k, v, cfg):
                 s[own] = np.inf
                 sel = [j for j in np.argsort(-s, kind="stable")[:cfg.top_k]
                        if s[j] > -np.inf]
-                toks = sorted({x for j in sel
-                               for x in range(j * bs, min((j + 1) * bs, t + 1))})
+                toks = sorted(
+                    {x for j in sel
+                     for x in range(j * bs, min((j + 1) * bs, t + 1))})
                 sc = (np.asarray(q[bi, hi, t])
                       @ np.asarray(k[bi, kv, toks]).T) / np.sqrt(d)
                 p = np.exp(sc - sc.max())
@@ -56,7 +57,8 @@ def test_decode_matches_prefill_last_row():
     cfg = MoBAConfig(block_size=32, top_k=3)
     o = moba.moba_attention_reference(q, k, v, cfg)
     od = moba.moba_decode_attention(q[:, :, -1:], k, v, jnp.array(256), cfg)
-    np.testing.assert_allclose(np.asarray(od[:, :, 0]), np.asarray(o[:, :, -1]),
+    np.testing.assert_allclose(np.asarray(od[:, :, 0]),
+                               np.asarray(o[:, :, -1]),
                                rtol=2e-4, atol=2e-4)
 
 
