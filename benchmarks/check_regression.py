@@ -1,0 +1,103 @@
+"""CI gate: analytic ``hbm_bytes`` must not regress vs a committed snapshot.
+
+Compares a freshly generated benchmark JSON (typically a ``--smoke`` run
+from the bench-smoke CI leg) against the committed full-shape snapshot
+(``BENCH_kernels.json`` / ``BENCH_fig3.json`` / ``BENCH_decode.json``).
+Cases are matched by name and paths by name — smoke runs cover a subset
+of the snapshot's cases, so only the intersection is compared, but an
+empty intersection is itself a failure (it means the smoke shapes
+drifted away from the snapshot).
+
+Checked per matched path:
+  * ``hbm_bytes`` (and ``topk_cent_bytes`` where present) must not
+    exceed the snapshot by more than ``--tol`` (relative);
+  * the fresh report's ``agree`` verdict must be true.
+
+``wall_us`` is deliberately ignored: interpret-mode wall time is not
+TPU-meaningful (it stays informational in the JSON artifacts).
+
+Exit 0 = clean; exit 1 = regression or disagreement, with a table of
+every violation on stderr.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+BYTE_KEYS = ("hbm_bytes", "topk_cent_bytes")
+
+
+def _index(report):
+    return {c["name"]: c for c in report.get("cases", [])}
+
+
+def _paths(case):
+    # kernels_micro v2 / decode_micro / fig3 use per-path dicts; the
+    # seed-era kernels_micro v1 schema had flat per-case fields
+    if "paths" in case:
+        return case["paths"]
+    return {"default": case}
+
+
+def compare(baseline: dict, new: dict, tol: float):
+    """Returns a list of violation strings (empty = clean)."""
+    problems = []
+    if not new.get("agree", True):
+        bad = [c["name"] for c in new.get("cases", [])
+               if not c.get("agree", True)]
+        problems.append(f"oracle disagreement in fresh run: {bad}")
+    base_cases = _index(baseline)
+    matched = 0
+    for name, case in _index(new).items():
+        base = base_cases.get(name)
+        if base is None:
+            continue
+        base_paths = _paths(base)
+        for pname, p in _paths(case).items():
+            bp = base_paths.get(pname)
+            if bp is None:
+                continue
+            matched += 1
+            for key in BYTE_KEYS:
+                if key not in p or key not in bp:
+                    continue
+                old, cur = bp[key], p[key]
+                if cur > old * (1 + tol):
+                    problems.append(
+                        f"{name}/{pname}: {key} regressed "
+                        f"{old:.3e} -> {cur:.3e} "
+                        f"(+{(cur / old - 1) * 100:.1f}% > "
+                        f"{tol * 100:.0f}%)")
+    if matched == 0:
+        problems.append(
+            "no case/path names in common between the fresh run and the "
+            "snapshot — smoke shapes drifted; regenerate the snapshot")
+    return problems
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--baseline", required=True,
+                    help="committed snapshot JSON")
+    ap.add_argument("--new", required=True, help="freshly generated JSON")
+    ap.add_argument("--tol", type=float, default=0.05,
+                    help="allowed relative hbm_bytes growth (default 5%%)")
+    args = ap.parse_args(argv)
+    with open(args.baseline, encoding="utf-8") as f:
+        baseline = json.load(f)
+    with open(args.new, encoding="utf-8") as f:
+        new = json.load(f)
+    problems = compare(baseline, new, args.tol)
+    if problems:
+        print(f"REGRESSION vs {args.baseline}:", file=sys.stderr)
+        for p in problems:
+            print(f"  {p}", file=sys.stderr)
+        return 1
+    print(f"{args.new}: no hbm_bytes regression vs {args.baseline} "
+          f"(tol {args.tol * 100:.0f}%)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,15 +1,32 @@
-"""Paper Fig. 3 — latency & memory vs sequence length.
+"""Paper Fig. 3 — the small-block efficiency crossover, on our kernels.
 
-CPU cannot reproduce H100 wall-clock, so this benchmark reports what CAN
-be measured honestly:
-  (a) analytic FLOPs + HBM bytes for dense attention vs original-MoBA
-      (materialized N×nb score matrix + global reindex) vs FlashMoBA
-      (tiled topk + gather-and-densify) — the paper's asymptotic story;
-  (b) measured CPU wall-time of the three *algorithm structures* in
-      jitted XLA at small N, confirming the crossover direction.
+The paper's headline claim is that FlashMoBA makes theoretically-better
+*small* block sizes practical.  This benchmark drives the real Pallas
+pipeline (``ops.flash_moba``: centroids → grouped flash_topk → varlen
+layout → kb-tiled fwd) across block sizes {32, 64, 128, 256} × sequence
+lengths, against jitted dense attention and the O(N²) oracle:
+
+  measured   wall-time per path (informational in interpret mode — CPU
+             wall-clock is not TPU-meaningful), oracle agreement, and
+             the analytic FLOPs/HBM-bytes attached per case;
+  analytic   the asymptotic story at paper-scale N: per-head FLOPs and
+             bytes for dense vs the FlashMoBA pipeline, the dense/moba
+             ratios, and per-block-size ``crossover_n`` — the smallest
+             N in the sweep where MoBA's total FLOPs drop below dense.
+             Small blocks pay more routing FLOPs (nb = N/bs grows) but
+             touch k·bs ≪ N keys; the ratio approaches 2·bs·… only at
+             large N, which is exactly the regime the paper plots.
+
+``--json out.json`` writes the same stable schema family as
+``decode_micro`` / ``kernels_micro`` (consumed by the CI bench-smoke
+leg and the committed ``BENCH_fig3.json`` snapshot); the process exits
+non-zero when the kernel pipeline disagrees with the oracle.
 """
 from __future__ import annotations
 
+import argparse
+import json
+import sys
 import time
 
 import jax
@@ -17,77 +34,219 @@ import jax.numpy as jnp
 
 from repro.configs.base import MoBAConfig
 from repro.core import moba as M
-from repro.kernels import ref as kref
+from repro.core.attention import dense_attention
+from repro.kernels import ops
+from repro.kernels.runtime import resolve_interpret
+
+SCHEMA_VERSION = 1
+AGREE_TOL = 5e-3
+ITERS = 3
+Q_TILE = 128
+CENT_TILE = 128
+D = 64
+H, HKV = 2, 1                       # G = 2 exercises the grouped grids
+
+BLOCK_SIZES = (32, 64, 128, 256)
+MEASURED_N = (512, 1024, 2048)
+SMOKE_N = (512,)
+SMOKE_BS = (32, 64)
+ANALYTIC_N = (8192, 32768, 131072, 524288)
 
 
-def analytic(n: int, d: int = 64, bs: int = 128, k: int = 8):
-    """Per-head forward FLOPs and bytes (bf16)."""
-    nb = n // bs
-    dense_flops = 2 * n * n * d * 2            # QK^T + PV
-    moba_flops = 2 * n * nb * d + 2 * n * k * bs * d * 2
-    # original MoBA materializes (N, nb) scores + full reindex of q/k/v
-    orig_bytes = 2 * (n * nb + 3 * n * d + 2 * n * k * bs * d / 128)
-    flash_bytes = 2 * (3 * n * d + n * k * d + 2 * nb * bs * d)
-    dense_bytes = 2 * (3 * n * d + n * d)
-    return dense_flops, moba_flops, orig_bytes, flash_bytes, dense_bytes
+def _top_k(n: int, bs: int) -> int:
+    """~1/8 key coverage, at least two blocks (paper's sparsity regime)."""
+    return max(2, n // (8 * bs))
 
 
-def measured(n: int, d: int = 64, bs: int = 64, k: int = 4, reps: int = 3):
-    """CPU wall-time of the three pipelines (B=1, H=2)."""
-    cfg = MoBAConfig(block_size=bs, top_k=k)
-    keys = jax.random.split(jax.random.PRNGKey(0), 3)
-    q = jax.random.normal(keys[0], (1, 2, n, d), jnp.float32)
-    kk = jax.random.normal(keys[1], (1, 2, n, d), jnp.float32)
-    v = jax.random.normal(keys[2], (1, 2, n, d), jnp.float32)
-
-    from repro.core.attention import dense_attention
-
-    def orig_moba(q, kk, v):
-        # original-style: full mask materialization (the N^2 cost the
-        # paper's Fig. 4 shows dominating)
-        return M.moba_attention_reference(q, kk, v, cfg)
-
-    def flash_moba(q, kk, v):
-        return kref.moba_sparse_xla(q, kk, v, cfg, tile=64)
-
-    out = {}
-    for name, fn in [("dense", dense_attention), ("moba_orig", orig_moba),
-                     ("flashmoba_xla", flash_moba)]:
-        f = jax.jit(fn)
-        f(q, kk, v).block_until_ready()
-        t0 = time.time()
-        for _ in range(reps):
-            f(q, kk, v).block_until_ready()
-        out[name] = (time.time() - t0) / reps * 1e3
-    return out
+def _flops(n, bs, k, d=D):
+    """Per-head forward FLOPs: dense QKᵀ+PV vs MoBA routing + gathered
+    attention over the N·k routed pairs."""
+    nb = -(-n // bs)
+    dense = 2 * 2 * n * n * d
+    moba = 2 * n * nb * d + 2 * 2 * n * k * bs * d
+    return dense, moba
 
 
-def run():
-    print("# analytic per-head fwd FLOPs (d=64, B=128, k=8)")
-    print(f"{'N':>8}{'dense':>12}{'moba':>12}{'ratio':>8}")
-    for n in (8192, 32768, 131072, 524288):
-        df, mf, ob, fb, db = analytic(n)
-        print(f"{n:>8}{df:>12.3e}{mf:>12.3e}{df/mf:>8.1f}")
-    print("\n# measured CPU ms (algorithm structure, small N)")
+def _bytes(n, bs, k, d=D, isz=4):
+    """Per-head HBM bytes: streaming dense (q, k, v in, o out) vs the
+    FlashMoBA pipeline (centroids + topk centroid stream + sorted-Q
+    gather + per-tile K/V stream + fp32 partials) — the same model as
+    ``kernels_micro`` at H = Hkv = 1."""
+    nb = -(-n // bs)
+    nct = -(-nb // CENT_TILE)
+    tile = min(Q_TILE, n)
+    L = n * k + nb * tile
+    dense = (3 * n * d + n * d) * isz
+    moba = ((n + nb) * d * isz                      # centroid build
+            + n * d * isz                           # topk Q read
+            + (n // tile) * nct * CENT_TILE * d * isz   # centroid stream
+            + n * k * 4                             # selection write
+            + L * (d * isz + 4)                     # sorted Q + positions
+            + (L // tile) * bs * d * isz * 2        # per-tile K/V stream
+            + L * (d + 2) * 4)                      # (o, m, l) partials
+    return dense, moba
+
+
+def run_measured(ns, block_sizes):
+    cases = []
+    for n in ns:
+        keys = jax.random.split(jax.random.PRNGKey(n), 3)
+        q = jax.random.normal(keys[0], (1, H, n, D), jnp.float32) * 0.5
+        kk = jax.random.normal(keys[1], (1, HKV, n, D), jnp.float32) * 0.5
+        v = jax.random.normal(keys[2], (1, HKV, n, D), jnp.float32)
+        kv_dense = (jnp.repeat(kk, H // HKV, axis=1),
+                    jnp.repeat(v, H // HKV, axis=1))
+        for bs in block_sizes:
+            k = _top_k(n, bs)
+            cfg = MoBAConfig(block_size=bs, top_k=k)
+            oref = M.moba_attention_reference(q, kk, v, cfg)
+            dense_fl, moba_fl = _flops(n, bs, k)
+            dense_by, moba_by = _bytes(n, bs, k)
+
+            paths = {}
+            fn_d = jax.jit(lambda q, kf, vf: dense_attention(q, kf, vf,
+                                                             causal=True))
+            fn_f = jax.jit(lambda q, kk, v, c=cfg:
+                           ops.flash_moba(q, kk, v, c, q_tile=Q_TILE,
+                                          grid="grouped"))
+            for pname, fn, args, flops, hbm in (
+                    ("dense_xla", fn_d, (q, *kv_dense), H * dense_fl,
+                     H * dense_by),
+                    ("flash_moba", fn_f, (q, kk, v), H * moba_fl,
+                     H * moba_by)):
+                o = fn(*args).block_until_ready()
+                t0 = time.perf_counter()
+                for _ in range(ITERS):
+                    fn(*args).block_until_ready()
+                wall_us = (time.perf_counter() - t0) / ITERS * 1e6
+                paths[pname] = {"wall_us": wall_us, "flops": flops,
+                                "hbm_bytes": hbm}
+                if pname == "flash_moba":
+                    paths[pname]["max_abs_diff_vs_reference"] = float(
+                        jnp.abs(o - oref).max())
+            cases.append({
+                "name": f"fig3_N{n}_B{bs}",
+                "shape": {"batch": 1, "heads": H, "kv_heads": HKV,
+                          "head_dim": D, "seq_len": n, "block_size": bs,
+                          "top_k": k, "dtype": "float32"},
+                "flops_ratio": dense_fl / moba_fl,
+                "bytes_ratio": dense_by / moba_by,
+                "agree_tol": AGREE_TOL,
+                "agree": (paths["flash_moba"]["max_abs_diff_vs_reference"]
+                          <= AGREE_TOL),
+                "paths": paths,
+            })
+    return cases
+
+
+def run_analytic(block_sizes):
     rows = []
-    print(f"{'N':>8}{'dense':>10}{'orig':>10}{'flash':>10}")
-    for n in (1024, 2048, 4096):
-        r = measured(n)
-        rows.append((n, r))
-        print(f"{n:>8}{r['dense']:>10.1f}{r['moba_orig']:>10.1f}"
-              f"{r['flashmoba_xla']:>10.1f}")
+    for bs in block_sizes:
+        for n in ANALYTIC_N:
+            k = _top_k(n, bs)
+            dense_fl, moba_fl = _flops(n, bs, k)
+            dense_by, moba_by = _bytes(n, bs, k)
+            rows.append({"n": n, "block_size": bs, "top_k": k,
+                         "dense_flops": dense_fl, "moba_flops": moba_fl,
+                         "flops_ratio": dense_fl / moba_fl,
+                         "dense_bytes": dense_by, "moba_bytes": moba_by,
+                         "bytes_ratio": dense_by / moba_by})
     return rows
 
 
+def crossover(block_sizes, ns):
+    """Per block size: the smallest N where MoBA's total forward FLOPs
+    drop below dense (the Fig. 3 crossover), over the full sweep."""
+    out = {}
+    for bs in block_sizes:
+        xn = None
+        for n in sorted(set(ns) | set(ANALYTIC_N)):
+            dense_fl, moba_fl = _flops(n, bs, _top_k(n, bs))
+            if moba_fl < dense_fl:
+                xn = n
+                break
+        big = ANALYTIC_N[-1]
+        dense_fl, moba_fl = _flops(big, bs, _top_k(big, bs))
+        out[f"bs{bs}"] = {"crossover_n": xn,
+                          "flops_ratio_at_max_n": dense_fl / moba_fl}
+    return out
+
+
+def _report(cases, analytic_rows, xover):
+    return {
+        "benchmark": "fig3_efficiency",
+        "schema_version": SCHEMA_VERSION,
+        "dtype": "float32",
+        "jax_version": jax.__version__,
+        "device": jax.default_backend(),
+        "interpret": resolve_interpret(None),
+        "agree_tol": AGREE_TOL,
+        "agree": all(c["agree"] for c in cases),
+        "cases": cases,
+        "analytic": analytic_rows,
+        "crossover": xover,
+    }
+
+
+def run():
+    """Human-readable sweep (kept for the run.py hook and direct use)."""
+    cases = run_measured(MEASURED_N, BLOCK_SIZES)
+    print(f"{'case':>18}{'dense us':>12}{'flash us':>12}"
+          f"{'flops x':>9}{'bytes x':>9}{'maxerr':>10}")
+    for c in cases:
+        p = c["paths"]
+        print(f"{c['name']:>18}{p['dense_xla']['wall_us']:>12.0f}"
+              f"{p['flash_moba']['wall_us']:>12.0f}"
+              f"{c['flops_ratio']:>9.2f}{c['bytes_ratio']:>9.2f}"
+              f"{p['flash_moba']['max_abs_diff_vs_reference']:>10.1e}")
+    print("\n# analytic crossover (per-head fwd FLOPs, d=64)")
+    for key, x in crossover(BLOCK_SIZES, MEASURED_N).items():
+        print(f"{key}: crossover_n={x['crossover_n']} "
+              f"ratio@{ANALYTIC_N[-1]}={x['flops_ratio_at_max_n']:.1f}x")
+    return cases
+
+
 def bench():
-    t0 = time.time()
-    rows = run()
-    us = (time.time() - t0) * 1e6 / max(len(rows), 1)
-    n, r = rows[-1]
-    speedup = r["moba_orig"] / r["flashmoba_xla"]
-    return [("fig3_efficiency", us,
-             f"N={n};flash_vs_orig={speedup:.1f}x")]
+    """run.py hook: flatten the measured cases into its CSV rows."""
+    rows = []
+    for c in run_measured(MEASURED_N[:1], SMOKE_BS):
+        p = c["paths"]["flash_moba"]
+        rows.append((c["name"], p["wall_us"],
+                     f"maxerr={p['max_abs_diff_vs_reference']:.1e};"
+                     f"flops_ratio={c['flops_ratio']:.2f}"))
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--json", metavar="OUT",
+                    help="write the machine-readable report here "
+                         "(the BENCH_fig3.json schema)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small shapes only (the CI bench-smoke leg)")
+    args = ap.parse_args(argv)
+    ns = SMOKE_N if args.smoke else MEASURED_N
+    bss = SMOKE_BS if args.smoke else BLOCK_SIZES
+    cases = run_measured(ns, bss)
+    report = _report(cases, run_analytic(bss), crossover(bss, ns))
+    if args.json:
+        with open(args.json, "w", encoding="utf-8") as f:
+            json.dump(report, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {args.json}", file=sys.stderr)
+    for c in cases:
+        p = c["paths"]
+        print(f"{c['name']},{p['flash_moba']['wall_us']:.1f},"
+              f"maxerr={p['flash_moba']['max_abs_diff_vs_reference']:.1e};"
+              f"flops_ratio={c['flops_ratio']:.2f};"
+              f"bytes_ratio={c['bytes_ratio']:.2f}")
+    if not report["agree"]:
+        bad = [c["name"] for c in cases if not c["agree"]]
+        print(f"ORACLE DISAGREEMENT beyond {AGREE_TOL}: {bad}",
+              file=sys.stderr)
+        return 1
+    return 0
 
 
 if __name__ == "__main__":
-    run()
+    raise SystemExit(main())

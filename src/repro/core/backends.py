@@ -276,6 +276,13 @@ class FlashBackend(AttentionBackend):
     # paged-decode grid: "grouped" = (B·Hkv, U) MXU tiles (default),
     # "flat" = legacy (B·H, top_k) per-query-head VPU products
     decode_grid: str = "grouped"
+    # training/prefill grid: "grouped" = grouped-GQA topk + kb-tiled
+    # fwd/bwd MXU grids (default), "flat" = legacy seed-era grids kept
+    # selectable for bisection (DESIGN.md §2)
+    train_grid: str = "grouped"
+    # K/V streaming granularity of the kb-tiled fwd/bwd grids;
+    # 0 = auto (min(block_size, 128)).  Set via `flash:kb_tile=N`.
+    kb_tile: int = 0
 
     def _interpret(self, opts) -> bool:
         from repro.kernels.runtime import resolve_interpret
@@ -285,6 +292,8 @@ class FlashBackend(AttentionBackend):
         from repro.kernels import ops
         return ops.flash_moba(q, k, v, cfg.moba, q_positions=q_positions,
                               scale=cfg.scale,
+                              kb_tile=opts.get("kb_tile", self.kb_tile),
+                              grid=opts.get("grid", self.train_grid),
                               interpret=self._interpret(opts))
 
     def moba_paged_decode(self, cfg, q, cache, block_table, kv_len, **opts):
@@ -386,37 +395,57 @@ def get(name: str) -> AttentionBackend:
 
 
 def parse_backend_spec(spec: str) -> str:
-    """``name[:option]`` → registered backend name, applying the option
-    to the backend instance — the one string every CLI/EngineConfig
-    surface accepts (``--attn-backend flash:compiled``).
+    """``name[:option,...]`` → registered backend name, applying each
+    option to the backend instance — the one string every
+    CLI/EngineConfig surface accepts (``--attn-backend flash:compiled``,
+    ``--attn-backend flash:flat,kb_tile=64``).
 
     Options: ``interpret`` / ``compiled`` toggle the Pallas lowering on
     backends that expose an ``interpret`` attribute (process-wide, like
     setting ``backends.get(name).interpret`` directly); ``grouped`` /
-    ``flat`` select the paged-decode grid on backends with a
-    ``decode_grid`` attribute.  Unknown names or options raise
-    :class:`BackendCapabilityError`.
+    ``flat`` select the kernel grids — both the paged-decode grid
+    (``decode_grid``) and the training/prefill grid (``train_grid``) on
+    backends carrying those attributes; ``kb_tile=N`` sets the K/V
+    streaming granularity of the kb-tiled training grids (0 = auto).
+    Unknown names or options raise :class:`BackendCapabilityError`.
     """
-    name, _, opt = spec.partition(":")
-    if not opt:
+    name, _, optstr = spec.partition(":")
+    if not optstr:
         return name
     be = get(name)
-    if opt in ("interpret", "compiled"):
-        if not hasattr(be, "interpret"):
+    for opt in optstr.split(","):
+        opt = opt.strip()
+        if opt in ("interpret", "compiled"):
+            if not hasattr(be, "interpret"):
+                raise BackendCapabilityError(
+                    f"backend {be.name!r} has no interpret/compiled toggle "
+                    f"(only Pallas backends do); got {spec!r}")
+            be.interpret = opt == "interpret"
+        elif opt in ("grouped", "flat"):
+            if not hasattr(be, "decode_grid") \
+                    and not hasattr(be, "train_grid"):
+                raise BackendCapabilityError(
+                    f"backend {be.name!r} has no decode-grid option; "
+                    f"got {spec!r}")
+            if hasattr(be, "decode_grid"):
+                be.decode_grid = opt
+            if hasattr(be, "train_grid"):
+                be.train_grid = opt
+        elif opt.startswith("kb_tile="):
+            if not hasattr(be, "kb_tile"):
+                raise BackendCapabilityError(
+                    f"backend {be.name!r} has no kb_tile option (only the "
+                    f"kb-tiled Pallas training grids do); got {spec!r}")
+            try:
+                be.kb_tile = int(opt.split("=", 1)[1])
+            except ValueError:
+                raise BackendCapabilityError(
+                    f"unknown backend option {opt!r} in {spec!r}: "
+                    f"kb_tile takes an integer (0 = auto)") from None
+        else:
             raise BackendCapabilityError(
-                f"backend {be.name!r} has no interpret/compiled toggle "
-                f"(only Pallas backends do); got {spec!r}")
-        be.interpret = opt == "interpret"
-    elif opt in ("grouped", "flat"):
-        if not hasattr(be, "decode_grid"):
-            raise BackendCapabilityError(
-                f"backend {be.name!r} has no decode-grid option; "
-                f"got {spec!r}")
-        be.decode_grid = opt
-    else:
-        raise BackendCapabilityError(
-            f"unknown backend option {opt!r} in {spec!r}; expected "
-            f"interpret | compiled | grouped | flat")
+                f"unknown backend option {opt!r} in {spec!r}; expected "
+                f"interpret | compiled | grouped | flat | kb_tile=N")
     return name
 
 

@@ -4,10 +4,27 @@ Streams tiles of Q against tiles of the centroid matrix K̃ and maintains a
 running per-query top-k (scores, block ids) in VMEM scratch — the full
 (Nq × nb) score matrix never exists in HBM.
 
-GPU→TPU adaptation: the paper's per-thread bubble sort becomes a k-pass
-masked max-extraction over the (running ∪ candidate) score tile — each pass
-is one VPU-wide max + compare, with a cumsum tie-break; no per-lane
-data-dependent control flow.
+Two grids (DESIGN.md §2):
+
+* ``grouped`` (default, MXU-shaped): grid (B·Hkv, Nq/Tq, ct) — the q
+  block covers all G query heads of a GQA group (heads are contiguous
+  per kv head in the (B·H) layout), so ONE centroid-tile DMA serves the
+  whole group (1/G of the flat grid's centroid traffic) and the score
+  matmul is a single (G·Tq, d) · (d, C) MXU product.  The running
+  top-k is maintained by a **two-stage merge**: a tile-local top-k of
+  the C candidate lanes via a bitonic tournament (sort kp-lane groups,
+  then fold halves keeping each pair's top kp — O(log(C/kp)·log kp)
+  compare-exchange stages), then one (k ∪ k) bitonic merge against the
+  running list — replacing the flat grid's O(k·(k+C)) per-tile k-pass
+  extraction.  The merge lists are padded to ``kp`` lanes (power of
+  two, at least the sublane grain).
+* ``flat`` (legacy, kept selectable for bisection): grid
+  (B·H, Nq/Tq, ct), per-query-head centroid DMAs, and the original
+  k-pass masked max-extraction (one VPU-wide max + compare per pass
+  with a cumsum tie-break).
+
+Both grids break score ties toward the lower block id — exactly
+``jax.lax.top_k``'s order — so results are bit-identical to the oracle.
 
 Selection semantics (must match `repro.core.routing.select_blocks`):
   * future blocks masked to −inf
@@ -24,6 +41,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.runtime import resolve_interpret
+from repro.kernels.tiling import SUBLANE, check_topk_tiling, next_pow2
 
 NEG_INF = -1e30       # mask level (matches core.routing)
 EXTRACTED = -2e30     # strictly below mask level: never re-picked as valid
@@ -31,8 +49,95 @@ INIT = -3e30
 POS_INF = 1e30
 
 
+# ------------------------------------------------- bitonic lane primitives
+def _cmp_halves(s, i, width):
+    """One compare-exchange stage: within each lane group of ``width``,
+    compare lane j against lane j + width/2 and put the greater element
+    (score desc, block id asc on ties — `lax.top_k`'s order) on the
+    left.  All (R, L) fp32/int32."""
+    r, ln = s.shape
+    half = width // 2
+    s4 = s.reshape(r, ln // width, 2, half)
+    i4 = i.reshape(r, ln // width, 2, half)
+    a_s, b_s, a_i, b_i = s4[:, :, 0], s4[:, :, 1], i4[:, :, 0], i4[:, :, 1]
+    a_wins = (a_s > b_s) | ((a_s == b_s) & (a_i < b_i))
+    s = jnp.stack([jnp.where(a_wins, a_s, b_s),
+                   jnp.where(a_wins, b_s, a_s)], axis=2).reshape(r, ln)
+    i = jnp.stack([jnp.where(a_wins, a_i, b_i),
+                   jnp.where(a_wins, b_i, a_i)], axis=2).reshape(r, ln)
+    return s, i
+
+
+def _flip_second_half(s, i, width):
+    """Reverse the trailing half of each lane group of ``width`` so two
+    descending-sorted halves become one bitonic (valley) group."""
+    r, ln = s.shape
+    half = width // 2
+    s4 = s.reshape(r, ln // width, 2, half)
+    i4 = i.reshape(r, ln // width, 2, half)
+    s = jnp.stack([s4[:, :, 0], s4[:, :, 1, ::-1]], axis=2).reshape(r, ln)
+    i = jnp.stack([i4[:, :, 0], i4[:, :, 1, ::-1]], axis=2).reshape(r, ln)
+    return s, i
+
+
+def _bitonic_merge_desc(s, i, width):
+    """Sort each bitonic lane group of ``width`` descending
+    (log2(width) compare-exchange stages)."""
+    w = width
+    while w >= 2:
+        s, i = _cmp_halves(s, i, w)
+        w //= 2
+    return s, i
+
+
+def _sort_desc(s, i, width):
+    """Sort each lane group of ``width`` (a power of two) descending."""
+    w = 2
+    while w <= width:
+        s, i = _flip_second_half(s, i, w)
+        s, i = _bitonic_merge_desc(s, i, w)
+        w *= 2
+    return s, i
+
+
+def _local_topk(s, i, kp):
+    """Stage 1: tile-local top-kp of the C candidate lanes.  Sorts
+    kp-lane groups descending, then a bitonic tournament folds the
+    group count in half each round, keeping each merged pair's top kp.
+    s (R, C) fp32, i (R, C) int32, C and kp powers of two."""
+    r, c = s.shape
+    if c < kp:
+        s = jnp.concatenate(
+            [s, jnp.full((r, kp - c), INIT, s.dtype)], axis=1)
+        i = jnp.concatenate(
+            [i, jnp.zeros((r, kp - c), i.dtype)], axis=1)
+        c = kp
+    s, i = _sort_desc(s, i, kp)
+    while c > kp:
+        s, i = _flip_second_half(s, i, 2 * kp)
+        s, i = _bitonic_merge_desc(s, i, 2 * kp)
+        s = s.reshape(r, c // (2 * kp), 2, kp)[:, :, 0].reshape(r, c // 2)
+        i = i.reshape(r, c // (2 * kp), 2, kp)[:, :, 0].reshape(r, c // 2)
+        c //= 2
+    return s, i
+
+
+def _merge_topk(run_s, run_i, loc_s, loc_i):
+    """Stage 2: (k ∪ k) merge — both lists descending-sorted, so
+    run ++ reverse(loc) is bitonic and one merge pass sorts it; the
+    top kp lanes are the new running list."""
+    kp = run_s.shape[1]
+    s = jnp.concatenate([run_s, loc_s[:, ::-1]], axis=1)
+    i = jnp.concatenate([run_i, loc_i[:, ::-1]], axis=1)
+    s, i = _bitonic_merge_desc(s, i, 2 * kp)
+    return s[:, :kp], i[:, :kp]
+
+
+# ------------------------------------------------------------ legacy merge
 def _topk_update(run_s, run_i, cand_s, cand_i, top_k: int):
-    """Merge candidates into the running top-k. All (Tq, ·) fp32/int32."""
+    """Merge candidates into the running top-k. All (Tq, ·) fp32/int32.
+    Legacy flat-grid path: k masked max-extraction passes over the
+    (running ∪ candidate) tile."""
     comb_s = jnp.concatenate([run_s, cand_s], axis=1)
     comb_i = jnp.concatenate([run_i, cand_i], axis=1)
     new_s, new_i = [], []
@@ -47,10 +152,13 @@ def _topk_update(run_s, run_i, cand_s, cand_i, top_k: int):
     return jnp.stack(new_s, axis=1), jnp.stack(new_i, axis=1)
 
 
+# ----------------------------------------------------------------- kernels
 def _flash_topk_kernel(q_ref, c_ref, idx_ref, s_run, i_run, *,
                        top_k: int, block_size: int, cent_tile: int,
                        n_blocks: int, n_cent_tiles: int, q_tile: int,
                        causal: bool, q_pos_offset: int):
+    """Legacy flat grid (B·H, Nq/Tq, ct): per-query-head centroid DMAs
+    and the k-pass extraction merge."""
     ct = pl.program_id(2)
 
     @pl.when(ct == 0)
@@ -85,18 +193,74 @@ def _flash_topk_kernel(q_ref, c_ref, idx_ref, s_run, i_run, *,
         idx_ref[0] = final.astype(jnp.int32)
 
 
+def _flash_topk_kernel_grouped(q_ref, c_ref, idx_ref, s_run, i_run, *,
+                               top_k: int, kp: int, block_size: int,
+                               cent_tile: int, n_blocks: int,
+                               n_cent_tiles: int, q_tile: int, group: int,
+                               causal: bool, q_pos_offset: int):
+    """Grouped grid (B·Hkv, Nq/Tq, ct): one centroid-tile DMA serves all
+    G query heads; scores are one (G·Tq, d)·(d, C) MXU matmul; the
+    running top-k updates through the two-stage bitonic merge."""
+    ct = pl.program_id(2)
+
+    @pl.when(ct == 0)
+    def _init():
+        s_run[...] = jnp.full_like(s_run, INIT)
+        i_run[...] = jnp.zeros_like(i_run)
+
+    rows = group * q_tile
+    d = q_ref.shape[-1]
+    q = q_ref[...].astype(jnp.float32).reshape(rows, d)    # (G·Tq, d)
+    cents = c_ref[0].astype(jnp.float32)                   # (C, d)
+    s = jax.lax.dot_general(q, cents, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (rows, C)
+
+    qt = pl.program_id(1)
+    # the query position depends only on the row's index inside Tq —
+    # every head of the group shares it
+    qpos = (qt * q_tile + q_pos_offset
+            + jax.lax.broadcasted_iota(
+                jnp.int32, (group, q_tile, cent_tile), 1
+            ).reshape(rows, cent_tile))
+    cand = (ct * cent_tile
+            + jax.lax.broadcasted_iota(jnp.int32, (rows, cent_tile), 1))
+    own = qpos // block_size
+    valid = cand < n_blocks
+    if causal:
+        s = jnp.where(cand > own, NEG_INF, s)
+        s = jnp.where((cand == own) & valid, POS_INF, s)
+    s = jnp.where(valid, s, NEG_INF)
+
+    loc_s, loc_i = _local_topk(s, cand, kp)
+    ns, ni = _merge_topk(s_run[...], i_run[...], loc_s, loc_i)
+    s_run[...] = ns
+    i_run[...] = ni
+
+    @pl.when(ct == n_cent_tiles - 1)
+    def _emit():
+        final = jnp.where(s_run[...] <= NEG_INF / 2, n_blocks, i_run[...])
+        idx_ref[...] = final.reshape(
+            group, q_tile, kp)[:, :, :top_k].astype(jnp.int32)
+
+
+# ----------------------------------------------------------------- wrapper
 def flash_topk(q: jax.Array, centroids: jax.Array, top_k: int,
                block_size: int, *, group: int = 1,
                num_q_heads: int = 0, causal: bool = True,
                q_pos_offset: int = 0, q_tile: int = 128,
-               cent_tile: int = 128,
+               cent_tile: int = 128, grid: str = "grouped",
                interpret: bool | None = None) -> jax.Array:
     """q: (BH, Nq, d); centroids: (BKV, nb, d) where the leading dims are
     flattened (batch · heads) and BH = batch*H, BKV = batch*Hkv,
     H = Hkv*group.  ``num_q_heads`` is H (defaults to BH: single batch).
 
-    Returns (BH, Nq, top_k) int32 selected block ids (sentinel nb).
+    ``grid`` selects the grouped (B·Hkv, Nq/Tq, ct) MXU grid (default)
+    or the legacy per-query-head ``flat`` grid.  Returns
+    (BH, Nq, top_k) int32 selected block ids (sentinel nb).
     """
+    if grid not in ("grouped", "flat"):
+        raise ValueError(f"unknown topk grid {grid!r}: "
+                         f"expected 'grouped' or 'flat'")
     interpret = resolve_interpret(interpret)
     bh, nq, d = q.shape
     bkv, nb, _ = centroids.shape
@@ -109,24 +273,60 @@ def flash_topk(q: jax.Array, centroids: jax.Array, top_k: int,
     if pad:
         centroids = jnp.pad(centroids, ((0, 0), (0, pad), (0, 0)))
 
-    def kv_index(hh, qt, ct):
-        return ((hh // h) * (h // group) + (hh % h) // group, ct, 0)
+    if grid == "flat":
+        def kv_index(hh, qt, ct):
+            return ((hh // h) * (h // group) + (hh % h) // group, ct, 0)
 
+        kernel = functools.partial(
+            _flash_topk_kernel, top_k=top_k, block_size=block_size,
+            cent_tile=cent_tile, n_blocks=nb, n_cent_tiles=n_cent_tiles,
+            q_tile=q_tile, causal=causal, q_pos_offset=q_pos_offset)
+        return pl.pallas_call(
+            kernel,
+            grid=(bh, nq // q_tile, n_cent_tiles),
+            in_specs=[
+                pl.BlockSpec((1, q_tile, d),
+                             lambda hh, qt, ct: (hh, qt, 0)),
+                pl.BlockSpec((1, cent_tile, d), kv_index),
+            ],
+            out_specs=pl.BlockSpec((1, q_tile, top_k),
+                                   lambda hh, qt, ct: (hh, qt, 0)),
+            out_shape=jax.ShapeDtypeStruct((bh, nq, top_k), jnp.int32),
+            scratch_shapes=[pltpu.VMEM((q_tile, top_k), jnp.float32),
+                            pltpu.VMEM((q_tile, top_k), jnp.int32)],
+            interpret=interpret,
+        )(q, centroids)
+
+    # grouped grid: dim 0 enumerates (batch, kv head) — the G query
+    # heads of a group are contiguous rows of q, and the dim-0 block
+    # index b·Hkv + kv is exactly the centroid row
+    if cent_tile & (cent_tile - 1):
+        raise ValueError(
+            f"grouped flash_topk needs a power-of-two cent_tile (the "
+            f"bitonic tournament folds candidate lanes in halves); got "
+            f"{cent_tile}")
+    if not interpret:
+        check_topk_tiling(cent_tile, q_tile, d, q.dtype)
+    kp = max(SUBLANE, next_pow2(top_k))   # merge lists padded to the
+    #                                       sublane grain / power of two
     kernel = functools.partial(
-        _flash_topk_kernel, top_k=top_k, block_size=block_size,
-        cent_tile=cent_tile, n_blocks=nb, n_cent_tiles=n_cent_tiles,
-        q_tile=q_tile, causal=causal, q_pos_offset=q_pos_offset)
+        _flash_topk_kernel_grouped, top_k=top_k, kp=kp,
+        block_size=block_size, cent_tile=cent_tile, n_blocks=nb,
+        n_cent_tiles=n_cent_tiles, q_tile=q_tile, group=group,
+        causal=causal, q_pos_offset=q_pos_offset)
     return pl.pallas_call(
         kernel,
-        grid=(bh, nq // q_tile, n_cent_tiles),
+        grid=(bh // group, nq // q_tile, n_cent_tiles),
         in_specs=[
-            pl.BlockSpec((1, q_tile, d), lambda hh, qt, ct: (hh, qt, 0)),
-            pl.BlockSpec((1, cent_tile, d), kv_index),
+            pl.BlockSpec((group, q_tile, d),
+                         lambda gg, qt, ct: (gg, qt, 0)),
+            pl.BlockSpec((1, cent_tile, d),
+                         lambda gg, qt, ct: (gg, ct, 0)),
         ],
-        out_specs=pl.BlockSpec((1, q_tile, top_k),
-                               lambda hh, qt, ct: (hh, qt, 0)),
+        out_specs=pl.BlockSpec((group, q_tile, top_k),
+                               lambda gg, qt, ct: (gg, qt, 0)),
         out_shape=jax.ShapeDtypeStruct((bh, nq, top_k), jnp.int32),
-        scratch_shapes=[pltpu.VMEM((q_tile, top_k), jnp.float32),
-                        pltpu.VMEM((q_tile, top_k), jnp.int32)],
+        scratch_shapes=[pltpu.VMEM((group * q_tile, kp), jnp.float32),
+                        pltpu.VMEM((group * q_tile, kp), jnp.int32)],
         interpret=interpret,
     )(q, centroids)

@@ -59,36 +59,15 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.configs.base import MoBAConfig
 from repro.core.moba import moba_paged_route
 from repro.kernels.runtime import resolve_interpret
+from repro.kernels.tiling import (  # noqa: F401  (re-exported names)
+    LANE,
+    SUBLANE,
+    check_decode_tiling,
+    round_up as _round_up,
+    sublane as _sublane,
+)
 
 NEG_INF = -1e30
-LANE = 128      # TPU lane count: last block dim must be a multiple
-SUBLANE = 8     # fp32 sublane grain; dtype grain = 8 * (4 // itemsize)
-
-
-def _round_up(n: int, m: int) -> int:
-    return -(-n // m) * m
-
-
-def _sublane(dtype) -> int:
-    """Sublane grain of the (sublane × 128) tile for ``dtype``: 8 for
-    fp32 (and any wider dtype), 16 for bf16, 32 for int8/fp8."""
-    return SUBLANE * max(1, 4 // jnp.dtype(dtype).itemsize)
-
-
-def check_decode_tiling(page_size: int, head_dim: int, dtype) -> None:
-    """Compiled-mode tiling contract for the grouped decode grid: the
-    (ps, d) page block must decompose into whole (sublane, 128) tiles.
-    Raises with a remediation hint; interpret mode never calls this."""
-    sub = _sublane(dtype)
-    if page_size % sub or head_dim % LANE:
-        raise ValueError(
-            f"compiled paged-decode kernel needs ({sub}, {LANE})-tileable "
-            f"pages for dtype {jnp.dtype(dtype).name}: page_size="
-            f"{page_size} must be a multiple of {sub} and head_dim="
-            f"{head_dim} a multiple of {LANE} (got page_size % {sub} == "
-            f"{page_size % sub}, head_dim % {LANE} == {head_dim % LANE}); "
-            f"choose a conforming pool geometry or run interpret mode "
-            f"(REPRO_PALLAS_INTERPRET=1)")
 
 
 def union_pages(idx: jax.Array, sel_valid: jax.Array, npg: int

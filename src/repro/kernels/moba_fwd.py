@@ -2,11 +2,23 @@
 
 TPU adaptation (see DESIGN.md §2): queries routed to each key block are
 pre-gathered into the key-block-major sorted layout (`Q_sorted`) by one XLA
-take; the kernel then runs a *dense* (Tq × d) · (d × B) MXU matmul per
-tile, with the key block selected by a **scalar-prefetched** per-tile block
-id driving the K/V BlockSpec index_map.  Each tile emits un-normalized
-partial outputs + softmax stats (o, m, l); the per-query lse-merge over its
-k partials happens in the wrapper (`ops.flash_moba`).
+take; the kernel then runs dense MXU matmuls per tile, with the key block
+selected by a **scalar-prefetched** per-tile block id driving the K/V
+BlockSpec index_map.  Each tile emits un-normalized partial outputs +
+softmax stats (o, m, l); the per-query lse-merge over its k partials
+happens in the wrapper (`ops.flash_moba`).
+
+Two grids:
+
+* ``grouped`` (default, kb-tiled): grid (BH, T, nkb) with a third
+  dimension over ``kb_tile``-wide chunks of the key block.  The K/V
+  BlockSpec streams (kb_tile, d) slices — Pallas double-buffers the
+  DMAs across consecutive kb steps — and the online-softmax merge is
+  carried *inside* the kernel across kb-tiles in (Tq, d)/(Tq, 1) VMEM
+  scratch, so K/V DMA granularity is decoupled from ``block_size`` and
+  large-block configs no longer force block-sized VMEM residency.
+* ``flat`` (legacy, kept selectable for bisection): grid (BH, T) with
+  whole-(B, d) K/V blocks per step.
 
 The query's own block is part of the routed pair list (selection forces
 it), so a single universal mask `key_pos <= q_pos` gives exactly MoBA
@@ -23,6 +35,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.runtime import resolve_interpret
+from repro.kernels.tiling import check_moba_tiling, default_kb_tile
 
 NEG_INF = -1e30
 
@@ -31,6 +44,7 @@ def _fwd_kernel(tb_ref, qs_ref, qpos_ref, k_ref, v_ref,
                 o_ref, m_ref, l_ref, *,
                 scale: float, block_size: int, n_blocks: int,
                 n_tokens: int, causal: bool):
+    """Legacy flat grid: one whole key block per step."""
     bh = pl.program_id(0)
     t = pl.program_id(1)
     blk = tb_ref[bh, t]
@@ -64,11 +78,70 @@ def _fwd_kernel(tb_ref, qs_ref, qpos_ref, k_ref, v_ref,
     l_ref[0] = l
 
 
+def _fwd_kernel_tiled(tb_ref, qs_ref, qpos_ref, k_ref, v_ref,
+                      o_ref, m_ref, l_ref, o_acc, m_acc, l_acc, *,
+                      scale: float, block_size: int, kb_tile: int,
+                      n_kb: int, n_blocks: int, n_tokens: int,
+                      causal: bool):
+    """kb-tiled grid (BH, T, nkb): streams (kb_tile, d) K/V slices and
+    carries the online-softmax merge across kb steps in VMEM scratch.
+    The (o, m, l) output windows depend only on (bh, t), so they stay
+    resident across a tile's kb run and are written once at the last
+    kb step."""
+    bh = pl.program_id(0)
+    t = pl.program_id(1)
+    kb = pl.program_id(2)
+    blk = tb_ref[bh, t]
+
+    @pl.when(kb == 0)
+    def _init():
+        o_acc[...] = jnp.zeros_like(o_acc)
+        m_acc[...] = jnp.full_like(m_acc, NEG_INF)
+        l_acc[...] = jnp.zeros_like(l_acc)
+
+    q = qs_ref[0].astype(jnp.float32)            # (Tq, d)
+    kbt = k_ref[0, 0].astype(jnp.float32)        # (kb_tile, d)
+    vbt = v_ref[0, 0].astype(jnp.float32)
+    qpos = qpos_ref[0]                           # (Tq,) int32
+    tq = q.shape[0]
+
+    s = jax.lax.dot_general(q, kbt, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    kpos = (blk * block_size + kb * kb_tile
+            + jax.lax.broadcasted_iota(jnp.int32, (tq, kb_tile), 1))
+    mask = (qpos[:, None] >= 0) & (blk < n_blocks) & (kpos < n_tokens)
+    if causal:
+        mask &= kpos <= qpos[:, None]
+    s = jnp.where(mask, s, NEG_INF)
+
+    # online-softmax merge into the running (o, m, l).  With every lane
+    # masked, m stays exactly NEG_INF and alpha = exp(NEG_INF - m_safe)
+    # underflows to 0, so empty chunks contribute nothing.
+    m_prev = m_acc[...]                                       # (Tq, 1)
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    m_safe = jnp.maximum(m_cur, NEG_INF / 2)
+    alpha = jnp.exp(m_prev - m_safe)
+    p = jnp.exp(s - m_safe) * mask.astype(jnp.float32)        # (Tq, kbt)
+    m_acc[...] = m_cur
+    l_acc[...] = l_acc[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    o_acc[...] = (o_acc[...] * alpha
+                  + jax.lax.dot_general(p, vbt, (((1,), (0,)), ((), ())),
+                                        preferred_element_type=jnp.float32))
+
+    @pl.when(kb == n_kb - 1)
+    def _emit():
+        l = l_acc[...]
+        o_ref[0] = o_acc[...]
+        m_ref[0] = jnp.where(l[:, 0] > 0, m_acc[:, 0], NEG_INF)
+        l_ref[0] = l[:, 0]
+
+
 def moba_fwd(tile_block: jax.Array, q_sorted: jax.Array, q_pos: jax.Array,
              k_blocks: jax.Array, v_blocks: jax.Array, *,
              scale: float, block_size: int, n_tokens: int,
              num_q_heads: int, group: int, causal: bool = True,
-             q_tile: int = 128, interpret: bool | None = None
+             q_tile: int = 128, kb_tile: int = 0, grid: str = "grouped",
+             interpret: bool | None = None
              ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Run the forward kernel over flattened (batch·head) layouts.
 
@@ -76,8 +149,15 @@ def moba_fwd(tile_block: jax.Array, q_sorted: jax.Array, q_pos: jax.Array,
     k_blocks/v_blocks (BKV, nb, B, d) with BKV = BH / group per batch —
     i.e. BH = batch*H, BKV = batch*Hkv, H = Hkv*group.
 
+    ``grid`` selects the kb-tiled ``grouped`` grid (default) or the
+    legacy ``flat`` grid; ``kb_tile`` (grouped only, 0 = auto
+    ``min(block_size, 128)``) sets the K/V streaming granularity.
+
     Returns (o_partial (BH, L, d) f32, m (BH, L) f32, l (BH, L) f32).
     """
+    if grid not in ("grouped", "flat"):
+        raise ValueError(f"unknown moba_fwd grid {grid!r}: "
+                         f"expected 'grouped' or 'flat'")
     interpret = resolve_interpret(interpret)
     bh, L, d = q_sorted.shape
     bkv, nb, bs, _ = k_blocks.shape
@@ -85,36 +165,83 @@ def moba_fwd(tile_block: jax.Array, q_sorted: jax.Array, q_pos: jax.Array,
     assert L % q_tile == 0 and tile_block.shape == (bh, n_tiles)
     h = num_q_heads
 
-    def kv_index(bhi, t, tb_ref):
+    out_shape = [
+        jax.ShapeDtypeStruct((bh, L, d), jnp.float32),
+        jax.ShapeDtypeStruct((bh, L), jnp.float32),
+        jax.ShapeDtypeStruct((bh, L), jnp.float32),
+    ]
+
+    if grid == "flat":
+        def kv_index(bhi, t, tb_ref):
+            kv = (bhi // h) * (h // group) + (bhi % h) // group
+            blk = jnp.minimum(tb_ref[bhi, t], nb - 1)
+            return (kv, blk, 0, 0)
+
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(bh, n_tiles),
+            in_specs=[
+                pl.BlockSpec((1, q_tile, d), lambda bhi, t, tb: (bhi, t, 0)),
+                pl.BlockSpec((1, q_tile), lambda bhi, t, tb: (bhi, t)),
+                pl.BlockSpec((1, 1, bs, d), kv_index),
+                pl.BlockSpec((1, 1, bs, d), kv_index),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, q_tile, d), lambda bhi, t, tb: (bhi, t, 0)),
+                pl.BlockSpec((1, q_tile), lambda bhi, t, tb: (bhi, t)),
+                pl.BlockSpec((1, q_tile), lambda bhi, t, tb: (bhi, t)),
+            ],
+        )
+        kernel = functools.partial(
+            _fwd_kernel, scale=scale, block_size=block_size, n_blocks=nb,
+            n_tokens=n_tokens, causal=causal)
+        return pl.pallas_call(
+            kernel, grid_spec=grid_spec, out_shape=out_shape,
+            interpret=interpret,
+        )(tile_block, q_sorted, q_pos, k_blocks, v_blocks)
+
+    kb_tile = min(kb_tile or default_kb_tile(bs), bs)
+    if not interpret:
+        check_moba_tiling(bs, kb_tile, q_tile, d, k_blocks.dtype)
+    assert bs % kb_tile == 0, (bs, kb_tile)
+    n_kb = bs // kb_tile
+
+    def kv_index(bhi, t, kb, tb_ref):
         kv = (bhi // h) * (h // group) + (bhi % h) // group
         blk = jnp.minimum(tb_ref[bhi, t], nb - 1)
-        return (kv, blk, 0, 0)
+        return (kv, blk * n_kb + kb, 0, 0)
+
+    # expose the kb_tile slices as their own dim so the BlockSpec block
+    # is exactly one DMA'd slice — Pallas overlaps the next slice's
+    # fetch with the current step's compute (double buffering)
+    k_t = k_blocks.reshape(bkv, nb * n_kb, kb_tile, d)
+    v_t = v_blocks.reshape(bkv, nb * n_kb, kb_tile, d)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
-        grid=(bh, n_tiles),
+        grid=(bh, n_tiles, n_kb),
         in_specs=[
-            pl.BlockSpec((1, q_tile, d), lambda bhi, t, tb: (bhi, t, 0)),
-            pl.BlockSpec((1, q_tile), lambda bhi, t, tb: (bhi, t)),
-            pl.BlockSpec((1, 1, bs, d), kv_index),
-            pl.BlockSpec((1, 1, bs, d), kv_index),
+            pl.BlockSpec((1, q_tile, d), lambda bhi, t, kb, tb: (bhi, t, 0)),
+            pl.BlockSpec((1, q_tile), lambda bhi, t, kb, tb: (bhi, t)),
+            pl.BlockSpec((1, 1, kb_tile, d), kv_index),
+            pl.BlockSpec((1, 1, kb_tile, d), kv_index),
         ],
         out_specs=[
-            pl.BlockSpec((1, q_tile, d), lambda bhi, t, tb: (bhi, t, 0)),
-            pl.BlockSpec((1, q_tile), lambda bhi, t, tb: (bhi, t)),
-            pl.BlockSpec((1, q_tile), lambda bhi, t, tb: (bhi, t)),
+            pl.BlockSpec((1, q_tile, d), lambda bhi, t, kb, tb: (bhi, t, 0)),
+            pl.BlockSpec((1, q_tile), lambda bhi, t, kb, tb: (bhi, t)),
+            pl.BlockSpec((1, q_tile), lambda bhi, t, kb, tb: (bhi, t)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((q_tile, d), jnp.float32),
+            pltpu.VMEM((q_tile, 1), jnp.float32),
+            pltpu.VMEM((q_tile, 1), jnp.float32),
         ],
     )
     kernel = functools.partial(
-        _fwd_kernel, scale=scale, block_size=block_size, n_blocks=nb,
-        n_tokens=n_tokens, causal=causal)
+        _fwd_kernel_tiled, scale=scale, block_size=block_size,
+        kb_tile=kb_tile, n_kb=n_kb, n_blocks=nb, n_tokens=n_tokens,
+        causal=causal)
     return pl.pallas_call(
-        kernel,
-        grid_spec=grid_spec,
-        out_shape=[
-            jax.ShapeDtypeStruct((bh, L, d), jnp.float32),
-            jax.ShapeDtypeStruct((bh, L), jnp.float32),
-            jax.ShapeDtypeStruct((bh, L), jnp.float32),
-        ],
+        kernel, grid_spec=grid_spec, out_shape=out_shape,
         interpret=interpret,
-    )(tile_block, q_sorted, q_pos, k_blocks, v_blocks)
+    )(tile_block, q_sorted, q_pos, k_t, v_t)

@@ -8,6 +8,16 @@
   bwd:  delta = rowsum(dO∘O) → gather to sorted layout → backward kernel
         (recompute) → segment-sum dQ, group-reduce dK/dV
 
+Ragged query lengths (Nq not a multiple of the q tile) are padded to the
+tile inside the pipeline: padded rows route to the sentinel block, so
+their layout slots carry `q_pos = -1` — which the kernels already mask —
+and the pad is sliced off again before returning.
+
+``grid`` selects the MXU-tiled ``grouped`` kernel grids (default: grouped
+GQA topk + kb-tiled fwd/bwd) or the legacy ``flat`` grids, kept
+selectable for bisection; ``kb_tile`` sets the K/V streaming granularity
+of the tiled grids (0 = auto).
+
 Routing is non-differentiable (hard top-k; matches MoBA training
 semantics) — gradients flow through attention only, which is what lets
 key convolution learn clustering (paper App. B.2).
@@ -23,6 +33,7 @@ import jax.numpy as jnp
 from repro.configs.base import MoBAConfig
 from repro.core import routing
 from repro.kernels.runtime import resolve_interpret
+from repro.kernels.tiling import round_up
 from repro.kernels import ref as kref
 from repro.kernels.centroids import block_centroids_kernel
 from repro.kernels.flash_topk import flash_topk
@@ -39,6 +50,8 @@ class _Meta(NamedTuple):
     q_tile: int
     scale: float
     interpret: bool
+    kb_tile: int = 0
+    grid: str = "grouped"
 
 
 def _build_layouts(sel: jax.Array, nq: int, nb: int, tile: int):
@@ -60,7 +73,7 @@ def _fwd_pipeline(q, k, v, meta: _Meta):
     g = h // hkv
     bs, tk, tile = meta.block_size, meta.top_k, meta.q_tile
     tile = min(tile, nq)
-    assert nq % tile == 0, (nq, tile)
+    nq_p = round_up(nq, tile)
 
     k_blocks, nb = _flatten_kv_blocks(k, bs)
     v_blocks, _ = _flatten_kv_blocks(v, bs)
@@ -69,12 +82,20 @@ def _fwd_pipeline(q, k, v, meta: _Meta):
         k.reshape(b * hkv, n, d), bs, interpret=meta.interpret)
 
     qf = q.reshape(b * h, nq, d)
+    if nq_p != nq:
+        qf = jnp.pad(qf, ((0, 0), (0, nq_p - nq), (0, 0)))
     q_pos_offset = n - nq
     sel = flash_topk(qf, cents, tk, bs, group=g, num_q_heads=h,
                      causal=meta.causal, q_pos_offset=q_pos_offset,
-                     q_tile=tile, interpret=meta.interpret)  # (BH,Nq,k)
+                     q_tile=tile, grid=meta.grid,
+                     interpret=meta.interpret)  # (BH, Nq_p, k)
+    if nq_p != nq:
+        # pad queries route to the sentinel block → q_pos = -1 slots the
+        # kernels mask out
+        row = jnp.arange(nq_p)[None, :, None]
+        sel = jnp.where(row < nq, sel, nb)
 
-    lay = _build_layouts(sel, nq, nb, tile)
+    lay = _build_layouts(sel, nq_p, nb, tile)
     qi = jnp.maximum(lay.q_index, 0)                          # (BH, L)
     q_sorted = jnp.take_along_axis(qf, qi[..., None], axis=1)
     q_pos = jnp.where(lay.q_index >= 0, qi + q_pos_offset, -1)
@@ -83,17 +104,18 @@ def _fwd_pipeline(q, k, v, meta: _Meta):
         lay.tile_block, q_sorted, q_pos.astype(jnp.int32),
         k_blocks, v_blocks, scale=meta.scale, block_size=bs,
         n_tokens=n, num_q_heads=h, group=g, causal=meta.causal,
-        q_tile=tile, interpret=meta.interpret)
+        q_tile=tile, kb_tile=meta.kb_tile, grid=meta.grid,
+        interpret=meta.interpret)
 
-    slots = lay.pair_slot.reshape(b * h, nq * tk)             # (BH, Nq*k)
+    slots = lay.pair_slot.reshape(b * h, nq_p * tk)           # (BH, Nq_p*k)
     o_parts = jnp.take_along_axis(o_l, slots[..., None], axis=1)
     m_parts = jnp.take_along_axis(m_l, slots, axis=1)
     l_parts = jnp.take_along_axis(l_l, slots, axis=1)
     out, lse = kref.merge_partials(
-        o_parts.reshape(b * h, nq, tk, d),
-        m_parts.reshape(b * h, nq, tk),
-        l_parts.reshape(b * h, nq, tk))
-    return out, lse, lay, q_sorted, q_pos
+        o_parts.reshape(b * h, nq_p, tk, d),
+        m_parts.reshape(b * h, nq_p, tk),
+        l_parts.reshape(b * h, nq_p, tk))
+    return out[:, :nq], lse[:, :nq], lay, q_sorted, q_pos
 
 
 def _flash_moba_impl(q, k, v, meta: _Meta):
@@ -121,6 +143,7 @@ def _flash_moba_bwd(meta: _Meta, res, g_out):
     _, hkv, n, _ = k.shape
     g = h // hkv
     bs, tk, tile = meta.block_size, meta.top_k, min(meta.q_tile, nq)
+    nq_p = pair_slot.shape[1]
 
     k_blocks, nb = _flatten_kv_blocks(k, bs)
     v_blocks, _ = _flatten_kv_blocks(v, bs)
@@ -128,10 +151,9 @@ def _flash_moba_bwd(meta: _Meta, res, g_out):
     do = g_out.reshape(b * h, nq, d).astype(jnp.float32)
     delta = jnp.sum(do * out, axis=-1)                        # (BH, Nq)
 
-    # scatter per-query tensors to the sorted layout
-    L = q_sorted.shape[1]
+    # scatter per-query tensors to the sorted layout (q_pos = -1 pad and
+    # sentinel slots gather row 0 but are masked inside the kernel)
     qi = jnp.maximum(q_pos - (n - nq), 0)                     # query index
-    valid = q_pos >= 0
     do_sorted = jnp.take_along_axis(do, qi[..., None], axis=1)
     lse_sorted = jnp.take_along_axis(lse, qi, axis=1)
     delta_sorted = jnp.take_along_axis(delta, qi, axis=1)
@@ -140,12 +162,12 @@ def _flash_moba_bwd(meta: _Meta, res, g_out):
         tile_block, q_sorted, q_pos, do_sorted, lse_sorted, delta_sorted,
         k_blocks, v_blocks, scale=meta.scale, block_size=bs, n_tokens=n,
         num_q_heads=h, group=g, causal=meta.causal, q_tile=tile,
-        interpret=meta.interpret)
+        kb_tile=meta.kb_tile, grid=meta.grid, interpret=meta.interpret)
 
     # dQ: gather per-pair contributions and sum over the k slots.
-    slots = pair_slot.reshape(b * h, nq * tk)
+    slots = pair_slot.reshape(b * h, nq_p * tk)
     dq_pairs = jnp.take_along_axis(dq_l, slots[..., None], axis=1)
-    dq = dq_pairs.reshape(b * h, nq, tk, d).sum(axis=2)
+    dq = dq_pairs.reshape(b * h, nq_p, tk, d).sum(axis=2)[:, :nq]
 
     # dK/dV: zero unvisited blocks, reduce over the GQA group, un-block.
     visited = (jax.nn.one_hot(tile_block, nb + 1, dtype=jnp.float32)
@@ -167,15 +189,22 @@ _flash_moba.defvjp(_flash_moba_fwd, _flash_moba_bwd)
 def flash_moba(q: jax.Array, k: jax.Array, v: jax.Array, cfg: MoBAConfig,
                q_positions: Optional[jax.Array] = None,
                scale: Optional[float] = None, q_tile: int = 128,
+               kb_tile: int = 0, grid: str = "grouped",
                interpret: Optional[bool] = None) -> jax.Array:
     """FlashMoBA attention (Pallas kernel path).
 
     q (B,H,Nq,d); k,v (B,Hkv,N,d).  ``q_positions`` must be the contiguous
     suffix of the kv sequence (training/prefill); decode uses
     `core.moba.moba_decode_attention`.
+
+    ``grid``: 'grouped' (default — grouped-GQA topk grid + kb-tiled
+    fwd/bwd) or 'flat' (legacy seed-era grids, kept for bisection).
+    ``kb_tile``: K/V streaming granularity of the tiled grids, 0 = auto
+    (``min(block_size, 128)``).  Nq may be ragged (padded internally).
     """
     if scale is None:
         scale = 1.0 / (q.shape[-1] ** 0.5)
     meta = _Meta(cfg.block_size, cfg.top_k, cfg.causal,
-                 q_tile, float(scale), resolve_interpret(interpret))
+                 q_tile, float(scale), resolve_interpret(interpret),
+                 kb_tile, grid)
     return _flash_moba(q, k, v, meta)

@@ -30,6 +30,7 @@ from repro.optim import adamw
 
 def train(arch: str, steps: int = 50, batch: int = 8, seq: int = 512,
           smoke: bool = True, moba_impl: str = "sparse",
+          attn_backend: str = "",
           ckpt_dir: str = "", resume: str = "none",
           save_interval: int = 20, lr: float = 6e-4, seed: int = 0,
           microbatch: int = 0, log_every: int = 10,
@@ -69,7 +70,13 @@ def train(arch: str, steps: int = 50, batch: int = 8, seq: int = 512,
             start_step = extra.get("data_step", ck_step)
             print(f"[resume] restored step {ck_step} from {ckpt_dir}")
 
-    step_fn = jax.jit(S.make_train_step(cfg, tcfg, backend=moba_impl,
+    backend = moba_impl
+    if attn_backend:
+        # full spec string, e.g. "flash:compiled,flat,kb_tile=64" —
+        # options apply process-wide to the named backend instance
+        from repro.core import backends as B
+        backend = B.parse_backend_spec(attn_backend)
+    step_fn = jax.jit(S.make_train_step(cfg, tcfg, backend=backend,
                                         remat=remat),
                       donate_argnums=(0, 1))
 
@@ -127,6 +134,11 @@ def main():
                     help="reduced config (CPU-scale)")
     ap.add_argument("--moba-impl", default="sparse",
                     choices=["reference", "sparse", "kernel", "sp"])
+    ap.add_argument("--attn-backend", default="",
+                    help="backend spec overriding --moba-impl, e.g. "
+                         "flash:compiled | flash:flat | "
+                         "flash:grouped,kb_tile=64 "
+                         "(see core.backends.parse_backend_spec)")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--resume", default="none", choices=["none", "auto"])
     ap.add_argument("--save-interval", type=int, default=20)
@@ -139,6 +151,7 @@ def main():
     args = ap.parse_args()
     train(args.arch, steps=args.steps, batch=args.batch, seq=args.seq,
           smoke=args.smoke, moba_impl=args.moba_impl,
+          attn_backend=args.attn_backend,
           ckpt_dir=args.ckpt_dir, resume=args.resume,
           save_interval=args.save_interval, lr=args.lr, seed=args.seed,
           microbatch=args.microbatch, block_size=args.block_size,

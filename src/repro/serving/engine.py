@@ -192,11 +192,13 @@ class EngineConfig:
     #                                    (0 = whole-prompt prefill)
     attn_backend: str = ""             # registered backend (core.backends);
     #                                    "" → moba_impl or "reference".
-    #                                    A "name:option" spec (e.g.
-    #                                    "flash:compiled") configures the
-    #                                    registry instance PROCESS-WIDE —
-    #                                    the last spec parsed wins for
-    #                                    every engine sharing the process
+    #                                    A "name:option,..." spec (e.g.
+    #                                    "flash:compiled" or
+    #                                    "flash:flat,kb_tile=64")
+    #                                    configures the registry instance
+    #                                    PROCESS-WIDE — the last spec
+    #                                    parsed wins for every engine
+    #                                    sharing the process
     moba_impl: str = ""                # deprecated alias for attn_backend
 
 

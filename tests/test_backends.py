@@ -279,6 +279,50 @@ def test_compiled_mode_tiling_asserts():
         moba_paged_decode_pallas(*args, interpret=False, grid="grouped")
 
 
+def test_compiled_mode_moba_tiling_contract():
+    """check_moba_tiling / check_topk_tiling (kernels/tiling.py) raise
+    shaped errors naming the violating dimension — and the fwd/topk
+    wrappers invoke them before any compiled pallas_call."""
+    from repro.kernels import tiling as TL
+    from repro.kernels.flash_topk import flash_topk
+    from repro.kernels.moba_fwd import moba_fwd
+
+    with pytest.raises(ValueError, match="head_dim=64 must be a multiple"):
+        TL.check_moba_tiling(128, 128, 128, 64, jnp.float32)
+    with pytest.raises(ValueError, match="q_tile=12 must be a multiple"):
+        TL.check_moba_tiling(128, 128, 12, 128, jnp.float32)
+    with pytest.raises(ValueError, match="kb_tile=8 .*bfloat16 sublane"):
+        TL.check_moba_tiling(128, 8, 16, 128, jnp.bfloat16)
+    with pytest.raises(ValueError, match="evenly divide block_size"):
+        TL.check_moba_tiling(96, 64, 128, 128, jnp.float32)
+    # kb_tile == block_size is exempt from the %128 lane rule (small
+    # blocks mask-pad); a proper sub-tile is not
+    TL.check_moba_tiling(32, 32, 128, 128, jnp.float32)
+    with pytest.raises(ValueError, match="kb_tile=64 is the lane dim"):
+        TL.check_moba_tiling(256, 64, 128, 128, jnp.float32)
+    with pytest.raises(ValueError, match="cent_tile=96 is the lane dim"):
+        TL.check_topk_tiling(96, 128, 128, jnp.float32)
+    with pytest.raises(ValueError, match="power of two"):
+        TL.check_topk_tiling(384, 128, 128, jnp.float32)
+    TL.check_topk_tiling(128, 128, 128, jnp.float32)
+
+    # wrapper seam: a compiled request on non-tileable shapes raises the
+    # shaped contract error before any pallas_call is attempted
+    tb = jnp.zeros((2, 1), jnp.int32)
+    qs = jnp.zeros((2, 32, 16), jnp.float32)
+    qp = jnp.zeros((2, 32), jnp.int32)
+    kb = jnp.zeros((1, 4, 16, 16), jnp.float32)
+    with pytest.raises(ValueError, match="moba fwd/bwd"):
+        moba_fwd(tb, qs, qp, kb, kb, scale=0.25, block_size=16,
+                 n_tokens=64, num_q_heads=2, group=2, q_tile=32,
+                 interpret=False)
+    q = jnp.zeros((2, 128, 16), jnp.float32)
+    cents = jnp.zeros((1, 4, 16), jnp.float32)
+    with pytest.raises(ValueError, match="flash_topk"):
+        flash_topk(q, cents, 2, 16, group=2, num_q_heads=2,
+                   cent_tile=128, interpret=False)
+
+
 def test_registry_interpret_toggle_reaches_pallas_call(monkeypatch):
     """Acceptance: flipping the registry toggle makes the flash backend
     invoke ``pl.pallas_call`` with interpret=False — asserted by
@@ -324,6 +368,13 @@ def test_no_hardcoded_interpret_defaults_in_kernels():
 
     import repro.kernels
     kdir = pathlib.Path(repro.kernels.__file__).parent
+    scanned = {p.name for p in sorted(kdir.glob("*.py"))}
+    # the scan must actually see every kernel-layer module (guards
+    # against the glob silently missing a moved/renamed file)
+    for required in ("flash_topk.py", "moba_fwd.py", "moba_bwd.py",
+                     "moba_decode.py", "ops.py", "tiling.py",
+                     "runtime.py"):
+        assert required in scanned, required
     for p in sorted(kdir.glob("*.py")):
         src = p.read_text()
         assert not re.search(r"interpret\s*:\s*bool\s*=\s*True", src), p
@@ -334,6 +385,8 @@ def test_parse_backend_spec(monkeypatch):
     flash = B.get("flash")
     monkeypatch.setattr(flash, "interpret", None)
     monkeypatch.setattr(flash, "decode_grid", "grouped")
+    monkeypatch.setattr(flash, "train_grid", "grouped")
+    monkeypatch.setattr(flash, "kb_tile", 0)
     assert B.parse_backend_spec("xla") == "xla"
     assert B.parse_backend_spec("flash:compiled") == "flash"
     assert flash.interpret is False
@@ -341,10 +394,23 @@ def test_parse_backend_spec(monkeypatch):
     assert flash.interpret is True
     assert B.parse_backend_spec("pallas:flat") == "pallas"  # via alias
     assert flash.decode_grid == "flat"
+    assert flash.train_grid == "flat"       # grid options set both grids
     assert B.parse_backend_spec("flash:grouped") == "flash"
     assert flash.decode_grid == "grouped"
+    assert flash.train_grid == "grouped"
+    assert B.parse_backend_spec("flash:kb_tile=64") == "flash"
+    assert flash.kb_tile == 64
+    # comma-separated multi-option spec
+    assert B.parse_backend_spec("flash:compiled,flat,kb_tile=0") == "flash"
+    assert flash.interpret is False
+    assert flash.train_grid == "flat"
+    assert flash.kb_tile == 0
     with pytest.raises(B.BackendCapabilityError, match="option"):
         B.parse_backend_spec("flash:typo")
+    with pytest.raises(B.BackendCapabilityError, match="kb_tile"):
+        B.parse_backend_spec("flash:kb_tile=big")
+    with pytest.raises(B.BackendCapabilityError, match="kb_tile"):
+        B.parse_backend_spec("xla:kb_tile=64")
     with pytest.raises(B.BackendCapabilityError, match="toggle"):
         B.parse_backend_spec("xla:compiled")
     with pytest.raises(B.BackendCapabilityError, match="unknown"):
@@ -357,6 +423,7 @@ def test_engine_accepts_backend_spec(monkeypatch):
     bare name; bad specs fail admission as UnsupportedFeatureError."""
     flash = B.get("flash")
     monkeypatch.setattr(flash, "decode_grid", "grouped")
+    monkeypatch.setattr(flash, "train_grid", "grouped")
     ref = _reference_fixture()
     eng = Engine(ref["cfg"], ref["params"], EngineConfig(
         max_seqs=3, max_seq_len=64, attn_backend="flash:flat"))

@@ -37,16 +37,40 @@ def test_centroid_kernel_sweep(n, bs, dtype):
                                atol=1e-2 if dtype == jnp.bfloat16 else 1e-5)
 
 
+@pytest.mark.parametrize("grid", ["grouped", "flat"])
 @pytest.mark.parametrize("n,bs,k,qt", [(256, 32, 3, 64), (256, 32, 8, 128),
                                        (512, 64, 2, 128), (128, 16, 4, 32)])
-def test_flash_topk_sweep(n, bs, k, qt):
+def test_flash_topk_sweep(n, bs, k, qt, grid):
     q, kk, _ = make_qkv(n + k, n=n)
     cfg = MoBAConfig(block_size=bs, top_k=k)
     cents = routing.block_centroids(kk, bs).reshape(-1, n // bs, 32)
     sel_k = flash_topk(q.reshape(-1, n, 32), cents, k, bs,
-                       group=2, num_q_heads=4, q_tile=qt)
+                       group=2, num_q_heads=4, q_tile=qt, grid=grid)
     sel_r = moba.moba_selection(q, kk, cfg).reshape(-1, n, k)
     assert int((sel_k != sel_r).sum()) == 0
+
+
+@pytest.mark.parametrize("grid", ["grouped", "flat"])
+def test_flash_topk_padded_centroid_edge(grid):
+    """nb % cent_tile != 0: the wrapper pads the centroid array and the
+    kernels must never select a pad block (9 blocks, cent_tile 8)."""
+    n, bs, k = 288, 32, 4
+    q, kk, _ = make_qkv(7, n=n)
+    cfg = MoBAConfig(block_size=bs, top_k=k)
+    cents = routing.block_centroids(kk, bs).reshape(-1, n // bs, 32)
+    sel_k = flash_topk(q.reshape(-1, n, 32), cents, k, bs,
+                       group=2, num_q_heads=4, q_tile=96, cent_tile=8,
+                       grid=grid)
+    sel_r = moba.moba_selection(q, kk, cfg).reshape(-1, n, k)
+    assert int((sel_k != sel_r).sum()) == 0
+
+
+def test_flash_topk_unknown_grid_rejected():
+    q, kk, _ = make_qkv(1, n=128)
+    cents = routing.block_centroids(kk, 32).reshape(-1, 4, 32)
+    with pytest.raises(ValueError, match="grouped"):
+        flash_topk(q.reshape(-1, 128, 32), cents, 2, 32,
+                   group=2, num_q_heads=4, grid="typo")
 
 
 def test_flash_topk_bidirectional():
@@ -111,6 +135,68 @@ def test_flash_moba_ragged_kv():
     cfg = MoBAConfig(block_size=128, top_k=2)
     o_k = ops.flash_moba(q, kk, v, cfg, q_tile=64)
     o_r = moba.moba_attention_reference(q, kk, v, cfg)
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ------------------------------------------------- GQA grid/dtype matrix
+@pytest.mark.parametrize("grid", ["grouped", "flat"])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("group,bs", [(1, 32), (2, 32), (4, 32),
+                                      (1, 64), (2, 64), (4, 64),
+                                      (2, 128)])
+def test_flash_moba_gqa_grid_matrix(group, bs, dtype, grid):
+    """End-to-end equivalence across GQA group sizes × block sizes ×
+    dtypes, through both the MXU grouped/tiled and legacy flat grids."""
+    h, n, d = 4, 256, 32
+    hkv = h // group
+    k = 2 if bs >= 128 else 3
+    q, kk, v = make_qkv(group * 31 + bs, h=h, hkv=hkv, n=n, d=d,
+                        dtype=dtype)
+    cfg = MoBAConfig(block_size=bs, top_k=k)
+    o_k = ops.flash_moba(q, kk, v, cfg, q_tile=128, grid=grid)
+    o_r = moba.moba_attention_reference(q, kk, v, cfg)
+    np.testing.assert_allclose(np.asarray(o_k, np.float32),
+                               np.asarray(o_r, np.float32),
+                               **TOLS[dtype])
+
+
+@pytest.mark.parametrize("grid", ["grouped", "flat"])
+def test_flash_moba_odd_length(grid):
+    """Nq not a multiple of q_tile: the wrapper pads to the tile with
+    sentinel-routed rows (q_pos = -1) and slices the pad back off —
+    forward and gradients must match the oracle exactly as in the
+    aligned case (the ragged-length satellite)."""
+    q, kk, v = make_qkv(43, n=200, d=32)
+    cfg = MoBAConfig(block_size=32, top_k=3)
+    o_k = ops.flash_moba(q, kk, v, cfg, q_tile=128, grid=grid)
+    o_r = moba.moba_attention_reference(q, kk, v, cfg)
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r),
+                               rtol=2e-4, atol=2e-4)
+
+    def loss_k(q, k, v):
+        return jnp.sum(ops.flash_moba(q, k, v, cfg, q_tile=128,
+                                      grid=grid) ** 2)
+
+    def loss_r(q, k, v):
+        return jnp.sum(moba.moba_attention_reference(q, k, v, cfg) ** 2)
+
+    gk = jax.grad(loss_k, argnums=(0, 1, 2))(q, kk, v)
+    gr = jax.grad(loss_r, argnums=(0, 1, 2))(q, kk, v)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=5e-3, atol=5e-3)
+
+
+@pytest.mark.parametrize("kb_tile", [8, 16, 64])
+def test_flash_moba_kb_tile_sweep(kb_tile):
+    """Explicit kb_tile settings (sub-block K/V streaming) are
+    numerically identical to whole-block processing."""
+    q, kk, v = make_qkv(53, n=256, d=32)
+    cfg = MoBAConfig(block_size=64, top_k=3)
+    o_r = moba.moba_attention_reference(q, kk, v, cfg)
+    o_k = ops.flash_moba(q, kk, v, cfg, q_tile=64, kb_tile=kb_tile,
+                         grid="grouped")
     np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r),
                                rtol=2e-4, atol=2e-4)
 
