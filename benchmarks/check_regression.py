@@ -2,19 +2,27 @@
 
 Compares a freshly generated benchmark JSON (typically a ``--smoke`` run
 from the bench-smoke CI leg) against the committed full-shape snapshot
-(``BENCH_kernels.json`` / ``BENCH_fig3.json`` / ``BENCH_decode.json``).
-Cases are matched by name and paths by name — smoke runs cover a subset
-of the snapshot's cases, so only the intersection is compared, but an
-empty intersection is itself a failure (it means the smoke shapes
-drifted away from the snapshot).
+(``BENCH_kernels.json`` / ``BENCH_fig3.json`` / ``BENCH_decode.json`` /
+``BENCH_serve.json``).  Cases are matched by name and paths by name —
+smoke runs cover a subset of the snapshot's cases, so only the
+intersection is compared, but an empty intersection is itself a failure
+(it means the smoke shapes drifted away from the snapshot).
 
 Checked per matched path:
   * ``hbm_bytes`` (and ``topk_cent_bytes`` where present) must not
     exceed the snapshot by more than ``--tol`` (relative);
   * the fresh report's ``agree`` verdict must be true.
 
-``wall_us`` is deliberately ignored: interpret-mode wall time is not
-TPU-meaningful (it stays informational in the JSON artifacts).
+Checked per matched case with a ``metrics`` dict (the serve schema):
+  * ``prefix_hit_rate`` / ``prefill_tokens_saved`` are floors — pure
+    scheduler accounting, so they must not drop below the snapshot by
+    more than ``--tol`` (relative);
+  * ``speedup`` (prefix-cache on vs off, a within-run ratio, so
+    machine-independent in sign) must stay strictly above 1.0.
+
+``wall_us`` and ``tokens_per_s`` are deliberately ignored across
+machines: interpret-mode wall time is not TPU-meaningful (they stay
+informational in the JSON artifacts).
 
 Exit 0 = clean; exit 1 = regression or disagreement, with a table of
 every violation on stderr.
@@ -26,6 +34,7 @@ import json
 import sys
 
 BYTE_KEYS = ("hbm_bytes", "topk_cent_bytes")
+RATE_KEYS = ("prefix_hit_rate", "prefill_tokens_saved")
 
 
 def _index(report):
@@ -69,6 +78,22 @@ def compare(baseline: dict, new: dict, tol: float):
                         f"{old:.3e} -> {cur:.3e} "
                         f"(+{(cur / old - 1) * 100:.1f}% > "
                         f"{tol * 100:.0f}%)")
+        metrics = case.get("metrics")
+        if metrics:
+            base_metrics = base.get("metrics", {})
+            for key in RATE_KEYS:
+                if key not in metrics or key not in base_metrics:
+                    continue
+                old, cur = base_metrics[key], metrics[key]
+                if cur < old * (1 - tol):
+                    problems.append(
+                        f"{name}: {key} dropped {old:.3f} -> {cur:.3f} "
+                        f"(-{(1 - cur / max(old, 1e-9)) * 100:.1f}% > "
+                        f"{tol * 100:.0f}%)")
+            if "speedup" in metrics and metrics["speedup"] <= 1.0:
+                problems.append(
+                    f"{name}: prefix-cache speedup {metrics['speedup']:.3f}"
+                    f" <= 1.0 (cache-on run must beat cache-off)")
     if matched == 0:
         problems.append(
             "no case/path names in common between the fresh run and the "

@@ -11,17 +11,55 @@ per-shard tokens/s plus p50/p99 TTFT and end-to-end latency.  Devices
 are simulated on the host platform when fewer than N are visible, so
 the flag works on a laptop (throughput numbers are then about dispatch
 overheads, not real parallel speedup).
+
+``--json out.json`` (optionally with ``--smoke``) instead runs the
+radix-tree prefix-cache traces: synthetic request streams sharing a
+system-prompt prefix (page-aligned and misaligned variants) plus an
+undersized-pool preemption trace, each served twice — ``prefix_off`` vs
+``prefix_on`` — with greedy tokens compared for exactness.  The report
+uses the same stable machine-readable schema style as
+``decode_micro.py`` (schema_version, named cases, a top-level ``agree``
+verdict, nonzero exit on disagreement) and is consumed by the CI
+``bench-smoke`` leg via ``check_regression.py``: per-case ``metrics``
+carry ``tokens_per_s``, ``latency_p50_ms`` / ``latency_p99_ms``,
+``prefix_hit_rate``, ``prefill_tokens_saved``, ``speedup`` and
+``pages_in_use_peak``.  Wall-time-derived numbers are informational on
+CPU; the gated signals are exactness, the hit/saved rates (pure
+scheduler accounting) and the within-run on/off speedup ratio.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import os
+import sys
 import time
 
 import numpy as np
 
 ARCH = "moba-340m"
 PROMPT, GEN = 48, 24
+
+SCHEMA_VERSION = 1
+
+# prefix-cache traces: n requests share a prefix_len-token system
+# prompt, each with a distinct 1..sfx-token user suffix.  max_seqs
+# staggers admission (later waves hit the cache); num_pages=0 means a
+# fully provisioned pool, nonzero undersizes it to force preemption.
+SMOKE_TRACES = [
+    dict(kind="prefix_aligned", n=10, prefix_len=96, sfx=8, gen=4,
+         max_seqs=2, num_pages=0),
+    dict(kind="prefix_misaligned", n=10, prefix_len=101, sfx=8, gen=4,
+         max_seqs=2, num_pages=0),
+    dict(kind="preempt_swap", n=6, prefix_len=96, sfx=8, gen=16,
+         max_seqs=4, num_pages=22),
+]
+FULL_TRACES = SMOKE_TRACES + [
+    dict(kind="prefix_aligned", n=64, prefix_len=2048, sfx=16, gen=8,
+         max_seqs=4, num_pages=0),
+    dict(kind="prefix_misaligned", n=64, prefix_len=2053, sfx=16, gen=8,
+         max_seqs=4, num_pages=0),
+]
 
 
 def _engine_row(batch: int):
@@ -100,13 +138,178 @@ def bench_sharded(shards: int, n_requests: int = 16):
     return rows
 
 
+# ----------------------------------------------- prefix-cache JSON mode
+def _round_up(n: int, m: int) -> int:
+    return -(-n // m) * m
+
+
+_STAT_KEYS = ("prefill_tokens", "prefix_hit_tokens",
+              "prefix_prompt_tokens", "cow_copies", "swap_restores",
+              "preemptions")
+
+
+def _trace_prompts(rng, vocab, tr):
+    prefix = rng.integers(0, vocab, tr["prefix_len"], dtype=np.int32)
+    return [np.concatenate([prefix, rng.integers(
+        0, vocab, 1 + int(rng.integers(tr["sfx"])),
+        dtype=np.int32)]) for _ in range(tr["n"])]
+
+
+def _serve_trace(cfg, params, prompts, tr, prefix_cache: bool):
+    """Warm-then-measure on ONE engine: jit caches live per engine, so a
+    throwaway pass over a content-disjoint trace of the same shape
+    compiles every bucket the measured pass touches (full-context
+    prefill, suffix prefill, decode, drain ops) without seeding the real
+    trace's prefix into the tree.  Returns (outs, stat_deltas, wall,
+    latencies, raw_stats) for the measured pass only."""
+    from repro.serving.engine import Engine, EngineConfig
+
+    max_len = _round_up(tr["prefix_len"] + tr["sfx"] + tr["gen"] + 1, 16)
+    eng = Engine(cfg, params, EngineConfig(
+        max_seqs=tr["max_seqs"], max_seq_len=max_len,
+        num_pages=tr["num_pages"], prefix_cache=prefix_cache))
+    warm = dict(tr, n=tr["max_seqs"] + 2)
+    for p in _trace_prompts(np.random.default_rng(7), cfg.vocab_size,
+                            warm):
+        eng.submit(p, max_new_tokens=tr["gen"])
+    eng.run(realtime=False)
+    base = dict(eng.stats)
+    t0 = eng._wall()
+    reqs = [eng.submit(p, max_new_tokens=tr["gen"], arrival=t0)
+            for p in prompts]
+    w0 = time.perf_counter()
+    eng.run(realtime=False)
+    wall = time.perf_counter() - w0
+    delta = {k: eng.stats[k] - base.get(k, 0) for k in _STAT_KEYS}
+    lat = np.array([r.t_done - r.arrival for r in reqs])
+    return [list(r.out) for r in reqs], delta, wall, lat, dict(eng.stats)
+
+
+def _prefix_case(tr) -> dict:
+    import jax
+    from repro.configs import get_smoke_config
+    from repro.models import transformer as T
+
+    cfg = get_smoke_config(ARCH)
+    params = T.init_lm(jax.random.PRNGKey(0), cfg)
+    prompts = _trace_prompts(np.random.default_rng(42), cfg.vocab_size,
+                             tr)
+
+    paths, outs, stats = {}, {}, {}
+    for pname, on in (("prefix_off", False), ("prefix_on", True)):
+        out, st, wall, lat, raw = _serve_trace(cfg, params, prompts, tr,
+                                               on)
+        outs[pname], stats[pname] = out, st
+        gen_tokens = sum(len(o) for o in out)
+        paths[pname] = {
+            "wall_us": wall * 1e6,
+            "tokens_per_s": gen_tokens / max(wall, 1e-9),
+            "latency_p50_ms": float(np.percentile(lat, 50) * 1e3),
+            "latency_p99_ms": float(np.percentile(lat, 99) * 1e3),
+            "prefill_tokens": st["prefill_tokens"],
+            "pages_in_use_peak": raw["pages_in_use_peak"],
+            "preemptions": st["preemptions"],
+        }
+
+    on_stats = stats["prefix_on"]
+    exact = outs["prefix_on"] == outs["prefix_off"]
+    hit_rate = (on_stats["prefix_hit_tokens"]
+                / max(on_stats["prefix_prompt_tokens"], 1))
+    # prefill tokens the cache actually elided, as a fraction of what
+    # the off path prefilled (re-prefills after preemption included)
+    saved = 1 - (on_stats["prefill_tokens"]
+                 / max(stats["prefix_off"]["prefill_tokens"], 1))
+    speedup = (paths["prefix_off"]["wall_us"]
+               / max(paths["prefix_on"]["wall_us"], 1e-9))
+    metrics = {
+        "tokens_per_s": paths["prefix_on"]["tokens_per_s"],
+        "latency_p50_ms": paths["prefix_on"]["latency_p50_ms"],
+        "latency_p99_ms": paths["prefix_on"]["latency_p99_ms"],
+        "prefix_hit_rate": hit_rate,
+        "prefill_tokens_saved": saved,
+        "pages_in_use_peak": paths["prefix_on"]["pages_in_use_peak"],
+        "cow_copies": on_stats["cow_copies"],
+        "swap_restores": on_stats["swap_restores"],
+        "speedup": speedup,
+    }
+    if tr["kind"] == "preempt_swap":
+        # undersized pool: the gated signals are exact replay through
+        # swap/restore, not throughput (preemption timing is noisy)
+        agree = exact and on_stats["swap_restores"] > 0
+        for k in ("speedup", "prefix_hit_rate", "prefill_tokens_saved"):
+            metrics[f"{k}_info"] = metrics.pop(k)
+    else:
+        agree = exact and metrics["prefill_tokens_saved"] >= 0.5 \
+            and speedup > 1.0
+    return {
+        "name": f"serve_{tr['kind']}_P{tr['prefix_len']}",
+        "trace": dict(tr),
+        "exact": exact,
+        "agree": agree,
+        "metrics": metrics,
+        "paths": paths,
+    }
+
+
+def run_cases(traces):
+    return [_prefix_case(tr) for tr in traces]
+
+
+def _report(cases):
+    import jax
+
+    return {
+        "benchmark": "serve_throughput",
+        "schema_version": SCHEMA_VERSION,
+        "arch": ARCH,
+        "dtype": "float32",
+        "jax_version": jax.__version__,
+        "device": jax.default_backend(),
+        "agree": all(c["agree"] for c in cases),
+        "cases": cases,
+    }
+
+
+def _json_main(args) -> int:
+    cases = run_cases(SMOKE_TRACES if args.smoke else FULL_TRACES)
+    report = _report(cases)
+    if args.json:
+        with open(args.json, "w", encoding="utf-8") as f:
+            json.dump(report, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {args.json}", file=sys.stderr)
+    for c in cases:
+        m = c["metrics"]
+        hit = m.get("prefix_hit_rate", m.get("prefix_hit_rate_info", 0))
+        print(f"{c['name']},{c['paths']['prefix_on']['wall_us']:.1f},"
+              f"exact={c['exact']};hit_rate={hit:.2f};"
+              f"tok_s={m['tokens_per_s']:.1f}")
+    if not report["agree"]:
+        bad = [c["name"] for c in cases if not c["agree"]]
+        print(f"PREFIX-CACHE DISAGREEMENT: {bad}", file=sys.stderr)
+        return 1
+    return 0
+
+
 def _main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--shards", type=int, default=0,
                     help="benchmark the sharded engine with N page-pool "
                          "shards (0 = single-host rows)")
     ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--json", metavar="OUT", nargs="?", const="",
+                    default=None,
+                    help="run the prefix-cache traces and write the "
+                         "machine-readable report here (the "
+                         "BENCH_serve.json schema); bare --json prints "
+                         "the CSV rows only")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small prefix-cache traces only (the CI "
+                         "bench-smoke leg); implies the JSON mode")
     args = ap.parse_args()
+    if args.json is not None or args.smoke:
+        args.json = args.json or None
+        raise SystemExit(_json_main(args))
     if args.shards:
         # must happen before jax initializes (transitively via repro.*);
         # append so a pre-existing XLA_FLAGS keeps its flags, unless the

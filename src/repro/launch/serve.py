@@ -41,7 +41,8 @@ def _make_engine(cfg, params, ecfg: EngineConfig, shards: int):
 def serve(arch: str, batch: int = 4, prompt_len: int = 64, gen: int = 32,
           smoke: bool = True, attn_backend: str = "reference",
           seed: int = 0, use_engine: str = "auto",
-          prefill_chunk: int = 0, shards: int = 0):
+          prefill_chunk: int = 0, shards: int = 0,
+          prefix_cache: bool = False, swap_bytes: int = None):
     """Decode ``gen`` greedy tokens for ``batch`` random prompts.
 
     Routes through the paged continuous-batching engine when the arch
@@ -62,10 +63,12 @@ def serve(arch: str, batch: int = 4, prompt_len: int = 64, gen: int = 32,
     rng = np.random.default_rng(seed)
     prompts = rng.integers(0, cfg.vocab_size, (batch, prompt_len),
                            dtype=np.int32)
+    kw = {} if swap_bytes is None else {"swap_bytes": swap_bytes}
     eng = _make_engine(cfg, params, EngineConfig(
         max_seqs=batch, max_seq_len=_round_up(prompt_len + gen, 16),
         max_prefill_batch=min(batch, 4), attn_backend=attn_backend,
-        prefill_chunk=prefill_chunk), shards)
+        prefill_chunk=prefill_chunk, prefix_cache=prefix_cache, **kw),
+        shards)
     reqs = [eng.submit(prompts[i], max_new_tokens=gen)
             for i in range(batch)]
     eng.run()
@@ -83,7 +86,9 @@ def serve_stream(arch: str, n_requests: int = 16, rate: float = 8.0,
                  max_seqs: int = 8, num_pages: int = 0,
                  smoke: bool = True, attn_backend: str = "reference",
                  seed: int = 0, realtime: bool = True,
-                 prefill_chunk: int = 0, shards: int = 0) -> dict:
+                 prefill_chunk: int = 0, shards: int = 0,
+                 prefix_cache: bool = False,
+                 swap_bytes: int = None) -> dict:
     """Continuous-batching scenario: Poisson arrivals (``rate`` req/s),
     mixed prompt/generation lengths.  Reports tokens/s and p50/p99
     time-to-first-token + end-to-end latency (per shard too when
@@ -97,9 +102,11 @@ def serve_stream(arch: str, n_requests: int = 16, rate: float = 8.0,
     params = T.init_lm(jax.random.PRNGKey(seed), cfg)
     rng = np.random.default_rng(seed)
     max_len = _round_up(prompt_range[1] + gen_range[1], 16)
+    kw = {} if swap_bytes is None else {"swap_bytes": swap_bytes}
     eng = _make_engine(cfg, params, EngineConfig(
         max_seqs=max_seqs, max_seq_len=max_len, num_pages=num_pages,
-        attn_backend=attn_backend, prefill_chunk=prefill_chunk), shards)
+        attn_backend=attn_backend, prefill_chunk=prefill_chunk,
+        prefix_cache=prefix_cache, **kw), shards)
     t = 0.0
     for _ in range(n_requests):
         t += rng.exponential(1.0 / rate)
@@ -125,6 +132,15 @@ def serve_stream(arch: str, n_requests: int = 16, rate: float = 8.0,
         "preemptions": eng.stats["preemptions"],
         "decode_steps": eng.stats["decode_steps"],
     }
+    if prefix_cache:
+        st = eng.stats
+        metrics["prefix_hit_rate"] = (
+            st["prefix_hit_tokens"] / max(st["prefix_prompt_tokens"], 1))
+        metrics["prefix_hit_tokens"] = st["prefix_hit_tokens"]
+        metrics["cow_copies"] = st["cow_copies"]
+        metrics["tree_evictions"] = st["tree_evictions"]
+        metrics["swap_restores"] = st["swap_restores"]
+        metrics["pages_in_use_peak"] = st["pages_in_use_peak"]
     if shards:
         dec_s = max(eng.stats["decode_s"], 1e-9)
         metrics["per_shard_tokens_per_s"] = [
@@ -139,6 +155,13 @@ def serve_stream(arch: str, n_requests: int = 16, rate: float = 8.0,
           f"latency p50/p99 {metrics['latency_p50_ms']:.0f}/"
           f"{metrics['latency_p99_ms']:.0f} ms; "
           f"{metrics['preemptions']} preemptions")
+    if prefix_cache:
+        print(f"  prefix cache: hit rate {metrics['prefix_hit_rate']:.2f} "
+              f"({metrics['prefix_hit_tokens']} tokens), "
+              f"{metrics['cow_copies']} COW copies, "
+              f"{metrics['tree_evictions']} evictions, "
+              f"{metrics['swap_restores']} swap restores, "
+              f"peak {metrics['pages_in_use_peak']} pages")
     if shards:
         for s, tps in enumerate(metrics["per_shard_tokens_per_s"]):
             print(f"  shard {s}: {metrics['per_shard_requests'][s]} "
@@ -217,6 +240,14 @@ def main():
                     help="chunked prefill: cache prompts in chunks of "
                          "this many tokens across engine steps "
                          "(0 = whole-prompt prefill)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="radix-tree prefix caching: requests sharing a "
+                         "cached token prefix reuse its KV pages "
+                         "(copy-on-write) and prefill only the suffix")
+    ap.add_argument("--swap-bytes", type=int, default=None,
+                    help="host-memory budget for preemption swap "
+                         "(bytes; 0 disables swap so preempted requests "
+                         "recompute; default 64 MiB)")
     ap.add_argument("--shards", type=int, default=0,
                     help="page-pool shards over the mesh data axis "
                          "(0 = single-host engine); per-shard sizing "
@@ -255,14 +286,18 @@ def main():
                          num_pages=args.num_pages, smoke=args.smoke,
                          attn_backend=backend, seed=args.seed,
                          prefill_chunk=args.prefill_chunk,
-                         shards=args.shards)
+                         shards=args.shards,
+                         prefix_cache=args.prefix_cache,
+                         swap_bytes=args.swap_bytes)
         else:
             serve(args.arch, batch=args.batch or 4,
                   prompt_len=args.prompt_len or 64, gen=args.gen or 32,
                   smoke=args.smoke,
                   attn_backend=backend, seed=args.seed,
                   use_engine="never" if args.mode == "fixed" else "auto",
-                  prefill_chunk=args.prefill_chunk, shards=args.shards)
+                  prefill_chunk=args.prefill_chunk, shards=args.shards,
+                  prefix_cache=args.prefix_cache,
+                  swap_bytes=args.swap_bytes)
     except ServingError as e:  # unsupported arch / impossible sizing;
         # genuine internal errors keep their tracebacks
         print(f"error: {e}", file=sys.stderr)

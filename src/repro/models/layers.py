@@ -281,6 +281,7 @@ def _paged_attend(q, k, v, cache, page_state, cfg: ModelConfig, kind: str,
             "key-conv configs (DESIGN.md §4)")
     new_ring = None
     if n == 1:                                 # decode: one token per seq
+        k_raw = k
         if needs_conv:
             ring = cache["key_conv_state"]     # decode rows ARE the slots
             k, stepped = apply_key_conv_decode(conv_w, k, ring)
@@ -290,6 +291,9 @@ def _paged_attend(q, k, v, cache, page_state, cfg: ModelConfig, kind: str,
         new_cache = PC.paged_append_decode(cache, bt, kvl, active, k, v)
         if new_ring is not None:
             new_cache["key_conv_state"] = new_ring
+        if needs_conv and "key_conv_tails" in cache:
+            new_cache = PC.update_key_conv_tails(
+                new_cache, bt, kvl, active.astype(jnp.int32), k_raw)
         o = be.paged_decode(a, kind, q, new_cache, bt, post_len,
                             positions=positions)
         return o, new_cache
@@ -312,6 +316,9 @@ def _paged_attend(q, k, v, cache, page_state, cfg: ModelConfig, kind: str,
     new_cache = PC.paged_append_prefill(cache, bt, q_len, k, v, kv_len=kvl)
     if new_ring is not None:
         new_cache["key_conv_state"] = new_ring
+    if needs_conv and "key_conv_tails" in cache:
+        new_cache = PC.update_key_conv_tails(new_cache, bt, kvl, q_len,
+                                             k_raw)
     if page_state.get("chunked"):
         o = be.paged_chunk_prefill(a, kind, q, new_cache, bt, kvl, q_len)
     else:

@@ -275,14 +275,17 @@ def init_caches(cfg: ModelConfig, batch: int, max_len: int,
 
 
 def init_paged_caches(cfg: ModelConfig, num_pages: int, page_size: int,
-                      dtype=jnp.bfloat16, max_seqs: int = 0) -> dict:
+                      dtype=jnp.bfloat16, max_seqs: int = 0,
+                      prefix_tails: bool = False) -> dict:
     """Stacked paged caches (page pools) in the same group/slot layout as
     :func:`init_caches`, so either cache kind flows through the same scan.
 
     Only attention slots are pageable; recurrent (ssm) and cross/decoder
     slots have no paging granularity — the engine rejects those archs.
     ``max_seqs`` sizes the per-slot key-conv ring buffers on MoBA slots
-    of key-conv models (zero skips them — dryrun/inspection use).
+    of key-conv models (zero skips them — dryrun/inspection use);
+    ``prefix_tails`` additionally materializes the per-page raw-key
+    tails prefix-cache engines restore ring state from.
     """
     from repro.serving import paged_cache as PC
 
@@ -297,7 +300,7 @@ def init_paged_caches(cfg: ModelConfig, num_pages: int, page_size: int,
         return {f"slot_{i}": PC.init_page_pool(
                     cfg, num_pages, page_size,
                     with_centroids=(kind == "moba"), dtype=dtype,
-                    max_seqs=max_seqs)
+                    max_seqs=max_seqs, prefix_tails=prefix_tails)
                 for i, kind in enumerate(pattern)}
 
     return jax.vmap(one_group)(jnp.arange(n_groups))

@@ -33,7 +33,7 @@ from repro.core import backends as B
 from repro.launch import steps as S
 from repro.models import transformer as T
 from repro.serving import paged_cache as PC
-from repro.serving.scheduler import (Request, Scheduler,
+from repro.serving.scheduler import (Request, Scheduler, ServingError,
                                      UnsupportedFeatureError)
 
 
@@ -156,6 +156,90 @@ def record_decode(reqs: List[Request], tok: np.ndarray,
         cur_tok[r.slot] = tok[r.slot]
 
 
+def needs_key_conv(cfg: ModelConfig) -> bool:
+    """Whether serving ``cfg`` exercises the key-conv ring buffers."""
+    a = cfg.attention
+    return bool(a.moba is not None and a.moba.key_conv_width
+                and any(k == "moba" for k in cfg.layer_pattern))
+
+
+class HostSwapStore:
+    """Host-memory backing store for preempted sequences.
+
+    ``save`` snapshots a victim's written pages (K/V, centroids, key-conv
+    tails) plus its ring-buffer row into ``req.swap_data`` *before* the
+    scheduler frees them; total residency is capped at
+    ``capacity_bytes`` — an over-cap save returns False and the
+    scheduler falls back to recompute preemption.  On re-admission the
+    scheduler queues the request in its cache ops and the engine's
+    :func:`drain_cache_ops` scatters the snapshot into the newly
+    reserved pages, restores ``cache_len``, and frees the store bytes —
+    the remaining suffix to prefill is exactly the one token recompute
+    would have replayed last, so greedy streams resume bit-exactly.
+
+    Reads the engine's live ``caches`` attribute through a backref (the
+    pytree is replaced functionally every step); ``shard`` selects one
+    shard's slice for the sharded engine (one store per shard, so
+    ``used`` accounting matches the per-shard scheduler's victims)."""
+
+    def __init__(self, engine, capacity_bytes: int,
+                 shard: Optional[int] = None):
+        self._engine = engine
+        self.capacity = capacity_bytes
+        self.shard = shard
+        self.used = 0
+
+    def save(self, req: Request, pages: List[int], slot: int) -> bool:
+        data = PC.gather_pages_host(self._engine.caches, pages,
+                                    shard=self.shard)
+        ring = PC.gather_ring_rows(self._engine.caches, slot,
+                                   shard=self.shard)
+        nbytes = (sum(v.nbytes for v in data.values())
+                  + sum(v.nbytes for v in ring.values()))
+        if self.used + nbytes > self.capacity:
+            return False
+        self.drop(req)
+        req.swap_data = {"pages": data, "ring": ring,
+                         "n_tokens": req.cache_len, "nbytes": nbytes}
+        self.used += nbytes
+        return True
+
+    def drop(self, req: Request) -> None:
+        if req.swap_data is not None:
+            self.used -= req.swap_data["nbytes"]
+            req.swap_data = None
+
+
+def drain_cache_ops(caches, sched: Scheduler, swap_store, page_size: int,
+                    shard: Optional[int] = None):
+    """Apply the scheduler's planned device cache ops, in order: COW
+    page copies (sources pinned since scheduling, so FIFO application
+    reads them before any reuse), swap restores, key-conv ring loads.
+    Returns the updated cache pytree; restores also set the request's
+    ``cache_len`` so the takes computed at prefill see the restored
+    prefix."""
+    ops = sched.take_cache_ops()
+    # one copy per call: the op shape stays (1,) no matter how many COWs
+    # a step batches, so the traced copy compiles exactly once
+    for s, d in ops["copies"]:
+        caches = PC.copy_pages(caches, [s], [d], shard=shard)
+    for req in ops["restores"]:
+        sd = req.swap_data
+        pages = sched._seq_pages[req.slot][
+            :math.ceil(sd["n_tokens"] / page_size)]
+        caches = PC.scatter_pages_device(caches, pages, sd["pages"],
+                                         shard=shard)
+        if sd["ring"]:
+            caches = PC.scatter_ring_rows(caches, req.slot, sd["ring"],
+                                          shard=shard)
+        req.cache_len = sd["n_tokens"]
+        swap_store.drop(req)
+        sched.stats["swap_restores"] += 1
+    for sl, pg in ops["ring_loads"]:        # same shape-stability story
+        caches = PC.load_ring_from_tails(caches, [sl], [pg], shard=shard)
+    return caches
+
+
 def unsupported_reason(cfg: ModelConfig) -> Optional[Tuple[str, str]]:
     """(feature, reason) the paged engine cannot serve, or None.
 
@@ -190,6 +274,13 @@ class EngineConfig:
     prefill_chunk: int = 0             # split prompts into chunks of this
     #                                    many tokens across engine steps
     #                                    (0 = whole-prompt prefill)
+    prefix_cache: bool = False         # radix-tree prefix cache: admission
+    #                                    maps cached pages (refcount++) and
+    #                                    prefills only the suffix, COWing a
+    #                                    shared partial tail page
+    swap_bytes: int = 64 << 20         # host-memory cap (per shard) for
+    #                                    swap-based preemption; 0 = always
+    #                                    recompute preempted prefixes
     attn_backend: str = ""             # registered backend (core.backends);
     #                                    "" → moba_impl or "reference".
     #                                    A "name:option,..." spec (e.g.
@@ -220,17 +311,35 @@ class Engine:
         admission_capability_check(cfg, self.attn_backend)
         self.page_size, self.pages_per_seq, self.num_pages = \
             resolve_pool_sizes(cfg, ecfg)
+        conv = needs_key_conv(cfg)
+        if ecfg.prefix_cache and conv \
+                and cfg.attention.moba.key_conv_width - 1 > self.page_size:
+            raise ServingError(
+                f"prefix cache needs key_conv_width - 1 "
+                f"({cfg.attention.moba.key_conv_width - 1}) <= page_size "
+                f"({self.page_size}): ring state restores from one "
+                f"page's raw-key tail")
         self.caches = T.init_paged_caches(
             cfg, self.num_pages, self.page_size,
-            dtype=jnp.dtype(cfg.dtype), max_seqs=ecfg.max_seqs)
+            dtype=jnp.dtype(cfg.dtype), max_seqs=ecfg.max_seqs,
+            prefix_tails=ecfg.prefix_cache and conv)
+        self.swap_store = (HostSwapStore(self, ecfg.swap_bytes)
+                           if ecfg.swap_bytes > 0 else None)
         self.sched = Scheduler(
             num_pages=self.num_pages, page_size=self.page_size,
             max_seqs=ecfg.max_seqs, max_pages_per_seq=self.pages_per_seq,
             max_prefill_batch=ecfg.max_prefill_batch,
-            chunk_tokens=ecfg.prefill_chunk)
+            chunk_tokens=ecfg.prefill_chunk,
+            prefix_cache=ecfg.prefix_cache, key_conv=conv,
+            swap=self.swap_store)
+        # prefix hits and swap restores resume mid-context, so their
+        # suffix prefills need the chunk-aware (kv_len-offset) path even
+        # when chunked prefill itself is off
+        self._chunk_aware = bool(ecfg.prefill_chunk or ecfg.prefix_cache
+                                 or ecfg.swap_bytes > 0)
         self._prefill = jax.jit(
             S.make_paged_prefill_step(cfg, backend=self.attn_backend,
-                                      chunked=bool(ecfg.prefill_chunk)),
+                                      chunked=self._chunk_aware),
             donate_argnums=(2,))
         self._decode = jax.jit(
             S.make_paged_decode_step(cfg, backend=self.attn_backend),
@@ -239,10 +348,14 @@ class Engine:
         self._next_rid = 0
         self._t0 = None
         self.finished: List[Request] = []
-        # perf counters (wall seconds / token counts)
+        # perf counters (wall seconds / token counts); the prefix/swap
+        # keys mirror the scheduler's counters each step so the dict is
+        # one stable, benchmark-consumable schema
         self.stats = {"prefill_s": 0.0, "decode_s": 0.0,
                       "prefill_tokens": 0, "decode_steps": 0,
-                      "decode_tokens": 0, "preemptions": 0}
+                      "decode_tokens": 0, "preemptions": 0,
+                      "tree_evictions": 0, "pages_in_use_peak": 0}
+        self.stats.update(self.sched.stats)
 
     # ------------------------------------------------------------- intake
     def submit(self, prompt: Sequence[int], max_new_tokens: int,
@@ -302,11 +415,17 @@ class Engine:
                 else time.perf_counter() - self._t0)
 
     def step(self, now: float = float("inf")) -> Dict:
-        """One engine iteration: admit+prefill, then decode all running."""
+        """One engine iteration: admit (applying COW copies, swap
+        restores and ring loads the plan scheduled) + prefill, then
+        decode all running."""
         plan = self.sched.plan_step(now)
         self.stats["preemptions"] += len(plan.preempted)
+        self.caches = drain_cache_ops(self.caches, self.sched,
+                                      self.swap_store, self.page_size)
         if plan.prefills:
             self._run_prefill(plan.prefills, now)
+            for r in plan.prefills:       # newly cached full pages join
+                self.sched.note_cached(r)  # the prefix tree immediately
         # recomputed after prefill so every request whose context
         # completed this step — one-shot admissions and final chunks
         # alike — joins the decode batch in the same iteration
@@ -314,11 +433,21 @@ class Engine:
                    if r.state == "running" and not r.done]
         if decodes:
             self._run_decode(decodes, now)
+            if self.ecfg.prefix_cache:
+                for r in decodes:         # page-boundary crossings make
+                    if r.cache_len % self.page_size == 0:   # a page full
+                        self.sched.note_cached(r)
         done = [r for r in list(self.sched.running) if r.done]
         for r in done:
             self.sched.finish(r)
             r.t_done = self._wall()
             self.finished.append(r)
+        self.stats.update(self.sched.stats)
+        if self.sched.tree is not None:
+            self.stats["tree_evictions"] = self.sched.tree.evictions
+        self.stats["pages_in_use_peak"] = max(
+            self.stats["pages_in_use_peak"],
+            self.num_pages - self.sched.alloc.available)
         return {"prefilled": len(plan.prefills), "decoded": len(decodes),
                 "finished": len(done), "preempted": len(plan.preempted)}
 

@@ -25,12 +25,20 @@ Centroid semantics match the dense cache exactly (tests assert this):
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+import functools
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
+
+# leaves indexed by physical page id on their (first non-shard) axis —
+# the unit that page-granular ops (COW copy, swap save/restore) move.
+# ``key_conv_state`` is per sequence *slot*, not per page, and moves via
+# the ring-row helpers instead.
+PAGE_LEAVES = ("pages_k", "pages_v", "centroids", "key_conv_tails")
 
 
 def resolve_page_size(cfg: ModelConfig) -> int:
@@ -43,12 +51,19 @@ def resolve_page_size(cfg: ModelConfig) -> int:
 
 def init_page_pool(cfg: ModelConfig, num_pages: int, page_size: int,
                    with_centroids: bool, dtype=jnp.bfloat16,
-                   max_seqs: int = 0) -> Dict:
+                   max_seqs: int = 0, prefix_tails: bool = False) -> Dict:
     """One layer slot's pool.  MoBA slots of key-conv models additionally
     carry a per-sequence-slot ring buffer ``key_conv_state`` of the last
     ``key_conv_width - 1`` raw (post-RoPE, pre-conv) keys, sized by
     ``max_seqs`` — the single-step decode conv and chunked prefill both
-    read/write it by scheduler slot id (DESIGN.md §4)."""
+    read/write it by scheduler slot id (DESIGN.md §4).
+
+    ``prefix_tails`` (prefix-cache engines of key-conv models) adds a
+    per-*page* companion ``key_conv_tails`` holding the raw keys of each
+    page's last ``width - 1`` positions: when admission maps a sequence
+    onto cached pages, its ring row is loaded from the last matched
+    page's tail, so the suffix prefill convs with exactly the state a
+    contiguous prefill would have carried (docs/serving.md)."""
     hkv, dh = cfg.num_kv_heads, cfg.resolved_head_dim
     pool = {"pages_k": jnp.zeros((num_pages, page_size, hkv, dh), dtype),
             "pages_v": jnp.zeros((num_pages, page_size, hkv, dh), dtype)}
@@ -59,6 +74,9 @@ def init_page_pool(cfg: ModelConfig, num_pages: int, page_size: int,
         if width and max_seqs:
             pool["key_conv_state"] = jnp.zeros(
                 (max_seqs, hkv, width - 1, dh), dtype)
+            if prefix_tails:
+                pool["key_conv_tails"] = jnp.zeros(
+                    (num_pages, hkv, width - 1, dh), dtype)
     return pool
 
 
@@ -241,3 +259,174 @@ def gather_seq_centroids(cache: Dict, block_table: jax.Array) -> jax.Array:
     """Per-sequence centroid view (B, hkv, npg, dh) in logical order."""
     cents = cache["centroids"][jnp.maximum(block_table, 0)]  # (B,npg,h,d)
     return cents.transpose(0, 2, 1, 3)
+
+
+# --------------------------------------------------------------------------
+# page-granular cache ops (prefix cache / COW / swap preemption).
+#
+# ``caches`` here is the engine-level pytree ``{"slot_i": pool}`` whose
+# leaves carry a leading layer-group dim (G, ...) — or (S, G, ...) for the
+# sharded engine, selected by ``shard``.  These run OUTSIDE the jitted
+# step functions, between the scheduler's plan and the step's first
+# write; plain XLA scatter/gather ops are plenty (a handful of pages per
+# event), and keeping them un-jitted avoids retrace churn on the ragged
+# page counts.
+# --------------------------------------------------------------------------
+
+def _page_view(x, shard):
+    return x if shard is None else x[shard]
+
+
+@functools.partial(jax.jit, static_argnames=("shard",))
+def _copy_pages_jit(caches, s, d, shard):
+    def one(pool):
+        new = dict(pool)
+        for name in PAGE_LEAVES:
+            if name in pool:
+                x = pool[name]
+                if shard is None:
+                    new[name] = x.at[:, d].set(x[:, s])
+                else:
+                    xs = x[shard]
+                    new[name] = x.at[shard].set(xs.at[:, d].set(xs[:, s]))
+        return new
+
+    return {k: one(v) for k, v in caches.items()}
+
+
+def copy_pages(caches, src: List[int], dst: List[int],
+               shard: Optional[int] = None):
+    """Copy-on-write: duplicate physical pages ``src[i] -> dst[i]`` in
+    every page-indexed leaf (K/V, centroid, key-conv tails), so a
+    sequence diverging mid-page writes into its own copy.  Copying the
+    centroid too keeps the page immediately routable — the suffix
+    prefill then recomputes it from stored keys once it appends.  One
+    jitted dispatch over all pools/leaves — the engine drains COWs one
+    pair at a time, so the (1,)-shaped trace compiles once."""
+    if not src:
+        return caches
+    return _copy_pages_jit(caches, jnp.asarray(src, jnp.int32),
+                           jnp.asarray(dst, jnp.int32), shard)
+
+
+def gather_pages_host(caches, pages: List[int],
+                      shard: Optional[int] = None) -> Dict:
+    """Snapshot physical pages to host numpy (swap-out): every
+    page-indexed leaf sliced at ``pages``, keyed (slot_name, leaf)."""
+    idx = jnp.asarray(pages, jnp.int32)
+    out = {}
+    for sname, pool in caches.items():
+        for name in PAGE_LEAVES:
+            if name in pool:
+                x = _page_view(pool[name], shard)
+                out[(sname, name)] = np.asarray(x[:, idx])
+    return out
+
+
+def scatter_pages_device(caches, pages: List[int], data: Dict,
+                         shard: Optional[int] = None):
+    """Swap-in: write a :func:`gather_pages_host` snapshot into the
+    (freshly reserved) physical pages ``pages``."""
+    idx = jnp.asarray(pages, jnp.int32)
+    new = {}
+    for sname, pool in caches.items():
+        p2 = dict(pool)
+        for name in PAGE_LEAVES:
+            if name in pool:
+                x = pool[name]
+                vals = jnp.asarray(data[(sname, name)], x.dtype)
+                if shard is None:
+                    p2[name] = x.at[:, idx].set(vals)
+                else:
+                    p2[name] = x.at[shard].set(
+                        x[shard].at[:, idx].set(vals))
+        new[sname] = p2
+    return new
+
+
+def gather_ring_rows(caches, slot: int,
+                     shard: Optional[int] = None) -> Dict:
+    """Host snapshot of one sequence slot's key-conv ring row (empty
+    dict for non-key-conv pools)."""
+    out = {}
+    for sname, pool in caches.items():
+        if "key_conv_state" in pool:
+            x = _page_view(pool["key_conv_state"], shard)
+            out[(sname, "key_conv_state")] = np.asarray(x[:, slot])
+    return out
+
+
+def scatter_ring_rows(caches, slot: int, data: Dict,
+                      shard: Optional[int] = None):
+    new = {}
+    for sname, pool in caches.items():
+        p2 = pool
+        if "key_conv_state" in pool:
+            x = pool["key_conv_state"]
+            vals = jnp.asarray(data[(sname, "key_conv_state")], x.dtype)
+            if shard is None:
+                x = x.at[:, slot].set(vals)
+            else:
+                x = x.at[shard].set(x[shard].at[:, slot].set(vals))
+            p2 = dict(pool, key_conv_state=x)
+        new[sname] = p2
+    return new
+
+
+def load_ring_from_tails(caches, slots: List[int], pages: List[int],
+                         shard: Optional[int] = None):
+    """Prefix-hit admission for key-conv models: sequence ``slots[i]``'s
+    ring row becomes page ``pages[i]``'s raw-key tail — the last
+    ``width - 1`` raw keys before the match boundary, exactly the state
+    a contiguous prefill would have carried into the suffix."""
+    if not slots:
+        return caches
+    sl = jnp.asarray(slots, jnp.int32)
+    pg = jnp.asarray(pages, jnp.int32)
+    new = {}
+    for sname, pool in caches.items():
+        p2 = pool
+        if "key_conv_tails" in pool and "key_conv_state" in pool:
+            ring, tails = pool["key_conv_state"], pool["key_conv_tails"]
+            if shard is None:
+                ring = ring.at[:, sl].set(
+                    tails[:, pg].astype(ring.dtype))
+            else:
+                ring = ring.at[shard].set(ring[shard].at[:, sl].set(
+                    tails[shard][:, pg].astype(ring.dtype)))
+            p2 = dict(pool, key_conv_state=ring)
+        new[sname] = p2
+    return new
+
+
+def update_key_conv_tails(cache: Dict, block_table: jax.Array,
+                          kv_len: jax.Array, q_len: jax.Array,
+                          k_raw: jax.Array) -> Dict:
+    """Maintain the per-page raw-key tails through an append (runs
+    inside the jitted step, right after the page write).
+
+    k_raw (B, hkv, L, dh) are the *pre-conv* keys row i writes at
+    absolute positions [kv_len[i], kv_len[i] + q_len[i]); any that land
+    in a page's last ``width - 1`` positions are recorded in that page's
+    tail slot.  Decode calls this with L == 1 and ``q_len`` the active
+    mask.  Single-pool view — no layer-group dim (the step's scan
+    strips it)."""
+    tails = cache["key_conv_tails"]           # (P, hkv, depth, dh)
+    num_pages, hkv, depth, dh = tails.shape
+    ps = cache["pages_k"].shape[1]
+    b, _, length, _ = k_raw.shape
+    npg = block_table.shape[1]
+    pos = kv_len[:, None] + jnp.arange(length)               # (B,L) abs
+    logical = jnp.minimum(pos // ps, npg - 1)
+    phys = jnp.take_along_axis(block_table, logical, axis=1)  # (B,L)
+    ti = pos % ps - (ps - depth)                             # tail index
+    valid = ((jnp.arange(length)[None, :] < q_len[:, None])
+             & (phys >= 0) & (ti >= 0))
+    slot = jnp.where(valid, phys * depth + ti,
+                     num_pages * depth).reshape(-1)
+    vals = k_raw.transpose(0, 2, 1, 3).reshape(b * length, hkv, dh)
+    flat = tails.transpose(0, 2, 1, 3).reshape(
+        num_pages * depth, hkv, dh)
+    flat = flat.at[slot].set(vals.astype(tails.dtype), mode="drop")
+    return dict(cache, key_conv_tails=flat.reshape(
+        num_pages, depth, hkv, dh).transpose(0, 2, 1, 3))

@@ -1,28 +1,42 @@
 """Host-side continuous-batching scheduler: request lifecycle + pages.
 
-Pure bookkeeping — no jax.  The scheduler owns the free-page list and the
-authoritative block table (numpy); the engine snapshots the table into
-device arrays each step.  Policies are deliberately simple and documented:
+Pure bookkeeping — no jax.  The scheduler owns the refcounted page pool
+and the authoritative block table (numpy); the engine snapshots the
+table into device arrays each step.  Policies are deliberately simple
+and documented:
 
   * admission: FIFO by arrival; a request is admitted when a sequence
     slot is free and the pool can cover its whole context plus one decode
     token.  Admission happens every step — new requests join the running
-    batch without draining it (continuous batching).
+    batch without draining it (continuous batching).  With the prefix
+    cache enabled, admission first matches the longest cached prefix in
+    the radix tree (``serving/prefix_tree.py``) and maps those logical
+    blocks onto the existing physical pages (refcount++; their cached
+    centroids come for free) so only the suffix is prefilled; a
+    partially-matched tail page is copy-on-write'd to a fresh page
+    before the suffix writes into it.
   * growth: before each decode step every running sequence is guaranteed
-    a slot for one more token; crossing a page boundary allocates a page.
+    a slot for one more token; crossing a page boundary allocates a page
+    (evicting cold unreferenced tree prefixes under pressure).
   * preemption: when the pool is exhausted the *youngest* running request
-    is evicted — its pages are freed and its full context (prompt plus
-    everything generated so far) is requeued for recompute-prefill, which
-    with greedy decoding reproduces the interrupted stream exactly.
+    is evicted.  With a host swap store its written pages (and key-conv
+    ring row) are snapshotted to host memory and restored on
+    re-admission; without one — or when the store is over its byte cap —
+    its full context is requeued for recompute-prefill, which with
+    greedy decoding reproduces the interrupted stream exactly (and with
+    the prefix cache, the recompute itself hits the victim's own pages
+    still referenced by the tree).
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
 import math
-from typing import Deque, List, Optional
+from typing import Deque, Dict, List, Optional, Tuple
 
 import numpy as np
+
+from repro.serving.prefix_tree import PrefixTree
 
 
 class ServingError(ValueError):
@@ -61,6 +75,10 @@ class Request:
     #   -1 = single-host or context-parallel fallback
     cache_len: int = 0                  # tokens whose KV is in the cache
     n_preempt: int = 0
+    prefix_len: int = 0                 # tokens served from the prefix
+    #   cache at the most recent admission (0 = no hit / cache off)
+    swap_data: Optional[dict] = None    # host snapshot of a preempted
+    #   sequence's pages/ring (engine.HostSwapStore), or None
     t_first: Optional[float] = None     # first-token wall time
     t_done: Optional[float] = None
 
@@ -82,22 +100,74 @@ class Request:
                 and self.out[-1] == self.eos_id)
 
 
-class PageAllocator:
-    """Free-list allocator over ``num_pages`` physical pages."""
+class PagePool:
+    """Refcounted free-list allocator over ``num_pages`` physical pages.
+
+    A page's refcount is the number of logical mappings onto it: one per
+    sequence whose block table points at it, plus one if the prefix tree
+    references it, plus a transient pin while a scheduled
+    copy-on-write reads from it.  ``alloc`` hands out a page at
+    refcount 1; ``deref`` returns it to the free list when the count
+    hits zero.  Double-frees and out-of-range ids raise a shaped
+    :class:`ServingError` instead of silently corrupting the free list.
+    """
 
     def __init__(self, num_pages: int):
         self.num_pages = num_pages
         self._free = list(range(num_pages - 1, -1, -1))
+        self._ref = np.zeros((num_pages,), np.int32)
 
     @property
     def available(self) -> int:
         return len(self._free)
 
+    def _check(self, page) -> int:
+        if not isinstance(page, (int, np.integer)) \
+                or not 0 <= page < self.num_pages:
+            raise ServingError(
+                f"page id {page!r} out of range [0, {self.num_pages})")
+        return int(page)
+
+    def refcount(self, page: int) -> int:
+        return int(self._ref[self._check(page)])
+
     def alloc(self) -> Optional[int]:
-        return self._free.pop() if self._free else None
+        if not self._free:
+            return None
+        page = self._free.pop()
+        self._ref[page] = 1
+        return page
+
+    def ref(self, page: int) -> None:
+        page = self._check(page)
+        if self._ref[page] <= 0:
+            raise ServingError(
+                f"page {page}: ref() on a free page (refcount 0)")
+        self._ref[page] += 1
+
+    def deref(self, page: int) -> bool:
+        """Drop one reference; True when this freed the page."""
+        page = self._check(page)
+        if self._ref[page] <= 0:
+            raise ServingError(
+                f"page {page}: double free (refcount already 0)")
+        self._ref[page] -= 1
+        if self._ref[page] == 0:
+            self._free.append(page)
+            return True
+        return False
 
     def release(self, pages: List[int]) -> None:
-        self._free.extend(pages)
+        """Deref every page in ``pages`` (a sequence's mapping list).
+        Shared pages survive under their remaining references; a page
+        id repeated beyond its refcount raises the double-free error."""
+        for page in pages:
+            self.deref(page)
+
+
+# legacy name: pre-virtualization callers constructed the allocator
+# directly; the refcounted pool is a drop-in superset
+PageAllocator = PagePool
 
 
 @dataclasses.dataclass
@@ -114,7 +184,8 @@ class StepPlan:
 class Scheduler:
     def __init__(self, *, num_pages: int, page_size: int, max_seqs: int,
                  max_pages_per_seq: int, max_prefill_batch: int = 4,
-                 chunk_tokens: int = 0):
+                 chunk_tokens: int = 0, prefix_cache: bool = False,
+                 key_conv: bool = False, swap=None):
         self.page_size = page_size
         self.max_seqs = max_seqs
         self.max_pages_per_seq = max_pages_per_seq
@@ -125,13 +196,28 @@ class Scheduler:
         # bounds per-step prefill *compute*, not memory — no new
         # deadlock conditions.
         self.chunk_tokens = chunk_tokens
-        self.alloc = PageAllocator(num_pages)
+        # key-conv configs restore ring-buffer state from per-page raw-key
+        # tails, which only exist for fully written pages — their prefix
+        # matches are rounded down to whole pages (full_only)
+        self.key_conv = key_conv
+        self.tree = PrefixTree(page_size) if prefix_cache else None
+        self.swap = swap                # engine.HostSwapStore or None
+        self.alloc = PagePool(num_pages)
         self.block_table = np.full((max_seqs, max_pages_per_seq), -1,
                                    np.int32)
         self._seq_pages: List[List[int]] = [[] for _ in range(max_seqs)]
         self._free_slots = list(range(max_seqs - 1, -1, -1))
         self.waiting: Deque[Request] = collections.deque()
         self.running: List[Request] = []    # admission order (oldest first)
+        # device-side cache ops this plan scheduled; the engine drains
+        # them (take_cache_ops) and applies them before the step's first
+        # prefill/decode write
+        self._cache_ops: Dict[str, list] = {
+            "copies": [], "restores": [], "ring_loads": []}
+        self.stats = {"prefix_queries": 0, "prefix_hits": 0,
+                      "prefix_hit_tokens": 0, "prefix_prompt_tokens": 0,
+                      "cow_copies": 0, "swap_saves": 0,
+                      "swap_restores": 0, "swap_fallbacks": 0}
 
     # ------------------------------------------------------------- intake
     def submit(self, req: Request) -> None:
@@ -154,8 +240,11 @@ class Scheduler:
     # ------------------------------------------------------- router metrics
     @property
     def committed_pages(self) -> int:
-        """Pages currently held by running/prefilling sequences."""
-        return self.alloc.num_pages - self.alloc.available
+        """Pages currently mapped by running/prefilling sequences (shared
+        pages count once per mapping — each mapping is real demand the
+        sequence would otherwise allocate).  Tree-only pages are
+        excluded: they are reclaimable, not load."""
+        return sum(len(p) for p in self._seq_pages)
 
     @property
     def queued_pages(self) -> int:
@@ -178,19 +267,70 @@ class Scheduler:
         return (need <= self.max_pages_per_seq * self.page_size
                 and self._pages_for(need) <= self.alloc.num_pages)
 
+    def peek_prefix(self, req: Request) -> int:
+        """Tokens of ``req``'s context the prefix cache could serve,
+        without touching LRU clocks or taking refs — the sharded
+        router's shard-affinity signal."""
+        if self.tree is None:
+            return 0
+        return self.tree.match_len(req.context,
+                                   max_tokens=self._match_cap(req),
+                                   full_only=self.key_conv)
+
     # ------------------------------------------------------------ helpers
     def _pages_for(self, n_tokens: int) -> int:
         return math.ceil(n_tokens / self.page_size)
+
+    def _match_cap(self, req: Request) -> int:
+        """At least one context token must always be prefilled (its
+        logits emit the next token), and key-conv matches stop at whole
+        pages (ring state restores from page-end tails)."""
+        cap = len(req.context) - 1
+        if self.key_conv:
+            cap -= cap % self.page_size
+        return cap
+
+    def _alloc_page(self) -> Optional[int]:
+        page = self.alloc.alloc()
+        if page is None and self.tree is not None \
+                and self.tree.evict(self.alloc, 1):
+            page = self.alloc.alloc()
+        return page
 
     def _grow_to(self, req: Request, n_tokens: int) -> bool:
         """Ensure req's block-table row covers ``n_tokens`` tokens."""
         pages = self._seq_pages[req.slot]
         while len(pages) < self._pages_for(n_tokens):
-            page = self.alloc.alloc()
+            page = self._alloc_page()
             if page is None:
                 return False
             self.block_table[req.slot, len(pages)] = page
             pages.append(page)
+        return True
+
+    def _cow_tail(self, req: Request) -> bool:
+        """Guarantee the page ``req`` writes next (its partially filled
+        tail page) is exclusively owned, scheduling a device
+        copy-on-write when it is shared.  False = pool exhausted (the
+        caller preempts and retries).  Page-aligned positions always
+        open a freshly allocated page, so only mid-page writes can hit a
+        shared page."""
+        off = req.cache_len % self.page_size
+        if off == 0:
+            return True
+        j = req.cache_len // self.page_size
+        pages = self._seq_pages[req.slot]
+        if j >= len(pages) or self.alloc.refcount(pages[j]) == 1:
+            return True
+        fresh = self._alloc_page()
+        if fresh is None:
+            return False
+        # the sequence's own mapping ref on the shared source page
+        # becomes the copy's pin — take_cache_ops derefs it at drain
+        self._cache_ops["copies"].append((pages[j], fresh))
+        self.stats["cow_copies"] += 1
+        pages[j] = fresh
+        self.block_table[req.slot, j] = fresh
         return True
 
     def _release(self, req: Request) -> None:
@@ -202,11 +342,27 @@ class Scheduler:
         req.slot = -1
 
     def _preempt_youngest(self, spare: Request) -> Optional[Request]:
-        """Evict the most recently admitted running request != spare."""
+        """Evict the most recently admitted running request != spare.
+        The victim's pages are swapped to the host store when one is
+        attached and under its cap (restored at re-admission); otherwise
+        its cached-so-far full pages are left to the prefix tree (when
+        enabled) and the context requeued for recompute."""
         for victim in reversed(self.running):
             if victim is spare and len(self.running) > 1:
                 continue
             self.running.remove(victim)
+            saved = False
+            if self.swap is not None and victim.cache_len > 0 \
+                    and victim.slot >= 0:
+                used = self._seq_pages[victim.slot][
+                    :self._pages_for(victim.cache_len)]
+                saved = self.swap.save(victim, used, victim.slot)
+                self.stats["swap_saves" if saved
+                           else "swap_fallbacks"] += 1
+            if not saved:
+                # recompute fallback: keep the victim's full pages
+                # findable so its own re-prefill is a prefix hit
+                self.note_cached(victim)
             self._release(victim)
             victim.state = "waiting"
             victim.cache_len = 0
@@ -215,16 +371,114 @@ class Scheduler:
             return victim
         return None
 
+    # ------------------------------------------------------- prefix cache
+    def note_cached(self, req: Request, final: bool = False) -> None:
+        """Register ``req``'s cached pages in the prefix tree so later
+        requests can map them.  Mid-flight calls insert only fully
+        written pages; ``final=True`` (at finish) additionally inserts
+        the partial tail page.  No-op without the prefix cache."""
+        if self.tree is None or req.slot < 0 or req.cache_len <= 0:
+            return
+        count = req.cache_len if final \
+            else req.cache_len - req.cache_len % self.page_size
+        if count <= 0:
+            return
+        pages = self._seq_pages[req.slot][:self._pages_for(count)]
+        self.tree.insert(req.context[:count], pages, self.alloc)
+
+    def take_cache_ops(self) -> Dict[str, list]:
+        """Hand the engine this plan's device cache ops — COW page
+        copies, swap restores, key-conv ring loads — to apply before the
+        step's first write.  Copy sources were pinned when scheduled;
+        their pins drop here (the freed ids cannot be reused before the
+        engine executes the copies, because allocation only happens in
+        the next ``plan_step``)."""
+        ops = self._cache_ops
+        self._cache_ops = {"copies": [], "restores": [], "ring_loads": []}
+        for src, _ in ops["copies"]:
+            self.alloc.deref(src)
+        return ops
+
     # --------------------------------------------------------------- plan
+    def _admit(self, req: Request) -> bool:
+        """Admission attempt: prefix-match, reserve pages, map shared
+        ones.  False = insufficient pages (FIFO head-of-line blocks)."""
+        ctx = len(req.context)
+        swapped = req.swap_data is not None
+        matched_pages: List[int] = []
+        matched = 0
+        if self.tree is not None and not swapped:
+            matched_pages, matched = self.tree.match(
+                req.context, max_tokens=self._match_cap(req),
+                full_only=self.key_conv)
+        n_full = matched // self.page_size
+        full_pages = matched_pages[:n_full]
+        partial_src = (matched_pages[n_full]
+                       if matched % self.page_size else None)
+        for p in full_pages:
+            self.alloc.ref(p)
+        need_fresh = self._pages_for(ctx + 1) - n_full
+        short = need_fresh - self.alloc.available
+        if short > 0 and self.tree is not None:
+            self.tree.evict(self.alloc, short)
+        if need_fresh > self.alloc.available:
+            for p in full_pages:
+                self.alloc.deref(p)
+            return False
+        self.waiting.popleft()
+        req.slot = self._free_slots.pop()
+        seq_pages = self._seq_pages[req.slot]
+        for j, p in enumerate(full_pages):
+            self.block_table[req.slot, j] = p
+            seq_pages.append(p)
+        if partial_src is not None:
+            # eager copy-on-write: the tail page's content diverges past
+            # ``matched``, and the suffix prefill writes into it this
+            # very step — map a fresh copy, never the shared page
+            fresh = self.alloc.alloc()
+            self.alloc.ref(partial_src)          # pin until the copy runs
+            self._cache_ops["copies"].append((partial_src, fresh))
+            self.stats["cow_copies"] += 1
+            self.block_table[req.slot, n_full] = fresh
+            seq_pages.append(fresh)
+        req.cache_len = matched
+        req.prefix_len = matched
+        if self.tree is not None and not swapped:
+            self.stats["prefix_queries"] += 1
+            self.stats["prefix_hits"] += int(matched > 0)
+            self.stats["prefix_hit_tokens"] += matched
+            self.stats["prefix_prompt_tokens"] += ctx
+        if self.key_conv and matched:
+            self._cache_ops["ring_loads"].append(
+                (req.slot, full_pages[-1]))
+        ok = self._grow_to(req, ctx + 1)
+        assert ok, "admission checked page availability"
+        if swapped:
+            # engine restores pages + cache_len before this step's
+            # prefill; the remaining suffix is exactly one token
+            self._cache_ops["restores"].append(req)
+            remaining = ctx - req.swap_data["n_tokens"]
+        else:
+            remaining = ctx - matched
+        # chunked mode admits into the "prefill" phase; the engine
+        # flips it to "running" once the final chunk is cached.
+        req.state = ("prefill" if self.chunk_tokens
+                     and remaining > self.chunk_tokens else "running")
+        self.running.append(req)
+        return True
+
     def plan_step(self, now: float = float("inf")) -> StepPlan:
         preempted: List[Request] = []
 
-        # 1. growth: every running sequence gets room for one more token,
-        #    preempting from the back under pressure (oldest survives).
+        # 1. growth: every running sequence gets room for one more token
+        #    — and exclusive ownership of the page it writes into (COW)
+        #    — preempting from the back under pressure (oldest survives).
         for req in list(self.running):
-            if req.state != "running":
+            if req.state not in ("running", "prefill"):
                 continue
-            while not self._grow_to(req, req.cache_len + 1):
+            while not (self._cow_tail(req)
+                       and (req.state != "running"
+                            or self._grow_to(req, req.cache_len + 1))):
                 victim = self._preempt_youngest(spare=req)
                 if victim is None or victim is req:
                     if victim is None:       # cannot happen: req holds pages
@@ -232,8 +486,8 @@ class Scheduler:
                     preempted.append(victim)
                     break
                 preempted.append(victim)
-            if req.state != "running":       # req itself was the victim
-                continue
+            if req.state not in ("running", "prefill"):
+                continue                     # req itself was the victim
 
         # 2. chunk continuation: admitted requests with context still to
         #    cache run their next chunk before any new admission (they
@@ -244,24 +498,14 @@ class Scheduler:
 
         # 3. admission (FIFO, arrivals only): whole context + one decode
         #    token must fit (chunking spreads the *compute*, not the
-        #    reservation).
+        #    reservation); prefix hits map cached pages and reserve only
+        #    the rest.
         while (self.waiting and self._free_slots
                and len(prefills) < self.max_prefill_batch
                and self.waiting[0].arrival <= now):
             req = self.waiting[0]
-            ctx = len(req.context)
-            if self._pages_for(ctx + 1) > self.alloc.available:
+            if not self._admit(req):
                 break                        # FIFO head-of-line blocking
-            self.waiting.popleft()
-            req.slot = self._free_slots.pop()
-            # chunked mode admits into the "prefill" phase; the engine
-            # flips it to "running" once the final chunk is cached.
-            req.state = ("prefill" if self.chunk_tokens
-                         and ctx > self.chunk_tokens else "running")
-            req.cache_len = 0
-            ok = self._grow_to(req, ctx + 1)
-            assert ok, "admission checked page availability"
-            self.running.append(req)
             prefills.append(req)
 
         decodes = [r for r in self.running if r.state == "running"]
@@ -270,6 +514,22 @@ class Scheduler:
 
     # ------------------------------------------------------------- finish
     def finish(self, req: Request) -> None:
-        self.running.remove(req)
-        self._release(req)
+        """Retire a request.  Robust to requests that were preempted back
+        to the waiting queue (no slot, no pages) — e.g. cancelled or
+        finished-by-policy while waiting for re-admission."""
+        if req.state == "done":
+            return
+        if req in self.running:
+            self.running.remove(req)
+            # leave the finished context findable: full pages plus the
+            # partial tail survive under the tree's refs
+            self.note_cached(req, final=True)
+            self._release(req)
+        else:
+            try:
+                self.waiting.remove(req)
+            except ValueError:
+                pass
+        if self.swap is not None:
+            self.swap.drop(req)
         req.state = "done"

@@ -45,9 +45,10 @@ from repro.distributed import sharding as shmod
 from repro.launch import steps as S
 from repro.models import transformer as T
 from repro.serving import paged_cache as PC
-from repro.serving.engine import (EngineConfig,
+from repro.serving.engine import (EngineConfig, HostSwapStore,
                                   admission_capability_check,
                                   build_decode_batch, build_prefill_batch,
+                                  drain_cache_ops, needs_key_conv,
                                   parse_attn_backend, prefill_bucket,
                                   prefill_takes, record_decode,
                                   record_prefill, resolve_pool_sizes,
@@ -57,12 +58,16 @@ from repro.serving.scheduler import (Request, Scheduler, ServingError,
 
 
 class Router:
-    """Host-side least-loaded router over per-shard schedulers.
+    """Host-side router over per-shard schedulers.
 
-    ``pick`` returns the shard with the smallest page-demand ``load``
-    (committed + queued pages) among the shards that can ever serve the
-    request, ties broken by lowest shard id — fully deterministic for a
-    given submission order, which the equivalence suite relies on.
+    ``pick`` prefers the shard whose prefix tree holds the longest
+    cached prefix of the request (an LRU-neutral ``peek_prefix`` — each
+    shard's tree is private, so affinity is what turns shared system
+    prompts into cross-request page sharing), then the smallest
+    page-demand ``load`` (committed + queued pages), ties broken by
+    lowest shard id — fully deterministic for a given submission order,
+    which the equivalence suite relies on.  Without the prefix cache
+    every peek is 0 and this reduces to pure least-loaded routing.
     Returns −1 when no shard can serve it (context-parallel fallback or
     rejection is the engine's call)."""
 
@@ -73,7 +78,8 @@ class Router:
         fitting = [s for s, sch in enumerate(self.scheds) if sch.fits(req)]
         if not fitting:
             return -1
-        return min(fitting, key=lambda s: (self.scheds[s].load, s))
+        return min(fitting, key=lambda s: (-self.scheds[s].peek_prefix(req),
+                                           self.scheds[s].load, s))
 
 
 class ShardedEngine:
@@ -112,20 +118,39 @@ class ShardedEngine:
         self.page_size, self.pages_per_seq, self.num_pages = \
             resolve_pool_sizes(cfg, ecfg)
         self.params = jax.device_put(params, NamedSharding(mesh, P()))
+        conv = needs_key_conv(cfg)
+        if ecfg.prefix_cache and conv \
+                and cfg.attention.moba.key_conv_width - 1 > self.page_size:
+            raise ServingError(
+                f"prefix cache needs key_conv_width - 1 "
+                f"({cfg.attention.moba.key_conv_width - 1}) <= page_size "
+                f"({self.page_size}): ring state restores from one "
+                f"page's raw-key tail")
         base = T.init_paged_caches(cfg, self.num_pages, self.page_size,
                                    dtype=jnp.dtype(cfg.dtype),
-                                   max_seqs=ecfg.max_seqs)
+                                   max_seqs=ecfg.max_seqs,
+                                   prefix_tails=ecfg.prefix_cache and conv)
         self.caches = PC.shard_pools(base, mesh, ns)
+        # one swap store per shard: its byte cap and ``used`` accounting
+        # pair with that shard's scheduler, and saves/restores slice the
+        # stacked pools at the shard index
+        self.swap_stores = [
+            HostSwapStore(self, ecfg.swap_bytes, shard=s)
+            if ecfg.swap_bytes > 0 else None for s in range(ns)]
         self.scheds = [Scheduler(
             num_pages=self.num_pages, page_size=self.page_size,
             max_seqs=ecfg.max_seqs, max_pages_per_seq=self.pages_per_seq,
             max_prefill_batch=ecfg.max_prefill_batch,
-            chunk_tokens=ecfg.prefill_chunk) for _ in range(ns)]
+            chunk_tokens=ecfg.prefill_chunk,
+            prefix_cache=ecfg.prefix_cache, key_conv=conv,
+            swap=self.swap_stores[s]) for s in range(ns)]
         self.router = Router(self.scheds)
+        self._chunk_aware = bool(ecfg.prefill_chunk or ecfg.prefix_cache
+                                 or ecfg.swap_bytes > 0)
         self._prefill = jax.jit(
             S.make_sharded_paged_prefill_step(
                 cfg, mesh, backend=self.attn_backend,
-                chunked=bool(ecfg.prefill_chunk)),
+                chunked=self._chunk_aware),
             donate_argnums=(2,))
         self._decode = jax.jit(
             S.make_sharded_paged_decode_step(cfg, mesh,
@@ -138,7 +163,10 @@ class ShardedEngine:
         self.stats = {"prefill_s": 0.0, "decode_s": 0.0,
                       "prefill_tokens": 0, "decode_steps": 0,
                       "decode_tokens": 0, "preemptions": 0,
-                      "cp_requests": 0, "cp_tokens": 0, "cp_s": 0.0}
+                      "cp_requests": 0, "cp_tokens": 0, "cp_s": 0.0,
+                      "tree_evictions": 0, "pages_in_use_peak": 0}
+        for k in self.scheds[0].stats:
+            self.stats[k] = 0
         self.shard_stats = [{"prefill_tokens": 0, "decode_tokens": 0,
                              "requests": 0} for _ in range(ns)]
         # jit-cache hygiene: every prefill width ever compiled (the
@@ -257,14 +285,26 @@ class ShardedEngine:
             n_cp = 1
         plans = [sch.plan_step(now) for sch in self.scheds]
         self.stats["preemptions"] += sum(len(p.preempted) for p in plans)
+        for s, sch in enumerate(self.scheds):
+            self.caches = drain_cache_ops(self.caches, sch,
+                                          self.swap_stores[s],
+                                          self.page_size, shard=s)
         prefills = [p.prefills for p in plans]
         if any(prefills):
             self._run_prefill(prefills)
+            for s, sch in enumerate(self.scheds):
+                for r in prefills[s]:
+                    sch.note_cached(r)
         decodes = [[r for r in sch.running
                     if r.state == "running" and not r.done]
                    for sch in self.scheds]
         if any(decodes):
             self._run_decode(decodes)
+            if self.ecfg.prefix_cache:
+                for s, sch in enumerate(self.scheds):
+                    for r in decodes[s]:
+                        if r.cache_len % self.page_size == 0:
+                            sch.note_cached(r)
         n_done = 0
         for sch in self.scheds:
             for r in [r for r in list(sch.running) if r.done]:
@@ -272,6 +312,15 @@ class ShardedEngine:
                 r.t_done = self._wall()
                 self.finished.append(r)
                 n_done += 1
+        for key in self.scheds[0].stats:
+            self.stats[key] = sum(sch.stats[key] for sch in self.scheds)
+        self.stats["tree_evictions"] = sum(
+            sch.tree.evictions for sch in self.scheds
+            if sch.tree is not None)
+        self.stats["pages_in_use_peak"] = max(
+            self.stats["pages_in_use_peak"],
+            sum(self.num_pages - sch.alloc.available
+                for sch in self.scheds))
         return {"prefilled": sum(len(p) for p in prefills),
                 "decoded": sum(len(d) for d in decodes),
                 "finished": n_done + n_cp, "cp_served": n_cp,

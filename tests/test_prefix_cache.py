@@ -1,0 +1,420 @@
+"""Radix-tree prefix cache + copy-on-write page virtualization.
+
+Pins the PR acceptance surface: with ``prefix_cache=True`` the engine's
+greedy tokens are exact vs the prefix-cache-off engine (itself pinned to
+the dense oracle by the seed suite) while requests that share a prompt
+prefix physically share pages — across page-aligned and misaligned share
+points (COW), chunked prefill, the flash paged backend, key-conv ring
+restore at the share boundary, swap-based preemption replay, and the
+recompute fallback when host swap memory is capped.  Host-side pieces
+(PagePool refcount guards, PrefixTree insert/match/evict, scheduler
+admission edges) run without any model.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import transformer as T
+from repro.serving.engine import Engine, EngineConfig
+from repro.serving.prefix_tree import PrefixTree
+from repro.serving.scheduler import (PagePool, Request, Scheduler,
+                                     ServingError)
+
+_ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+# ------------------------------------------------------------- PagePool
+def test_pool_double_free_guard():
+    """Satellite: release/deref on an already-free page must raise a
+    shaped ServingError, not corrupt the free list."""
+    pool = PagePool(4)
+    pages = [pool.alloc() for _ in range(3)]
+    pool.release(pages)
+    assert pool.available == 4
+    with pytest.raises(ServingError, match="double free"):
+        pool.release([pages[0]])
+    with pytest.raises(ServingError, match="double free"):
+        pool.deref(pages[1])
+    assert pool.available == 4          # guard left the free list intact
+
+
+def test_pool_out_of_range_and_bad_ids():
+    pool = PagePool(4)
+    with pytest.raises(ServingError, match="out of range"):
+        pool.release([7])
+    with pytest.raises(ServingError, match="out of range"):
+        pool.deref(-1)
+    with pytest.raises(ServingError):
+        pool.release(["0"])             # non-int id
+
+
+def test_pool_refcount_sharing():
+    """ref/deref: a page freed only when its last reference drops; ref
+    on a free page is an error (it isn't anyone's to share)."""
+    pool = PagePool(2)
+    p = pool.alloc()
+    pool.ref(p)
+    assert pool.refcount(p) == 2
+    assert pool.deref(p) is False       # still held
+    assert pool.available == 1
+    assert pool.deref(p) is True        # now actually freed
+    assert pool.available == 2
+    with pytest.raises(ServingError, match="free page"):
+        pool.ref(p)
+
+
+# ----------------------------------------------------------- PrefixTree
+def _toks(*vals):
+    return np.asarray(vals, np.int32)
+
+
+def test_tree_insert_match_full_and_partial():
+    pool = PagePool(8)
+    tree = PrefixTree(page_size=4)
+    pages = [pool.alloc() for _ in range(3)]
+    tree.insert(_toks(*range(10)), pages, pool)     # 2 full + 1 partial
+    assert len(tree) == 3
+    assert all(pool.refcount(p) == 2 for p in pages)
+    # exact full-page walk + the partial tail page (2 of its tokens)
+    got, n = tree.match(_toks(*range(10)))
+    assert (got, n) == (pages, 10)
+    # shorter query: the partial hop matches only its common prefix
+    got, n = tree.match(_toks(*range(9)))
+    assert (got, n) == (pages, 9)
+    # diverging in the second page: only the first page matches (the
+    # diverging child shares no tokens, so no partial hop either)
+    q = _toks(0, 1, 2, 3, 99, 98, 97, 96)
+    got, n = tree.match(q)
+    assert (got, n) == (pages[:1], 4)
+    # full_only drops the partial hop (key-conv mode)
+    got, n = tree.match(_toks(*range(10)), full_only=True)
+    assert (got, n) == (pages[:2], 8)
+    # max_tokens caps the walk; the second page becomes a partial hop
+    got, n = tree.match(_toks(*range(10)), max_tokens=5)
+    assert (got, n) == (pages[:2], 5)
+    got, n = tree.match(_toks(*range(10)), max_tokens=5, full_only=True)
+    assert (got, n) == (pages[:1], 4)
+
+
+def test_tree_dedup_and_partial_upgrade():
+    """Re-inserting a covered prefix adds no refs; extending a partial
+    tail upgrades the node in place, releasing the stale page."""
+    pool = PagePool(8)
+    tree = PrefixTree(page_size=4)
+    a = [pool.alloc(), pool.alloc()]
+    tree.insert(_toks(*range(6)), a, pool)          # full + 2-token tail
+    tree.insert(_toks(*range(6)), a, pool)          # exact dup: no-op
+    assert len(tree) == 2 and pool.refcount(a[0]) == 2
+    b = pool.alloc()                                # richer tail page
+    tree.insert(_toks(*range(8)), [a[0], b], pool)
+    assert pool.refcount(b) == 2
+    assert pool.deref(a[1]) is True     # tree dropped its ref on upgrade
+    got, n = tree.match(_toks(*range(8)))
+    assert (got, n) == ([a[0], b], 8)
+
+
+def test_tree_lru_evict_respects_refcounts():
+    """evict() only reclaims leaves whose pages the tree alone holds,
+    oldest-touched first."""
+    pool = PagePool(8)
+    tree = PrefixTree(page_size=4)
+    shared, cold = pool.alloc(), pool.alloc()
+    tree.insert(_toks(*range(4)), [shared], pool)   # rc 2: seq + tree
+    tree.insert(_toks(*range(100, 104)), [cold], pool)
+    pool.deref(cold)                                # tree-only now
+    assert tree.evict(pool, 2) == 1     # shared page is pinned
+    assert pool.available == 7 and len(tree) == 1
+    pool.deref(shared)                              # seq finished
+    assert tree.evict(pool, 1) == 1
+    assert pool.available == 8 and len(tree) == 0
+
+
+# ----------------------------------------------- engine token exactness
+def _fixture(arch="moba-340m", seed=3, n=6, prefix_len=96, **ckw):
+    cfg = get_smoke_config(arch, **ckw)
+    params = T.init_lm(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(0, cfg.vocab_size, prefix_len, dtype=np.int32)
+    prompts = [np.concatenate([prefix, rng.integers(
+        0, cfg.vocab_size, 5 + i, dtype=np.int32)]) for i in range(n)]
+    return cfg, params, prompts
+
+
+def _serve(cfg, params, prompts, gen=8, **ekw):
+    ekw.setdefault("max_seqs", 2)       # staggered admission → later
+    ekw.setdefault("max_seq_len", 160)  # requests see cached prefixes
+    ekw.setdefault("attn_backend", "reference")
+    eng = Engine(cfg, params, EngineConfig(**ekw))
+    reqs = [eng.submit(p, max_new_tokens=gen) for p in prompts]
+    eng.run()
+    return [list(r.out) for r in reqs], eng
+
+
+@pytest.mark.parametrize("prefix_len", [96, 101])
+def test_prefix_cache_tokens_exact(prefix_len):
+    """Acceptance: greedy tokens identical with the cache on vs off, for
+    page-aligned (96 = 6×16) and misaligned (101 → COW) share points."""
+    cfg, params, prompts = _fixture(prefix_len=prefix_len)
+    off, _ = _serve(cfg, params, prompts)
+    on, eng = _serve(cfg, params, prompts, prefix_cache=True)
+    assert on == off
+    st = eng.stats
+    assert st["prefix_hits"] == 4       # all but the first admission wave
+    assert st["prefix_hit_tokens"] >= 4 * (prefix_len // 16) * 16
+    assert st["cow_copies"] == (0 if prefix_len % 16 == 0 else 4)
+
+
+def test_prefix_cache_pages_physically_shared():
+    """Admitted-on-hit sequences map the same physical page ids as the
+    request that populated the tree — sharing, not copying."""
+    cfg, params, prompts = _fixture(prefix_len=64)
+    eng = Engine(cfg, params, EngineConfig(
+        max_seqs=4, max_seq_len=160, prefix_cache=True))
+    a = eng.submit(prompts[0], max_new_tokens=4)
+    eng.run()
+    b = eng.submit(prompts[1], max_new_tokens=4)
+    eng.step()
+    shared = eng.sched._seq_pages[b.slot][:4]
+    assert b.prefix_len == 64
+    # a finished, but its prefix pages live on in the tree and now in b
+    assert all(eng.sched.alloc.refcount(p) == 2 for p in shared)
+    got, n = eng.sched.tree.match(prompts[0][:64], touch=False)
+    assert got == shared and n == 64
+    eng.run()
+
+
+def test_prefix_cache_multi_turn_reuse():
+    """Turn 2's prompt = turn 1's prompt + its generated tokens: the
+    finished request's full cache (partial tail included, inserted at
+    finish) accelerates the follow-up."""
+    cfg, params, prompts = _fixture(prefix_len=64)
+    eng = Engine(cfg, params, EngineConfig(
+        max_seqs=2, max_seq_len=160, prefix_cache=True))
+    a = eng.submit(prompts[0], max_new_tokens=8)
+    eng.run()
+    turn2 = np.concatenate([prompts[0], np.asarray(a.out, np.int32),
+                            _toks(1, 2, 3)])
+    b = eng.submit(turn2, max_new_tokens=4)
+    eng.run()
+    # everything up to the last full page of turn 1's cache was reused
+    assert eng.stats["prefix_hit_tokens"] >= (len(turn2) // 16 - 1) * 16
+    # oracle: fresh engine, same turn-2 prompt
+    oracle, _ = _serve(cfg, params, [turn2], gen=4)
+    assert list(b.out) == oracle[0]
+
+
+def test_prefix_cache_chunked_prefill_exact():
+    cfg, params, prompts = _fixture()
+    off, _ = _serve(cfg, params, prompts, prefill_chunk=32)
+    on, eng = _serve(cfg, params, prompts, prefill_chunk=32,
+                     prefix_cache=True)
+    assert on == off and eng.stats["prefix_hits"] > 0
+
+
+def test_prefix_cache_flash_backend_exact():
+    cfg, params, prompts = _fixture(n=4)
+    off, _ = _serve(cfg, params, prompts, attn_backend="flash")
+    on, eng = _serve(cfg, params, prompts, attn_backend="flash",
+                     prefix_cache=True)
+    assert on == off and eng.stats["prefix_hits"] > 0
+
+
+def test_prefix_cache_key_conv_ring_restore():
+    """key_conv archs share full pages only; the suffix prefill's conv
+    ring is restored from the boundary page's raw-key tail, so tokens
+    stay exact across the share point."""
+    cfg, params, prompts = _fixture(key_conv_width=3)
+    off, _ = _serve(cfg, params, prompts)
+    on, eng = _serve(cfg, params, prompts, prefix_cache=True)
+    assert on == off
+    st = eng.stats
+    assert st["prefix_hits"] > 0
+    assert st["prefix_hit_tokens"] % eng.page_size == 0   # full pages
+
+
+def test_prefix_cache_key_conv_width_guard():
+    """Ring state spans width-1 raw keys; restoring it from one page's
+    tail needs width-1 <= page_size, else construction must refuse."""
+    cfg = get_smoke_config("moba-340m", key_conv_width=18)
+    params = T.init_lm(jax.random.PRNGKey(0), cfg)
+    with pytest.raises(ServingError, match="key_conv"):
+        Engine(cfg, params, EngineConfig(max_seqs=2, max_seq_len=160,
+                                         prefix_cache=True))
+
+
+def test_swap_preemption_replay_exact():
+    """An undersized pool forces preemption mid-stream; victim pages
+    swap to host memory and restore on re-admission — tokens exact, no
+    recompute."""
+    cfg, params, prompts = _fixture()
+    off, _ = _serve(cfg, params, prompts, gen=12, max_seqs=4,
+                    num_pages=24, swap_bytes=0)
+    on, eng = _serve(cfg, params, prompts, gen=12, max_seqs=4,
+                     num_pages=24, prefix_cache=True)
+    assert on == off
+    assert eng.stats["swap_saves"] > 0
+    assert eng.stats["swap_restores"] == eng.stats["swap_saves"]
+
+
+def test_swap_budget_capped_falls_back_to_recompute():
+    """swap_bytes too small for one victim: save refused, the victim's
+    cache is published to the tree instead and replay recomputes
+    (prefix-accelerated) — still exact."""
+    cfg, params, prompts = _fixture()
+    off, _ = _serve(cfg, params, prompts, gen=12, max_seqs=4,
+                    num_pages=24, swap_bytes=0)
+    on, eng = _serve(cfg, params, prompts, gen=12, max_seqs=4,
+                     num_pages=24, prefix_cache=True, swap_bytes=1)
+    assert on == off
+    assert eng.stats["swap_fallbacks"] > 0
+    assert eng.stats["swap_restores"] == 0
+
+
+def test_tree_eviction_under_pool_pressure():
+    """Unreferenced cold prefixes are evicted LRU to admit new work; the
+    engine keeps producing exact tokens while the tree churns."""
+    cfg = get_smoke_config("moba-340m")
+    params = T.init_lm(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(7)
+    # disjoint prompts: every finished request leaves a dead prefix
+    prompts = [rng.integers(0, cfg.vocab_size, 80 + i, dtype=np.int32)
+               for i in range(6)]
+    off, _ = _serve(cfg, params, prompts, gen=6, max_seqs=2, num_pages=16)
+    on, eng = _serve(cfg, params, prompts, gen=6, max_seqs=2,
+                     num_pages=16, prefix_cache=True)
+    assert on == off
+    assert eng.stats["tree_evictions"] > 0
+    assert len(eng.sched.tree) <= eng.sched.alloc.num_pages
+
+
+# --------------------------------------------- scheduler admission edges
+def _sched(**kw):
+    kw.setdefault("num_pages", 8)
+    kw.setdefault("page_size", 4)
+    kw.setdefault("max_seqs", 4)
+    kw.setdefault("max_pages_per_seq", 8)
+    return Scheduler(**kw)
+
+
+def _req(rid, n_ctx, gen=4):
+    return Request(rid=rid, prompt=np.zeros(n_ctx, np.int32),
+                   max_new_tokens=gen)
+
+
+def test_admission_fifo_head_of_line_blocking():
+    """Satellite: a too-big head request blocks the queue (FIFO, no
+    reordering) even when a smaller one behind it would fit — and the
+    failed attempt leaves the pool untouched."""
+    sched = _sched()                    # 8 pages of 4 tokens
+    r0 = _req(0, 8)                     # 3 pages (8 tokens + 1 decode)
+    sched.submit(r0)
+    plan = sched.plan_step(0.0)
+    assert plan.prefills == [r0]
+    avail = sched.alloc.available       # 5
+    big, small = _req(1, 20), _req(2, 4)    # big needs 6 > 5; small fits
+    sched.submit(big)
+    sched.submit(small)
+    r0.cache_len = 8
+    plan = sched.plan_step(0.0)
+    assert plan.prefills == []          # small blocked behind big
+    assert [r.rid for r in sched.waiting] == [1, 2]
+    assert sched.alloc.available == avail
+
+
+def _drive_to_preemption():
+    """Two admitted requests exactly exhaust a 7-page pool; decoding b
+    across its page boundary forces a preemption where b itself is the
+    spare — so the victim search must skip it."""
+    sched = _sched(num_pages=7, max_seqs=2)
+    a, b = _req(0, 12, gen=12), _req(1, 8, gen=12)   # 4 + 3 pages
+    sched.submit(a)
+    sched.submit(b)
+    plan = sched.plan_step(0.0)
+    assert plan.prefills == [a, b] and sched.alloc.available == 0
+    a.cache_len, b.cache_len = 12, 8
+    while a.state == "running":         # decode b until it needs page 4
+        b.out.append(0)
+        b.cache_len += 1
+        plan = sched.plan_step(0.0)
+    return sched, a, b, plan
+
+
+def test_preemption_skips_youngest_when_it_is_the_spare():
+    """The request needing the page never preempts itself, even though
+    it is the youngest: the next-youngest (here: the only other) is
+    evicted instead, and stays queued when its pages can't be covered."""
+    sched, a, b, plan = _drive_to_preemption()
+    assert plan.preempted == [a] and a.n_preempt == 1
+    assert a.state == "waiting" and a.cache_len == 0
+    assert b.state == "running"         # got its page from a's release
+    # a (13-token context) needs 4 pages, only 3 free → not re-admitted
+    assert sched.waiting[0] is a
+
+
+def test_finish_on_already_preempted_request():
+    """finish() on a request sitting preempted in the waiting queue
+    (client cancelled) removes it without touching pages it no longer
+    holds, and is idempotent."""
+    sched, a, b, _ = _drive_to_preemption()
+    free_before = sched.alloc.available
+    sched.finish(a)
+    assert a.state == "done" and a not in sched.waiting
+    assert sched.alloc.available == free_before          # held no pages
+    sched.finish(a)                                       # idempotent
+    sched.finish(b)
+    assert sched.alloc.available == 7
+
+
+# ------------------------------------------------------- sharded router
+def test_sharded_router_prefers_prefix_hit_shard():
+    """Router sends a request to the shard whose tree holds its longest
+    prefix even when another shard is less loaded; sharded tokens stay
+    exact vs prefix-off."""
+    code = """
+    import numpy as np, jax
+    from repro.configs import get_smoke_config
+    from repro.models import transformer as T
+    from repro.serving.engine import EngineConfig
+    from repro.serving.sharded import ShardedEngine
+
+    cfg = get_smoke_config("moba-340m")
+    params = T.init_lm(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(3)
+    prefix = rng.integers(0, cfg.vocab_size, 96, dtype=np.int32)
+    prompts = [np.concatenate([prefix, rng.integers(
+        0, cfg.vocab_size, 5 + i, dtype=np.int32)]) for i in range(6)]
+
+    def run(prefix_cache, n_shards):
+        eng = ShardedEngine(cfg, params, EngineConfig(
+            max_seqs=2, max_seq_len=160, attn_backend="reference",
+            prefix_cache=prefix_cache), n_shards=n_shards)
+        reqs = [eng.submit(p, max_new_tokens=8) for p in prompts]
+        eng.run()
+        return [list(r.out) for r in reqs], eng.stats
+
+    off, _ = run(False, 2)
+    on, st = run(True, 2)
+    assert on == off, (on, off)
+    assert st["prefix_hits"] > 0, st
+    # shard-count invariance: cache-on greedy tokens must not depend
+    # on how the fleet is carved up
+    for n in (1, 4):
+        tok, _ = run(True, n)
+        assert tok == off, (n, tok, off)
+    print("OK", st["prefix_hits"], st["prefix_hit_tokens"])
+    """
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               JAX_PLATFORMS="cpu",
+               PYTHONPATH=os.path.join(_ROOT, "src"))
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, env=env,
+                       timeout=900)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    assert r.stdout.startswith("OK")
