@@ -13,6 +13,14 @@ Checked per matched path:
     exceed the snapshot by more than ``--tol`` (relative);
   * the fresh report's ``agree`` verdict must be true.
 
+Checked per fresh path carrying ``max_abs_diff_vs_xla`` (the decode
+schema): an absolute accuracy floor — the diff vs the fp32 XLA oracle
+must stay under the ceiling for the case's ``kv_dtype``
+(``DIFF_CEILINGS``; quantized pools budget their quantization error,
+fp32 budgets pure kernel drift).  Unlike the byte gates this does not
+need a matching snapshot case: accuracy is machine-independent and
+absolute, so every fresh case is held to it.
+
 Checked per matched case with a ``metrics`` dict (the serve schema):
   * ``prefix_hit_rate`` / ``prefill_tokens_saved`` are floors — pure
     scheduler accounting, so they must not drop below the snapshot by
@@ -35,6 +43,9 @@ import sys
 
 BYTE_KEYS = ("hbm_bytes", "topk_cent_bytes")
 RATE_KEYS = ("prefix_hit_rate", "prefill_tokens_saved")
+# absolute per-dtype ceilings on max_abs_diff_vs_xla (decode schema);
+# keep in sync with benchmarks.decode_micro.AGREE_TOL
+DIFF_CEILINGS = {"fp32": 1e-3, "int8": 5e-2, "fp8": 2e-1}
 
 
 def _index(report):
@@ -59,6 +70,16 @@ def compare(baseline: dict, new: dict, tol: float):
     base_cases = _index(baseline)
     matched = 0
     for name, case in _index(new).items():
+        ceiling = DIFF_CEILINGS.get(case.get("kv_dtype", "fp32"))
+        if ceiling is not None:
+            for pname, p in _paths(case).items():
+                diff = p.get("max_abs_diff_vs_xla")
+                if diff is not None and diff > ceiling:
+                    problems.append(
+                        f"{name}/{pname}: max_abs_diff_vs_xla "
+                        f"{diff:.3e} exceeds the "
+                        f"{case.get('kv_dtype', 'fp32')} accuracy "
+                        f"ceiling {ceiling:.0e}")
         base = base_cases.get(name)
         if base is None:
             continue

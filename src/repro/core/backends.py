@@ -46,6 +46,7 @@ from repro.configs.base import AttentionConfig
 from repro.core.moba import (moba_attention_reference, moba_decode_attention,
                              moba_paged_decode_attention,
                              moba_paged_prefill_attention)
+from repro.core.quantization import KV_DTYPES
 
 KINDS = ("dense", "swa", "moba")
 PHASES = ("prefill", "decode")
@@ -76,20 +77,30 @@ class Capabilities:
     engine's per-shard ``shard_map`` body (DESIGN.md §7): its math must
     be mesh-free — no collectives, no axis names — because each shard
     runs it on a local pool slice.  ``sp``/``sp_unrolled`` issue their
-    own collectives over a mesh axis and so cannot nest."""
+    own collectives over a mesh axis and so cannot nest.
+
+    ``kv_dtypes`` lists the paged-pool storage dtypes the backend's
+    paged paths are validated against (``core/quantization.py``):
+    ``int8``/``fp8`` pools carry per-page scale leaves the backend must
+    dequantize with.  Default is fp32-only — quantized support is an
+    explicit opt-in so an unvalidated backend fails at admission, not
+    with silently-garbage attention output."""
 
     kinds: Tuple[str, ...] = KINDS
     phases: Tuple[str, ...] = PHASES
     caches: Tuple[str, ...] = CACHES
     key_conv: Tuple[str, ...] = CACHES
     sharded: bool = True
+    kv_dtypes: Tuple[str, ...] = ("fp32",)
 
     def supports(self, kind: str, phase: str, cache: str = "dense",
-                 key_conv: bool = False, sharded: bool = False) -> bool:
+                 key_conv: bool = False, sharded: bool = False,
+                 kv_dtype: str = "fp32") -> bool:
         return (kind in self.kinds and phase in self.phases
                 and cache in self.caches
                 and (not key_conv or cache in self.key_conv)
-                and (not sharded or self.sharded))
+                and (not sharded or self.sharded)
+                and kv_dtype in self.kv_dtypes)
 
 
 class AttentionBackend:
@@ -173,7 +184,9 @@ class AttentionBackend:
         if kind == "moba":
             return moba_paged_prefill_attention(
                 q, cache["pages_k"], cache["pages_v"], cache["centroids"],
-                block_table, kv_len, q_len, cfg.moba, scale=cfg.scale)
+                block_table, kv_len, q_len, cfg.moba, scale=cfg.scale,
+                scales_k=cache.get("scales_k"),
+                scales_v=cache.get("scales_v"))
         kf, vf = PC.paged_gather_kv(cache, block_table)
         from repro.core.attention import dense_attention
         return dense_attention(q, kf, vf, causal=True,
@@ -219,7 +232,8 @@ class AttentionBackend:
                           kv_len, **opts) -> jax.Array:
         return moba_paged_decode_attention(
             q, cache["pages_k"], cache["pages_v"], cache["centroids"],
-            block_table, kv_len, cfg.moba, scale=cfg.scale)
+            block_table, kv_len, cfg.moba, scale=cfg.scale,
+            scales_k=cache.get("scales_k"), scales_v=cache.get("scales_v"))
 
 
 # ---------------------------------------------------------------- backends
@@ -239,6 +253,7 @@ class XLABackend(AttentionBackend):
 
     name = "xla"
     aliases = ("sparse",)
+    capabilities = Capabilities(kv_dtypes=KV_DTYPES)
     use_scan = True
 
     def moba_prefill(self, cfg, q, k, v, *, q_positions=None, **opts):
@@ -265,6 +280,7 @@ class FlashBackend(AttentionBackend):
 
     name = "flash"
     aliases = ("kernel", "pallas")
+    capabilities = Capabilities(kv_dtypes=KV_DTYPES)
     # interpret vs compiled Pallas lowering.  None defers to
     # `kernels.runtime.resolve_interpret`: the REPRO_PALLAS_INTERPRET
     # env var if set, else compiled on TPU hosts / interpret everywhere
@@ -302,7 +318,8 @@ class FlashBackend(AttentionBackend):
             q, cache["pages_k"], cache["pages_v"], cache["centroids"],
             block_table, kv_len, cfg.moba, scale=cfg.scale,
             interpret=self._interpret(opts),
-            grid=opts.get("grid", self.decode_grid))
+            grid=opts.get("grid", self.decode_grid),
+            scales_k=cache.get("scales_k"), scales_v=cache.get("scales_v"))
 
 
 class SPBackend(AttentionBackend):
@@ -345,6 +362,7 @@ class ShardedBackend(AttentionBackend):
     """
 
     name = "sharded"
+    capabilities = Capabilities(kv_dtypes=KV_DTYPES)
     inner = "xla"
 
     def _delegate(self, opts) -> AttentionBackend:
@@ -450,20 +468,24 @@ def parse_backend_spec(spec: str) -> str:
 
 
 def resolve(name: str, *, kind: str, phase: str, cache: str = "dense",
-            key_conv: bool = False, sharded: bool = False
-            ) -> AttentionBackend:
+            key_conv: bool = False, sharded: bool = False,
+            kv_dtype: str = "fp32") -> AttentionBackend:
     """Name + capability query: the single entry point call sites use.
     ``sharded=True`` additionally demands mesh-free per-shard math (the
-    sharded serving engine's admission query, DESIGN.md §7)."""
+    sharded serving engine's admission query, DESIGN.md §7);
+    ``kv_dtype`` of ``int8``/``fp8`` demands quantized-pool support
+    (per-page scale dequantization in every paged path)."""
     be = get(name)
-    if not be.capabilities.supports(kind, phase, cache, key_conv, sharded):
+    if not be.capabilities.supports(kind, phase, cache, key_conv, sharded,
+                                    kv_dtype):
         able = [b.name for b in _REGISTRY.values()
                 if b.capabilities.supports(kind, phase, cache, key_conv,
-                                           sharded)]
+                                           sharded, kv_dtype)]
         raise BackendCapabilityError(
             f"backend {be.name!r} does not support kind={kind!r} "
             f"phase={phase!r} cache={cache!r} key_conv={key_conv} "
-            f"sharded={sharded}; backends that do: {able}")
+            f"sharded={sharded} kv_dtype={kv_dtype!r}; "
+            f"backends that do: {able}")
     return be
 
 
@@ -476,13 +498,15 @@ for _be in (ReferenceBackend(), XLABackend(), XLAUnrolledBackend(),
 def capability_matrix() -> str:
     """Human-readable support table (also the CI registry-drift check)."""
     lines = [f"{'backend':<14}{'aliases':<22}{'kinds':<18}"
-             f"{'phases':<18}{'caches':<14}{'key_conv':<14}sharded"]
+             f"{'phases':<18}{'caches':<14}{'key_conv':<14}"
+             f"{'sharded':<10}kv_dtypes"]
     for be in _REGISTRY.values():
         c = be.capabilities
         lines.append(f"{be.name:<14}{','.join(be.aliases) or '-':<22}"
                      f"{','.join(c.kinds):<18}{','.join(c.phases):<18}"
                      f"{','.join(c.caches):<14}{','.join(c.key_conv):<14}"
-                     f"{'yes' if c.sharded else '-'}")
+                     f"{'yes' if c.sharded else '-':<10}"
+                     f"{','.join(c.kv_dtypes)}")
     return "\n".join(lines)
 
 

@@ -190,7 +190,10 @@ def moba_paged_decode_attention(q: jax.Array, pages_k: jax.Array,
                                 pages_v: jax.Array, centroids: jax.Array,
                                 block_table: jax.Array, kv_len: jax.Array,
                                 cfg: MoBAConfig,
-                                scale: Optional[float] = None) -> jax.Array:
+                                scale: Optional[float] = None,
+                                scales_k: Optional[jax.Array] = None,
+                                scales_v: Optional[jax.Array] = None
+                                ) -> jax.Array:
     """Single-step decode against a paged cache: route on the per-page
     centroid cache, then gather only the ``top_k`` selected pages through
     the block table — O(N/B·d) routing reads + O(k·B·d) attention reads
@@ -202,6 +205,9 @@ def moba_paged_decode_attention(q: jax.Array, pages_k: jax.Array,
     block_table: (B, npg) int32 physical page ids, -1 = unassigned
     kv_len:      (B,) int32 valid lengths *including* the token appended
                  this step (call after the cache append)
+    scales_k/v:  (P, Hkv) fp32 per-page dequant scales of a quantized
+                 pool (None = unquantized).  Routing above never sees
+                 them — centroids are fp32 regardless of pool dtype.
     """
     b, h, _, d = q.shape
     _, ps, hkv, _ = pages_k.shape
@@ -225,15 +231,22 @@ def moba_paged_decode_attention(q: jax.Array, pages_k: jax.Array,
         pk_t, phys)
     vg = jax.vmap(per_head, in_axes=(0, 1), out_axes=1)(
         pv_t, phys)
-    s = jnp.einsum("bhgqd,bhgqkld->bhgqkl", qg,
-                   kg.astype(jnp.float32)) * scale
+    kg = kg.astype(jnp.float32)
+    vg = vg.astype(jnp.float32)
+    if scales_k is not None:
+        # mirror the page gather on the (P, Hkv) scale leaves: one
+        # scalar per selected (page, kv head), broadcast over (ps, d)
+        hsel = jnp.arange(hkv)[None, :, None, None, None]
+        kg = kg * scales_k[phys, hsel][..., None, None]
+        vg = vg * scales_v[phys, hsel][..., None, None]
+    s = jnp.einsum("bhgqd,bhgqkld->bhgqkl", qg, kg) * scale
     pos = idx[..., :, None] * ps + jnp.arange(ps)            # logical pos
     tok_valid = ((pos < kv_len[:, None, None, None, None, None])
                  & sel_valid[..., None])
     s = jnp.where(tok_valid, s, NEG_INF)
     sf = s.reshape(*s.shape[:-2], -1)
     p = jax.nn.softmax(sf, axis=-1).reshape(s.shape)
-    o = jnp.einsum("bhgqkl,bhgqkld->bhgqd", p, vg.astype(jnp.float32))
+    o = jnp.einsum("bhgqkl,bhgqkld->bhgqd", p, vg)
     return o.reshape(b, h, 1, d).astype(q.dtype)
 
 
@@ -288,7 +301,10 @@ def moba_paged_prefill_attention(q: jax.Array, pages_k: jax.Array,
                                  pages_v: jax.Array, centroids: jax.Array,
                                  block_table: jax.Array, kv_len: jax.Array,
                                  q_len: jax.Array, cfg: MoBAConfig,
-                                 scale: Optional[float] = None) -> jax.Array:
+                                 scale: Optional[float] = None,
+                                 scales_k: Optional[jax.Array] = None,
+                                 scales_v: Optional[jax.Array] = None
+                                 ) -> jax.Array:
     """Chunked-prefill MoBA attention against a paged cache.
 
     The chunk's queries route on the per-page centroid cache
@@ -300,7 +316,10 @@ def moba_paged_prefill_attention(q: jax.Array, pages_k: jax.Array,
 
     q: (B, H, L, d); pages_k/v: (P, ps, Hkv, d); centroids: (P, Hkv, d);
     block_table: (B, npg); kv_len: (B,) pre-chunk lengths (the chunk and
-    its centroid updates must already be appended); q_len: (B,).
+    its centroid updates must already be appended); q_len: (B,);
+    scales_k/v: (P, Hkv) fp32 per-page dequant scales of a quantized
+    pool (None = unquantized) — applied on the densified view, never to
+    the routing centroids.
     """
     b, h, nq, d = q.shape
     _, ps, hkv, _ = pages_k.shape
@@ -321,19 +340,20 @@ def moba_paged_prefill_attention(q: jax.Array, pages_k: jax.Array,
 
     tbl = jnp.maximum(block_table, 0)
 
-    def densify(pool):
-        g = pool[tbl]                                        # (B,npg,ps,h,d)
+    def densify(pool, scales):
+        g = pool[tbl].astype(jnp.float32)                    # (B,npg,ps,h,d)
+        if scales is not None:
+            g = g * scales[tbl][:, :, None, :, None]
         return g.transpose(0, 3, 1, 2, 4).reshape(b, hkv, npg * ps, d)
 
-    kf = densify(pages_k)
-    vf = densify(pages_v)
+    kf = densify(pages_k, scales_k)
+    vf = densify(pages_v, scales_v)
     qg = _group_queries(q, hkv).astype(jnp.float32)          # (B,Hkv,G,L,d)
-    s = jnp.einsum("bhgqd,bhsd->bhgqs", qg,
-                   kf.astype(jnp.float32)) * scale
+    s = jnp.einsum("bhgqd,bhsd->bhgqs", qg, kf) * scale
     s = jnp.where(mask, s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     p = jnp.where(mask.any(-1, keepdims=True), p, 0.0)
-    o = jnp.einsum("bhgqs,bhsd->bhgqd", p, vf.astype(jnp.float32))
+    o = jnp.einsum("bhgqs,bhsd->bhgqd", p, vf)
     return o.reshape(b, h, nq, d).astype(q.dtype)
 
 

@@ -1,0 +1,95 @@
+"""Per-page K/V quantization for the paged serving cache.
+
+Decode is memory-bound (PAPERS.md: "Rethinking LLM Inference
+Bottlenecks"), and the paper's SNR analysis shows retrieval accuracy is
+governed by the *routing* signal — centroid scores — not by the page
+payload precision.  So the pool stores K/V pages in int8 or fp8
+(e4m3) with one fp32 scale per (page, kv head), while centroids,
+key-conv ring buffers, and every routing input stay fp32: the router
+is bitwise identical across ``kv_dtype`` modes (pinned by
+tests/test_quantized_pages.py) and only the attended values carry
+quantization error.
+
+Scale layout (DESIGN.md §2): ``scales_k`` / ``scales_v`` are
+``(num_pages, hkv)`` fp32 pool leaves living beside ``pages_k`` /
+``pages_v`` in :data:`repro.serving.paged_cache.PAGE_LEAVES` — so COW
+page copies and host swap move payload + scales atomically with no
+extra plumbing.  A page's scale is ``amax / qmax`` over its *valid*
+tokens (1.0 for an all-zero or empty page, keeping dequant a no-op),
+symmetric, zero-point-free:
+
+    payload = clip(round(x / scale))     (int8; fp8 rounds in the cast)
+    x̂       = payload · scale
+
+Quantization happens on append (``paged_append_prefill`` /
+``paged_append_decode`` requantize each touched page from an fp32
+staging view); dequantization happens at the last possible moment — in
+VMEM inside the Pallas decode kernels, or at the densify/gather step of
+the XLA paths — so HBM only ever holds the low-precision payload.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# ``fp32`` = unquantized: pages stored at the engine compute dtype with
+# no scales leaves, byte-for-byte the pre-quantization pool layout.
+KV_DTYPES = ("fp32", "int8", "fp8")
+
+PAYLOAD_DTYPES = {
+    "int8": jnp.int8,
+    "fp8": jnp.float8_e4m3fn,
+}
+
+# symmetric clip points: int8 keeps ±127 (no -128 asymmetry); e4m3's
+# largest finite is 448 (the fn variant has no inf to overflow into)
+QMAX = {
+    "int8": 127.0,
+    "fp8": 448.0,
+}
+
+
+def kv_dtype_of(dtype) -> str:
+    """Pool payload dtype → ``kv_dtype`` name (``"fp32"`` for any
+    unquantized storage dtype, bf16 included)."""
+    d = jnp.dtype(dtype)
+    for name, pd in PAYLOAD_DTYPES.items():
+        if d == jnp.dtype(pd):
+            return name
+    return "fp32"
+
+
+def payload_dtype(kv_dtype: str):
+    if kv_dtype not in PAYLOAD_DTYPES:
+        raise ValueError(
+            f"kv_dtype {kv_dtype!r} has no quantized payload; "
+            f"quantized modes: {sorted(PAYLOAD_DTYPES)}")
+    return PAYLOAD_DTYPES[kv_dtype]
+
+
+def compute_scale(x: jax.Array, reduce_axes, kv_dtype: str,
+                  where=None) -> jax.Array:
+    """Per-group fp32 scale ``amax / qmax`` with amax taken over
+    ``reduce_axes`` (optionally masked by ``where``); all-zero groups
+    get scale 1.0 so dequantization stays a no-op."""
+    mag = jnp.abs(x.astype(jnp.float32))
+    if where is not None:
+        mag = mag * where.astype(jnp.float32)
+    amax = jnp.max(mag, axis=reduce_axes)
+    return jnp.where(amax > 0.0, amax / QMAX[kv_dtype], 1.0)
+
+
+def quantize(x: jax.Array, scale: jax.Array, kv_dtype: str) -> jax.Array:
+    """fp32 values → payload dtype.  ``scale`` must broadcast against
+    ``x`` (callers expand the per-(page, head) scale themselves)."""
+    qmax = QMAX[kv_dtype]
+    y = x.astype(jnp.float32) / scale
+    if kv_dtype == "int8":
+        return jnp.clip(jnp.round(y), -qmax, qmax).astype(jnp.int8)
+    return jnp.clip(y, -qmax, qmax).astype(PAYLOAD_DTYPES[kv_dtype])
+
+
+def dequantize(payload: jax.Array, scale: jax.Array) -> jax.Array:
+    """Payload → fp32.  Exact inverse of the storage transform up to the
+    rounding the quantizer already paid."""
+    return payload.astype(jnp.float32) * scale

@@ -98,16 +98,21 @@ def union_pages(idx: jax.Array, sel_valid: jax.Array, npg: int
 
 
 # ------------------------------------------------------------ grouped grid
-def _decode_kernel_grouped(phys_ref, kvl_ref, q_ref, base_ref, k_ref,
-                           v_ref, o_ref, o_acc, m_acc, l_acc, *,
+def _decode_kernel_grouped(phys_ref, kvl_ref, ksc_ref, vsc_ref, q_ref,
+                           base_ref, k_ref, v_ref, o_ref, o_acc, m_acc,
+                           l_acc, *,
                            page_size: int, n_union: int, scale: float):
     """Grid (B·Hkv, U): one union page per step, (G, ps) MXU matmul.
 
     ``phys`` is scalar-prefetched and already drove the K/V index_map;
     ``base`` is the per-(head, slot) token offset of the page — sentinel
     npg·ps for heads that did not select it, so every token of the row
-    masks out; ``kvl`` the per-row valid length.  Accumulators are
-    per-head (G, 1) VMEM tiles (G padded to the sublane grain)."""
+    masks out; ``kvl`` the per-row valid length; ``ksc``/``vsc`` the
+    per-(row, slot) fp32 dequant scale of the streamed page (all-ones
+    for unquantized pools) — the int8/fp8 tile is upcast and scaled in
+    VMEM right here, before the MXU matmul, so HBM only ever moved the
+    low-precision payload.  Accumulators are per-head (G, 1) VMEM tiles
+    (G padded to the sublane grain)."""
     bh = pl.program_id(0)
     uu = pl.program_id(1)
 
@@ -118,8 +123,8 @@ def _decode_kernel_grouped(phys_ref, kvl_ref, q_ref, base_ref, k_ref,
         l_acc[...] = jnp.zeros_like(l_acc)
 
     q = q_ref[0].astype(jnp.float32)              # (Gp, d)
-    kb = k_ref[0, :, 0, :].astype(jnp.float32)    # (ps, d)
-    vb = v_ref[0, :, 0, :].astype(jnp.float32)
+    kb = k_ref[0, :, 0, :].astype(jnp.float32) * ksc_ref[bh, uu]  # (ps, d)
+    vb = v_ref[0, :, 0, :].astype(jnp.float32) * vsc_ref[bh, uu]
 
     s = jax.lax.dot_general(q, kb, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32)  # (Gp, ps)
@@ -148,7 +153,8 @@ def _decode_kernel_grouped(phys_ref, kvl_ref, q_ref, base_ref, k_ref,
 
 
 def _decode_grouped(q, pages_k, pages_v, block_table, kv_len, idx,
-                    sel_valid, *, scale: float, interpret: bool):
+                    sel_valid, *, scale: float, interpret: bool,
+                    scales_k=None, scales_v=None):
     b, h, _, d = q.shape
     num_pages, ps, hkv, _ = pages_k.shape
     npg = block_table.shape[1]
@@ -160,6 +166,17 @@ def _decode_grouped(q, pages_k, pages_v, block_table, kv_len, idx,
     tbl = jnp.maximum(block_table, 0)
     phys = tbl[jnp.arange(b)[:, None, None], union]
     phys = jnp.clip(phys, 0, num_pages - 1)
+
+    # per-(row, union-slot) dequant scales, gathered alongside the page
+    # ids the index_map prefetches (ones when the pool is unquantized —
+    # multiplying by 1.0 is a bitwise no-op on the fp32 tile)
+    if scales_k is None:
+        ksc_f = jnp.ones((b * hkv, cap), jnp.float32)
+        vsc_f = ksc_f
+    else:
+        hsel = jnp.arange(hkv)[None, :, None]
+        ksc_f = scales_k[phys, hsel].reshape(b * hkv, cap)
+        vsc_f = scales_v[phys, hsel].reshape(b * hkv, cap)
 
     # per-(head, union-slot) token offsets: page base where the head
     # selected the page, else the npg*ps sentinel (>= kv_len by the
@@ -184,11 +201,11 @@ def _decode_grouped(q, pages_k, pages_v, block_table, kv_len, idx,
     kvl_f = jnp.broadcast_to(kv_len[:, None], (b, hkv)).reshape(-1)
     kvl_f = kvl_f.astype(jnp.int32)
 
-    def kv_index(bh, uu, phys_ref, kvl_ref):
+    def kv_index(bh, uu, phys_ref, kvl_ref, ksc_ref, vsc_ref):
         return (phys_ref[bh, uu], 0, bh % hkv, 0)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=4,
         grid=(b * hkv, cap),
         in_specs=[
             pl.BlockSpec((1, gp, d), lambda bh, uu, *_: (bh, 0, 0)),
@@ -210,20 +227,23 @@ def _decode_grouped(q, pages_k, pages_v, block_table, kv_len, idx,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b * hkv, gp, d), jnp.float32),
         interpret=interpret,
-    )(phys_f, kvl_f, q_f, base_f, pages_k, pages_v)
+    )(phys_f, kvl_f, ksc_f, vsc_f, q_f, base_f, pages_k, pages_v)
     return out[:, :g].reshape(b, h, 1, d).astype(q.dtype)
 
 
 # --------------------------------------------------------- flat (legacy)
-def _decode_kernel_flat(phys_ref, base_ref, kvl_ref, q_ref, k_ref, v_ref,
+def _decode_kernel_flat(phys_ref, base_ref, kvl_ref, ksc_ref, vsc_ref,
+                        q_ref, k_ref, v_ref,
                         o_ref, o_acc, m_acc, l_acc, *,
                         page_size: int, top_k: int, scale: float):
     """Grid (B·H, top_k): one selected page per step, online softmax.
 
-    phys/base/kvl are scalar-prefetched: ``phys`` already drove the K/V
-    index_map; ``base`` is the page's logical token offset (sentinel
-    npg·ps for unselected slots, so every token masks out); ``kvl`` the
-    per-row valid length.
+    phys/base/kvl/ksc/vsc are scalar-prefetched: ``phys`` already drove
+    the K/V index_map; ``base`` is the page's logical token offset
+    (sentinel npg·ps for unselected slots, so every token masks out);
+    ``kvl`` the per-row valid length; ``ksc``/``vsc`` the page's fp32
+    dequant scales (ones for unquantized pools), applied on the VMEM
+    tile after the upcast.
     """
     bh = pl.program_id(0)
     kk = pl.program_id(1)
@@ -235,8 +255,8 @@ def _decode_kernel_flat(phys_ref, base_ref, kvl_ref, q_ref, k_ref, v_ref,
         l_acc[0, 0] = 0.0
 
     q = q_ref[...].astype(jnp.float32)                 # (1, d)
-    kb = k_ref[0, :, 0, :].astype(jnp.float32)         # (ps, d)
-    vb = v_ref[0, :, 0, :].astype(jnp.float32)
+    kb = k_ref[0, :, 0, :].astype(jnp.float32) * ksc_ref[bh, kk]  # (ps, d)
+    vb = v_ref[0, :, 0, :].astype(jnp.float32) * vsc_ref[bh, kk]
 
     s = jax.lax.dot_general(q, kb, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32)  # (1, ps)
@@ -265,7 +285,8 @@ def _decode_kernel_flat(phys_ref, base_ref, kvl_ref, q_ref, k_ref, v_ref,
 
 
 def _decode_flat(q, pages_k, pages_v, block_table, kv_len, idx, sel_valid,
-                 *, scale: float, interpret: bool):
+                 *, scale: float, interpret: bool,
+                 scales_k=None, scales_v=None):
     b, h, _, d = q.shape
     num_pages, ps, hkv, _ = pages_k.shape
     npg = block_table.shape[1]
@@ -285,12 +306,19 @@ def _decode_flat(q, pages_k, pages_v, block_table, kv_len, idx, sel_valid,
     kvl_f = jnp.broadcast_to(kv_len[:, None], (b, h)).reshape(-1)
     kvl_f = kvl_f.astype(jnp.int32)
     q_f = q[:, :, 0, :].reshape(b * h, d)
+    if scales_k is None:
+        ksc_f = jnp.ones((b * h, tk), jnp.float32)
+        vsc_f = ksc_f
+    else:
+        hsel = jnp.arange(hkv)[None, :, None, None]
+        ksc_f = scales_k[phys[:, :, :, 0, :], hsel].reshape(b * h, tk)
+        vsc_f = scales_v[phys[:, :, :, 0, :], hsel].reshape(b * h, tk)
 
-    def kv_index(bh, kk, phys_ref, base_ref, kvl_ref):
+    def kv_index(bh, kk, phys_ref, base_ref, kvl_ref, ksc_ref, vsc_ref):
         return (phys_ref[bh, kk], 0, (bh % h) // g, 0)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=3,
+        num_scalar_prefetch=5,
         grid=(b * h, tk),
         in_specs=[
             pl.BlockSpec((1, d), lambda bh, kk, *_: (bh, 0)),
@@ -311,7 +339,7 @@ def _decode_flat(q, pages_k, pages_v, block_table, kv_len, idx, sel_valid,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b * h, d), jnp.float32),
         interpret=interpret,
-    )(phys_f, base_f, kvl_f, q_f, pages_k, pages_v)
+    )(phys_f, base_f, kvl_f, ksc_f, vsc_f, q_f, pages_k, pages_v)
     return out.reshape(b, h, 1, d).astype(q.dtype)
 
 
@@ -322,7 +350,10 @@ def moba_paged_decode_pallas(q: jax.Array, pages_k: jax.Array,
                              cfg: MoBAConfig,
                              scale: Optional[float] = None,
                              interpret: Optional[bool] = None,
-                             grid: str = "grouped") -> jax.Array:
+                             grid: str = "grouped",
+                             scales_k: Optional[jax.Array] = None,
+                             scales_v: Optional[jax.Array] = None
+                             ) -> jax.Array:
     """Drop-in for `core.moba.moba_paged_decode_attention` (same contract):
 
     q:           (B, H, 1, d)
@@ -330,13 +361,17 @@ def moba_paged_decode_pallas(q: jax.Array, pages_k: jax.Array,
     centroids:   (P, Hkv, d) fp32 per-page centroid cache
     block_table: (B, npg) int32 physical page ids, -1 = unassigned
     kv_len:      (B,) int32 post-append valid lengths
+    scales_k/v:  (P, Hkv) fp32 per-page dequant scales for int8/fp8
+                 pools (None = unquantized); gathered per selected page
+                 and scalar-prefetched, the kernels upcast + scale the
+                 payload tile in VMEM before the matmuls
 
     ``interpret=None`` resolves through `kernels.runtime` (env var /
     TPU auto-detect); ``grid`` selects the MXU-shaped ``grouped`` grid
     (default) or the legacy per-query-head ``flat`` grid.  Routing runs
-    in XLA on the centroid cache (shared `moba_paged_route`), then the
-    fused gather+attend kernel.  Rows with ``kv_len`` 0 (inactive
-    slots) return zeros.
+    in XLA on the centroid cache (shared `moba_paged_route`) — fp32
+    regardless of pool dtype — then the fused gather+attend kernel.
+    Rows with ``kv_len`` 0 (inactive slots) return zeros.
     """
     if grid not in ("grouped", "flat"):
         raise ValueError(f"unknown decode grid {grid!r}: "
@@ -353,4 +388,5 @@ def moba_paged_decode_pallas(q: jax.Array, pages_k: jax.Array,
                                       cfg, page_size=ps)
     impl = _decode_grouped if grid == "grouped" else _decode_flat
     return impl(q, pages_k, pages_v, block_table, kv_len, idx, sel_valid,
-                scale=scale, interpret=interpret)
+                scale=scale, interpret=interpret,
+                scales_k=scales_k, scales_v=scales_v)

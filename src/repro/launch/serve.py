@@ -42,7 +42,8 @@ def serve(arch: str, batch: int = 4, prompt_len: int = 64, gen: int = 32,
           smoke: bool = True, attn_backend: str = "reference",
           seed: int = 0, use_engine: str = "auto",
           prefill_chunk: int = 0, shards: int = 0,
-          prefix_cache: bool = False, swap_bytes: int = None):
+          prefix_cache: bool = False, swap_bytes: int = None,
+          kv_dtype: str = "fp32"):
     """Decode ``gen`` greedy tokens for ``batch`` random prompts.
 
     Routes through the paged continuous-batching engine when the arch
@@ -67,7 +68,8 @@ def serve(arch: str, batch: int = 4, prompt_len: int = 64, gen: int = 32,
     eng = _make_engine(cfg, params, EngineConfig(
         max_seqs=batch, max_seq_len=_round_up(prompt_len + gen, 16),
         max_prefill_batch=min(batch, 4), attn_backend=attn_backend,
-        prefill_chunk=prefill_chunk, prefix_cache=prefix_cache, **kw),
+        prefill_chunk=prefill_chunk, prefix_cache=prefix_cache,
+        kv_dtype=kv_dtype, **kw),
         shards)
     reqs = [eng.submit(prompts[i], max_new_tokens=gen)
             for i in range(batch)]
@@ -88,7 +90,8 @@ def serve_stream(arch: str, n_requests: int = 16, rate: float = 8.0,
                  seed: int = 0, realtime: bool = True,
                  prefill_chunk: int = 0, shards: int = 0,
                  prefix_cache: bool = False,
-                 swap_bytes: int = None) -> dict:
+                 swap_bytes: int = None,
+                 kv_dtype: str = "fp32") -> dict:
     """Continuous-batching scenario: Poisson arrivals (``rate`` req/s),
     mixed prompt/generation lengths.  Reports tokens/s and p50/p99
     time-to-first-token + end-to-end latency (per shard too when
@@ -106,7 +109,7 @@ def serve_stream(arch: str, n_requests: int = 16, rate: float = 8.0,
     eng = _make_engine(cfg, params, EngineConfig(
         max_seqs=max_seqs, max_seq_len=max_len, num_pages=num_pages,
         attn_backend=attn_backend, prefill_chunk=prefill_chunk,
-        prefix_cache=prefix_cache, **kw), shards)
+        prefix_cache=prefix_cache, kv_dtype=kv_dtype, **kw), shards)
     t = 0.0
     for _ in range(n_requests):
         t += rng.exponential(1.0 / rate)
@@ -248,6 +251,14 @@ def main():
                     help="host-memory budget for preemption swap "
                          "(bytes; 0 disables swap so preempted requests "
                          "recompute; default 64 MiB)")
+    ap.add_argument("--kv-dtype", default="fp32",
+                    choices=["fp32", "int8", "fp8"],
+                    help="K/V page-pool storage precision: quantized "
+                         "pools store int8/fp8 payload with per-page "
+                         "per-kv-head fp32 scales; centroids and routing "
+                         "stay fp32.  Backends must declare the dtype in "
+                         "Capabilities.kv_dtypes (reference/sp are "
+                         "fp32-only)")
     ap.add_argument("--shards", type=int, default=0,
                     help="page-pool shards over the mesh data axis "
                          "(0 = single-host engine); per-shard sizing "
@@ -288,7 +299,8 @@ def main():
                          prefill_chunk=args.prefill_chunk,
                          shards=args.shards,
                          prefix_cache=args.prefix_cache,
-                         swap_bytes=args.swap_bytes)
+                         swap_bytes=args.swap_bytes,
+                         kv_dtype=args.kv_dtype)
         else:
             serve(args.arch, batch=args.batch or 4,
                   prompt_len=args.prompt_len or 64, gen=args.gen or 32,
@@ -297,7 +309,8 @@ def main():
                   use_engine="never" if args.mode == "fixed" else "auto",
                   prefill_chunk=args.prefill_chunk, shards=args.shards,
                   prefix_cache=args.prefix_cache,
-                  swap_bytes=args.swap_bytes)
+                  swap_bytes=args.swap_bytes,
+                  kv_dtype=args.kv_dtype)
     except ServingError as e:  # unsupported arch / impossible sizing;
         # genuine internal errors keep their tracebacks
         print(f"error: {e}", file=sys.stderr)

@@ -276,7 +276,8 @@ def init_caches(cfg: ModelConfig, batch: int, max_len: int,
 
 def init_paged_caches(cfg: ModelConfig, num_pages: int, page_size: int,
                       dtype=jnp.bfloat16, max_seqs: int = 0,
-                      prefix_tails: bool = False) -> dict:
+                      prefix_tails: bool = False,
+                      kv_dtype: str = "fp32") -> dict:
     """Stacked paged caches (page pools) in the same group/slot layout as
     :func:`init_caches`, so either cache kind flows through the same scan.
 
@@ -300,7 +301,8 @@ def init_paged_caches(cfg: ModelConfig, num_pages: int, page_size: int,
         return {f"slot_{i}": PC.init_page_pool(
                     cfg, num_pages, page_size,
                     with_centroids=(kind == "moba"), dtype=dtype,
-                    max_seqs=max_seqs, prefix_tails=prefix_tails)
+                    max_seqs=max_seqs, prefix_tails=prefix_tails,
+                    kv_dtype=kv_dtype)
                 for i, kind in enumerate(pattern)}
 
     return jax.vmap(one_group)(jnp.arange(n_groups))

@@ -30,6 +30,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core import backends as B
+from repro.core import quantization as Q
 from repro.launch import steps as S
 from repro.models import transformer as T
 from repro.serving import paged_cache as PC
@@ -63,12 +64,14 @@ def parse_attn_backend(spec: str) -> str:
 
 
 def admission_capability_check(cfg: ModelConfig, backend: str,
-                               sharded: bool = False) -> None:
+                               sharded: bool = False,
+                               kv_dtype: str = "fp32") -> None:
     """Admission-time capability query shared by the single-host and
     sharded engines: every layer kind must resolve for both paged
-    phases (with key-conv where the config carries it, and mesh-free
-    per-shard math when ``sharded``), or the request stream would die
-    inside a jitted step."""
+    phases (with key-conv where the config carries it, mesh-free
+    per-shard math when ``sharded``, and quantized-pool support when
+    ``kv_dtype`` is int8/fp8), or the request stream would die inside a
+    jitted step."""
     a = cfg.attention
     conv = bool(a.moba is not None and a.moba.key_conv_width)
     kinds = {"dense" if k == "shared_attn" else k
@@ -78,7 +81,7 @@ def admission_capability_check(cfg: ModelConfig, backend: str,
             try:
                 B.resolve(backend, kind=kind, phase=phase, cache="paged",
                           key_conv=conv and kind == "moba",
-                          sharded=sharded)
+                          sharded=sharded, kv_dtype=kv_dtype)
             except B.BackendCapabilityError as e:
                 raise UnsupportedFeatureError("attn_backend",
                                               str(e)) from e
@@ -281,6 +284,13 @@ class EngineConfig:
     swap_bytes: int = 64 << 20         # host-memory cap (per shard) for
     #                                    swap-based preemption; 0 = always
     #                                    recompute preempted prefixes
+    kv_dtype: str = "fp32"             # paged-pool K/V storage: "fp32"
+    #                                    (compute dtype, no scales) or
+    #                                    quantized "int8" / "fp8" with
+    #                                    per-page fp32 scales; routing
+    #                                    (centroids, key-conv state)
+    #                                    stays fp32 either way
+    #                                    (core/quantization.py)
     attn_backend: str = ""             # registered backend (core.backends);
     #                                    "" → moba_impl or "reference".
     #                                    A "name:option,..." spec (e.g.
@@ -308,7 +318,12 @@ class Engine:
         # are applied to the backend instance here.
         self.attn_backend = parse_attn_backend(
             ecfg.attn_backend or ecfg.moba_impl or "reference")
-        admission_capability_check(cfg, self.attn_backend)
+        if ecfg.kv_dtype not in Q.KV_DTYPES:
+            raise ServingError(
+                f"unknown kv_dtype {ecfg.kv_dtype!r}; "
+                f"expected one of {Q.KV_DTYPES}")
+        admission_capability_check(cfg, self.attn_backend,
+                                   kv_dtype=ecfg.kv_dtype)
         self.page_size, self.pages_per_seq, self.num_pages = \
             resolve_pool_sizes(cfg, ecfg)
         conv = needs_key_conv(cfg)
@@ -322,7 +337,8 @@ class Engine:
         self.caches = T.init_paged_caches(
             cfg, self.num_pages, self.page_size,
             dtype=jnp.dtype(cfg.dtype), max_seqs=ecfg.max_seqs,
-            prefix_tails=ecfg.prefix_cache and conv)
+            prefix_tails=ecfg.prefix_cache and conv,
+            kv_dtype=ecfg.kv_dtype)
         self.swap_store = (HostSwapStore(self, ecfg.swap_bytes)
                            if ecfg.swap_bytes > 0 else None)
         self.sched = Scheduler(
@@ -331,6 +347,7 @@ class Engine:
             max_prefill_batch=ecfg.max_prefill_batch,
             chunk_tokens=ecfg.prefill_chunk,
             prefix_cache=ecfg.prefix_cache, key_conv=conv,
+            full_page_match=ecfg.kv_dtype != "fp32",
             swap=self.swap_store)
         # prefix hits and swap restores resume mid-context, so their
         # suffix prefills need the chunk-aware (kv_len-offset) path even

@@ -33,12 +33,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core import quantization as Q
 
 # leaves indexed by physical page id on their (first non-shard) axis —
 # the unit that page-granular ops (COW copy, swap save/restore) move.
+# ``scales_k``/``scales_v`` (quantized pools only) live here so COW
+# copies and host swap carry payload + scales atomically for free.
 # ``key_conv_state`` is per sequence *slot*, not per page, and moves via
 # the ring-row helpers instead.
-PAGE_LEAVES = ("pages_k", "pages_v", "centroids", "key_conv_tails")
+PAGE_LEAVES = ("pages_k", "pages_v", "scales_k", "scales_v",
+               "centroids", "key_conv_tails")
 
 
 def resolve_page_size(cfg: ModelConfig) -> int:
@@ -51,7 +55,8 @@ def resolve_page_size(cfg: ModelConfig) -> int:
 
 def init_page_pool(cfg: ModelConfig, num_pages: int, page_size: int,
                    with_centroids: bool, dtype=jnp.bfloat16,
-                   max_seqs: int = 0, prefix_tails: bool = False) -> Dict:
+                   max_seqs: int = 0, prefix_tails: bool = False,
+                   kv_dtype: str = "fp32") -> Dict:
     """One layer slot's pool.  MoBA slots of key-conv models additionally
     carry a per-sequence-slot ring buffer ``key_conv_state`` of the last
     ``key_conv_width - 1`` raw (post-RoPE, pre-conv) keys, sized by
@@ -63,10 +68,27 @@ def init_page_pool(cfg: ModelConfig, num_pages: int, page_size: int,
     page's last ``width - 1`` positions: when admission maps a sequence
     onto cached pages, its ring row is loaded from the last matched
     page's tail, so the suffix prefill convs with exactly the state a
-    contiguous prefill would have carried (docs/serving.md)."""
+    contiguous prefill would have carried (docs/serving.md).
+
+    ``kv_dtype`` of ``"int8"``/``"fp8"`` stores the K/V payload
+    quantized with per-(page, kv head) fp32 ``scales_k``/``scales_v``
+    leaves (init 1.0 so dequantizing a fresh page is a no-op); routing
+    state — centroids, key-conv ring buffers and tails — stays at full
+    precision regardless (``core/quantization.py``).  ``"fp32"`` keeps
+    the pre-quantization layout byte-for-byte: pages at ``dtype``, no
+    scales leaves."""
     hkv, dh = cfg.num_kv_heads, cfg.resolved_head_dim
-    pool = {"pages_k": jnp.zeros((num_pages, page_size, hkv, dh), dtype),
-            "pages_v": jnp.zeros((num_pages, page_size, hkv, dh), dtype)}
+    if kv_dtype not in Q.KV_DTYPES:
+        raise ValueError(f"unknown kv_dtype {kv_dtype!r}; "
+                         f"expected one of {Q.KV_DTYPES}")
+    # only the page payload is quantized; key-conv ring buffers / tails
+    # below keep the compute ``dtype`` (they feed the fp32 router)
+    pg_dtype = dtype if kv_dtype == "fp32" else Q.payload_dtype(kv_dtype)
+    pool = {"pages_k": jnp.zeros((num_pages, page_size, hkv, dh), pg_dtype),
+            "pages_v": jnp.zeros((num_pages, page_size, hkv, dh), pg_dtype)}
+    if kv_dtype != "fp32":
+        pool["scales_k"] = jnp.ones((num_pages, hkv), jnp.float32)
+        pool["scales_v"] = jnp.ones((num_pages, hkv), jnp.float32)
     if with_centroids:
         pool["centroids"] = jnp.zeros((num_pages, hkv, dh), jnp.float32)
         a = cfg.attention
@@ -110,6 +132,13 @@ def paged_append_decode(cache: Dict, block_table: jax.Array,
 
     k_new/v_new: (B, hkv, 1, dh) in compute dtype.  Updates the written
     page's centroid incrementally.  Inactive rows write nothing.
+
+    Quantized pools (``scales_k`` present) requantize the whole tail
+    page read-modify-write: gather → dequantize → insert the token →
+    amax over the now-valid positions → scatter payload + scale back.
+    The centroid update below is untouched — it folds the *fp32*
+    incoming key into the old centroid, never reading the pool, so
+    routing state is bitwise identical across ``kv_dtype`` modes.
     """
     pk, pv = cache["pages_k"], cache["pages_v"]
     num_pages, ps, hkv, dh = pk.shape
@@ -117,16 +146,39 @@ def paged_append_decode(cache: Dict, block_table: jax.Array,
     off = kv_len % ps
     phys = jnp.take_along_axis(block_table, page_idx[:, None], axis=1)[:, 0]
     ok = active & (phys >= 0)
-    slot = jnp.where(ok, phys * ps + off, num_pages * ps)
     tok_k = k_new[:, :, 0]                                   # (B,hkv,dh)
     tok_v = v_new[:, :, 0]
-    flat_k = pk.reshape(num_pages * ps, hkv, dh)
-    flat_v = pv.reshape(num_pages * ps, hkv, dh)
-    flat_k = flat_k.at[slot].set(tok_k.astype(pk.dtype), mode="drop")
-    flat_v = flat_v.at[slot].set(tok_v.astype(pv.dtype), mode="drop")
-    new = dict(cache,
-               pages_k=flat_k.reshape(num_pages, ps, hkv, dh),
-               pages_v=flat_v.reshape(num_pages, ps, hkv, dh))
+    if "scales_k" in cache:
+        kv_dt = Q.kv_dtype_of(pk.dtype)
+        ph = jnp.maximum(phys, 0)
+        pidx = jnp.where(ok, phys, num_pages)
+        onehot = jnp.arange(ps)[None, :] == off[:, None]     # (B,ps)
+        vmask = jnp.arange(ps)[None, :] <= off[:, None]      # valid incl new
+
+        def requant(pool, scales, tok):
+            page = Q.dequantize(pool[ph],
+                                scales[ph][:, None, :, None])  # (B,ps,h,d)
+            page = jnp.where(onehot[:, :, None, None],
+                             tok.astype(jnp.float32)[:, None], page)
+            scale = Q.compute_scale(page, (1, 3), kv_dt,
+                                    where=vmask[:, :, None, None])  # (B,h)
+            payload = Q.quantize(page, scale[:, None, :, None], kv_dt)
+            return (pool.at[pidx].set(payload, mode="drop"),
+                    scales.at[pidx].set(scale, mode="drop"))
+
+        new_pk, new_sk = requant(pk, cache["scales_k"], tok_k)
+        new_pv, new_sv = requant(pv, cache["scales_v"], tok_v)
+        new = dict(cache, pages_k=new_pk, pages_v=new_pv,
+                   scales_k=new_sk, scales_v=new_sv)
+    else:
+        slot = jnp.where(ok, phys * ps + off, num_pages * ps)
+        flat_k = pk.reshape(num_pages * ps, hkv, dh)
+        flat_v = pv.reshape(num_pages * ps, hkv, dh)
+        flat_k = flat_k.at[slot].set(tok_k.astype(pk.dtype), mode="drop")
+        flat_v = flat_v.at[slot].set(tok_v.astype(pv.dtype), mode="drop")
+        new = dict(cache,
+                   pages_k=flat_k.reshape(num_pages, ps, hkv, dh),
+                   pages_v=flat_v.reshape(num_pages, ps, hkv, dh))
     if "centroids" in cache:
         cents = cache["centroids"]                           # (P,hkv,dh) f32
         m = off.astype(jnp.float32)[:, None, None]           # tokens in page
@@ -151,6 +203,16 @@ def paged_append_prefill(cache: Dict, block_table: jax.Array,
     stored keys — for a tail page that earlier chunks started, the
     recompute reads those chunks' keys back from the pool, so the result
     is identical to a one-shot prefill of the whole prefix.
+
+    Quantized pools stage the touched pages in fp32 — prior pool tokens
+    dequantized, the incoming chunk scattered over them — then
+    requantize each touched page whole (amax over its valid tokens) and
+    scatter payload + scales back.  Centroids are computed *from the
+    staging view* with the exact masked reduce the fp32 path uses, so
+    any page fully written by this call (every page of a one-shot
+    prefill) gets a bitwise-identical centroid; only a chunked/suffix
+    tail page whose earlier tokens already live quantized in the pool
+    sees quantization error in its centroid.
     """
     pk, pv = cache["pages_k"], cache["pages_v"]
     num_pages, ps, hkv, dh = pk.shape
@@ -162,30 +224,61 @@ def paged_append_prefill(cache: Dict, block_table: jax.Array,
     logical = jnp.minimum(pos // ps, npg - 1)
     phys = jnp.take_along_axis(block_table, logical, axis=1)  # (B,L)
     valid = (jnp.arange(length)[None, :] < q_len[:, None]) & (phys >= 0)
-    slot = jnp.where(valid, phys * ps + pos % ps,
-                     num_pages * ps).reshape(-1)
     vals_k = k_new.transpose(0, 2, 1, 3).reshape(b * length, hkv, dh)
     vals_v = v_new.transpose(0, 2, 1, 3).reshape(b * length, hkv, dh)
-    flat_k = pk.reshape(num_pages * ps, hkv, dh).at[slot].set(
-        vals_k.astype(pk.dtype), mode="drop")
-    flat_v = pv.reshape(num_pages * ps, hkv, dh).at[slot].set(
-        vals_v.astype(pv.dtype), mode="drop")
-    new_pk = flat_k.reshape(num_pages, ps, hkv, dh)
-    new_pv = flat_v.reshape(num_pages, ps, hkv, dh)
-    new = dict(cache, pages_k=new_pk, pages_v=new_pv)
+    post = q_len + kv_len                                    # (B,)
+    page_start = jnp.arange(npg) * ps
+    cnt = jnp.clip(post[:, None] - page_start, 0, ps)
+    touched = ((cnt > 0) & (block_table >= 0)
+               & (page_start + ps > kv_len[:, None]))        # (B,npg)
+    wmask = jnp.arange(ps)[None, None, :] < cnt[..., None]   # (B,npg,ps)
+    idx = jnp.where(touched, block_table, num_pages).reshape(-1)
+
+    if "scales_k" in cache:
+        kv_dt = Q.kv_dtype_of(pk.dtype)
+        tbl = jnp.maximum(block_table, 0)
+        stage_slot = jnp.where(
+            valid, (jnp.arange(b)[:, None] * npg + logical) * ps + pos % ps,
+            b * npg * ps).reshape(-1)
+
+        def stage_and_quant(pool, scales, vals):
+            stage = Q.dequantize(pool[tbl],
+                                 scales[tbl][:, :, None, :, None])
+            stage = stage.reshape(b * npg * ps, hkv, dh).at[stage_slot].set(
+                vals.astype(jnp.float32), mode="drop")
+            stage = stage.reshape(b, npg, ps, hkv, dh)
+            scale = Q.compute_scale(stage, (2, 4), kv_dt,
+                                    where=wmask[:, :, :, None, None])
+            payload = Q.quantize(stage, scale[:, :, None, :, None], kv_dt)
+            return stage, (
+                pool.at[idx].set(payload.reshape(b * npg, ps, hkv, dh),
+                                 mode="drop"),
+                scales.at[idx].set(scale.reshape(b * npg, hkv),
+                                   mode="drop"))
+
+        stage_k, (new_pk, new_sk) = stage_and_quant(
+            pk, cache["scales_k"], vals_k)
+        _, (new_pv, new_sv) = stage_and_quant(
+            pv, cache["scales_v"], vals_v)
+        new = dict(cache, pages_k=new_pk, pages_v=new_pv,
+                   scales_k=new_sk, scales_v=new_sv)
+        cent_src = stage_k                                   # (B,npg,ps,h,d)
+    else:
+        slot = jnp.where(valid, phys * ps + pos % ps,
+                         num_pages * ps).reshape(-1)
+        flat_k = pk.reshape(num_pages * ps, hkv, dh).at[slot].set(
+            vals_k.astype(pk.dtype), mode="drop")
+        flat_v = pv.reshape(num_pages * ps, hkv, dh).at[slot].set(
+            vals_v.astype(pv.dtype), mode="drop")
+        new_pk = flat_k.reshape(num_pages, ps, hkv, dh)
+        new_pv = flat_v.reshape(num_pages, ps, hkv, dh)
+        new = dict(cache, pages_k=new_pk, pages_v=new_pv)
+        cent_src = new_pk[jnp.maximum(block_table, 0)]       # (B,npg,ps,h,d)
     if "centroids" in cache:
-        post = q_len + kv_len                                # (B,)
-        page_start = jnp.arange(npg) * ps
-        cnt = jnp.clip(post[:, None] - page_start, 0, ps)
-        touched = ((cnt > 0) & (block_table >= 0)
-                   & (page_start + ps > kv_len[:, None]))    # (B,npg)
-        pages = new_pk[jnp.maximum(block_table, 0)]          # (B,npg,ps,h,d)
-        wmask = jnp.arange(ps)[None, None, :] < cnt[..., None]
-        sums = (pages.astype(jnp.float32)
+        sums = (cent_src.astype(jnp.float32)
                 * wmask[..., None, None]).sum(axis=2)        # (B,npg,h,d)
         cent = sums / jnp.maximum(cnt, 1)[..., None, None].astype(
             jnp.float32)
-        idx = jnp.where(touched, block_table, num_pages).reshape(-1)
         new["centroids"] = cache["centroids"].at[idx].set(
             cent.reshape(b * npg, hkv, dh), mode="drop")
     return new
@@ -197,17 +290,22 @@ def paged_gather_kv(cache: Dict, block_table: jax.Array
 
     Positions past a sequence's length (and pages it never allocated)
     hold whatever the pool contains — callers mask with ``kv_len``.
+    Quantized pools come back dequantized to fp32 (payload × per-page
+    scale), so every densify consumer is dtype-oblivious.
     """
     pk, pv = cache["pages_k"], cache["pages_v"]
     num_pages, ps, hkv, dh = pk.shape
     b, npg = block_table.shape
     tbl = jnp.maximum(block_table, 0)
 
-    def densify(pool):
+    def densify(pool, scales=None):
         g = pool[tbl]                                        # (B,npg,ps,h,d)
+        if scales is not None:
+            g = Q.dequantize(g, scales[tbl][:, :, None, :, None])
         return g.transpose(0, 3, 1, 2, 4).reshape(b, hkv, npg * ps, dh)
 
-    return densify(pk), densify(pv)
+    return (densify(pk, cache.get("scales_k")),
+            densify(pv, cache.get("scales_v")))
 
 
 def swa_windowed_decode_attention(q: jax.Array, cache: Dict,
@@ -241,8 +339,12 @@ def swa_windowed_decode_attention(q: jax.Array, cache: Dict,
                                jnp.minimum(logical, npg - 1), axis=1)
     ok = (logical < npg) & (phys >= 0)                       # (B,wpg)
     tbl = jnp.maximum(phys, 0)
-    kg = pk[tbl].transpose(0, 3, 1, 2, 4).reshape(b, hkv, wpg * ps, dh)
-    vg = pv[tbl].transpose(0, 3, 1, 2, 4).reshape(b, hkv, wpg * ps, dh)
+    kg, vg = pk[tbl], pv[tbl]                                # (B,wpg,ps,h,d)
+    if "scales_k" in cache:
+        kg = Q.dequantize(kg, cache["scales_k"][tbl][:, :, None, :, None])
+        vg = Q.dequantize(vg, cache["scales_v"][tbl][:, :, None, :, None])
+    kg = kg.transpose(0, 3, 1, 2, 4).reshape(b, hkv, wpg * ps, dh)
+    vg = vg.transpose(0, 3, 1, 2, 4).reshape(b, hkv, wpg * ps, dh)
     kpos = (logical[:, :, None] * ps
             + jnp.arange(ps)[None, None, :]).reshape(b, wpg * ps)
     mask = (jnp.repeat(ok, ps, axis=1)

@@ -185,7 +185,8 @@ class Scheduler:
     def __init__(self, *, num_pages: int, page_size: int, max_seqs: int,
                  max_pages_per_seq: int, max_prefill_batch: int = 4,
                  chunk_tokens: int = 0, prefix_cache: bool = False,
-                 key_conv: bool = False, swap=None):
+                 key_conv: bool = False, full_page_match: bool = False,
+                 swap=None):
         self.page_size = page_size
         self.max_seqs = max_seqs
         self.max_pages_per_seq = max_pages_per_seq
@@ -198,8 +199,13 @@ class Scheduler:
         self.chunk_tokens = chunk_tokens
         # key-conv configs restore ring-buffer state from per-page raw-key
         # tails, which only exist for fully written pages — their prefix
-        # matches are rounded down to whole pages (full_only)
+        # matches are rounded down to whole pages (full_only).  Quantized
+        # pools (``full_page_match``) share the constraint for a
+        # different reason: writing a suffix into a COW'd partial page
+        # requantizes its shared tokens against a new scale, so only
+        # fully written pages are bit-exact to share.
         self.key_conv = key_conv
+        self.full_page_match = key_conv or full_page_match
         self.tree = PrefixTree(page_size) if prefix_cache else None
         self.swap = swap                # engine.HostSwapStore or None
         self.alloc = PagePool(num_pages)
@@ -275,7 +281,7 @@ class Scheduler:
             return 0
         return self.tree.match_len(req.context,
                                    max_tokens=self._match_cap(req),
-                                   full_only=self.key_conv)
+                                   full_only=self.full_page_match)
 
     # ------------------------------------------------------------ helpers
     def _pages_for(self, n_tokens: int) -> int:
@@ -283,10 +289,11 @@ class Scheduler:
 
     def _match_cap(self, req: Request) -> int:
         """At least one context token must always be prefilled (its
-        logits emit the next token), and key-conv matches stop at whole
-        pages (ring state restores from page-end tails)."""
+        logits emit the next token), and key-conv / quantized-pool
+        matches stop at whole pages (ring state restores from page-end
+        tails; partial-page sharing would requantize shared tokens)."""
         cap = len(req.context) - 1
-        if self.key_conv:
+        if self.full_page_match:
             cap -= cap % self.page_size
         return cap
 
@@ -410,7 +417,7 @@ class Scheduler:
         if self.tree is not None and not swapped:
             matched_pages, matched = self.tree.match(
                 req.context, max_tokens=self._match_cap(req),
-                full_only=self.key_conv)
+                full_only=self.full_page_match)
         n_full = matched // self.page_size
         full_pages = matched_pages[:n_full]
         partial_src = (matched_pages[n_full]

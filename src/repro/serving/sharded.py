@@ -41,6 +41,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ShardingConfig
+from repro.core import quantization as Q
 from repro.distributed import sharding as shmod
 from repro.launch import steps as S
 from repro.models import transformer as T
@@ -114,7 +115,12 @@ class ShardedEngine:
         self.n_shards = ns = mesh.shape["data"]
         # same admission query as Engine, additionally demanding the
         # backend's per-shard math is mesh-free (Capabilities.sharded)
-        admission_capability_check(cfg, self.attn_backend, sharded=True)
+        if ecfg.kv_dtype not in Q.KV_DTYPES:
+            raise ServingError(
+                f"unknown kv_dtype {ecfg.kv_dtype!r}; expected one of "
+                f"{Q.KV_DTYPES}")
+        admission_capability_check(cfg, self.attn_backend, sharded=True,
+                                   kv_dtype=ecfg.kv_dtype)
         self.page_size, self.pages_per_seq, self.num_pages = \
             resolve_pool_sizes(cfg, ecfg)
         self.params = jax.device_put(params, NamedSharding(mesh, P()))
@@ -129,7 +135,8 @@ class ShardedEngine:
         base = T.init_paged_caches(cfg, self.num_pages, self.page_size,
                                    dtype=jnp.dtype(cfg.dtype),
                                    max_seqs=ecfg.max_seqs,
-                                   prefix_tails=ecfg.prefix_cache and conv)
+                                   prefix_tails=ecfg.prefix_cache and conv,
+                                   kv_dtype=ecfg.kv_dtype)
         self.caches = PC.shard_pools(base, mesh, ns)
         # one swap store per shard: its byte cap and ``used`` accounting
         # pair with that shard's scheduler, and saves/restores slice the
@@ -143,6 +150,7 @@ class ShardedEngine:
             max_prefill_batch=ecfg.max_prefill_batch,
             chunk_tokens=ecfg.prefill_chunk,
             prefix_cache=ecfg.prefix_cache, key_conv=conv,
+            full_page_match=ecfg.kv_dtype != "fp32",
             swap=self.swap_stores[s]) for s in range(ns)]
         self.router = Router(self.scheds)
         self._chunk_aware = bool(ecfg.prefill_chunk or ecfg.prefix_cache

@@ -541,6 +541,38 @@ def test_engine_config_legacy_moba_impl_alias():
     assert Engine(cfg, params, EngineConfig()).attn_backend == "reference"
 
 
+def test_quantized_kv_gated_at_admission():
+    """kv_dtype is a declared capability, not a runtime surprise: a
+    backend that never quantizes (reference, sp) rejects int8/fp8 pools
+    as a structured UnsupportedFeatureError at admission — before any
+    cache is allocated or trace attempted — mirroring the key-conv
+    gating above."""
+    cfg = get_smoke_config("moba-340m")
+    params = T.init_lm(jax.random.PRNGKey(0), cfg)
+    for kv_dtype in ("int8", "fp8"):
+        with pytest.raises(UnsupportedFeatureError) as ei:
+            Engine(cfg, params, EngineConfig(attn_backend="reference",
+                                             kv_dtype=kv_dtype))
+        assert ei.value.feature == "attn_backend"
+        assert isinstance(ei.value, ServingError)
+    # the registry query underneath names the rejection the same way
+    with pytest.raises(B.BackendCapabilityError, match="kv_dtype"):
+        B.resolve("reference", kind="moba", phase="decode", cache="paged",
+                  kv_dtype="int8")
+    # quantization-capable backends admit and serve
+    for name in PAGED_BACKENDS:
+        assert B.resolve(name, kind="moba", phase="decode", cache="paged",
+                         kv_dtype="int8").name == name
+        assert "int8" in B.get(name).capabilities.kv_dtypes
+        assert "fp8" in B.get(name).capabilities.kv_dtypes
+    # a typo'd dtype is a config error, not a capability mismatch
+    with pytest.raises(ServingError, match="kv_dtype"):
+        Engine(cfg, params, EngineConfig(attn_backend="xla",
+                                         kv_dtype="int4"))
+    # and the generated capability matrix documents the new column
+    assert "kv_dtypes" in B.capability_matrix()
+
+
 def test_capability_query_key_conv():
     assert B.resolve("xla", kind="moba", phase="prefill",
                      key_conv=True).name == "xla"

@@ -157,17 +157,30 @@ def _serve(cfg, params, prompts, gen=8, **ekw):
 
 
 @pytest.mark.parametrize("prefix_len", [96, 101])
-def test_prefix_cache_tokens_exact(prefix_len):
+@pytest.mark.parametrize("kv_dtype", ["fp32", "int8"])
+def test_prefix_cache_tokens_exact(prefix_len, kv_dtype):
     """Acceptance: greedy tokens identical with the cache on vs off, for
-    page-aligned (96 = 6×16) and misaligned (101 → COW) share points."""
+    page-aligned (96 = 6×16) and misaligned (101 → COW) share points.
+
+    The kv_dtype axis runs the same cases on a quantized pool (via the
+    xla backend — reference is fp32-only): shared pages hit the radix
+    tree token-exactly at full-page granularity.  Quantized pools never
+    share a partial page (writing a suffix into a COW'd tail would
+    requantize its shared tokens against a new scale, breaking
+    bit-exactness) — like key-conv they match whole pages only, so the
+    misaligned case sees zero COW copies instead of four."""
     cfg, params, prompts = _fixture(prefix_len=prefix_len)
-    off, _ = _serve(cfg, params, prompts)
-    on, eng = _serve(cfg, params, prompts, prefix_cache=True)
+    kw = ({} if kv_dtype == "fp32"
+          else {"attn_backend": "xla", "kv_dtype": kv_dtype})
+    off, _ = _serve(cfg, params, prompts, **kw)
+    on, eng = _serve(cfg, params, prompts, prefix_cache=True, **kw)
     assert on == off
     st = eng.stats
     assert st["prefix_hits"] == 4       # all but the first admission wave
     assert st["prefix_hit_tokens"] >= 4 * (prefix_len // 16) * 16
-    assert st["cow_copies"] == (0 if prefix_len % 16 == 0 else 4)
+    misaligned = prefix_len % 16 != 0
+    assert st["cow_copies"] == (
+        4 if misaligned and kv_dtype == "fp32" else 0)
 
 
 def test_prefix_cache_pages_physically_shared():
@@ -248,18 +261,29 @@ def test_prefix_cache_key_conv_width_guard():
                                          prefix_cache=True))
 
 
-def test_swap_preemption_replay_exact():
+@pytest.mark.parametrize("kv_dtype", ["fp32", "int8"])
+def test_swap_preemption_replay_exact(kv_dtype):
     """An undersized pool forces preemption mid-stream; victim pages
-    swap to host memory and restore on re-admission — tokens exact, no
-    recompute."""
+    swap to host memory and restore on re-admission — tokens exact vs a
+    fully-provisioned engine that never preempts.  On the quantized
+    axis this only holds because the swap store round-trips payload and
+    scales together (``PAGE_LEAVES``) bit-identically: a recompute
+    replay would requantize the victim's pages and drift (which is why
+    the recompute-equivalence leg below is fp32-only)."""
     cfg, params, prompts = _fixture()
-    off, _ = _serve(cfg, params, prompts, gen=12, max_seqs=4,
-                    num_pages=24, swap_bytes=0)
+    kw = ({} if kv_dtype == "fp32"
+          else {"attn_backend": "xla", "kv_dtype": kv_dtype})
+    oracle, _ = _serve(cfg, params, prompts, gen=12, max_seqs=4, **kw)
     on, eng = _serve(cfg, params, prompts, gen=12, max_seqs=4,
-                     num_pages=24, prefix_cache=True)
-    assert on == off
+                     num_pages=24, prefix_cache=True, **kw)
+    assert on == oracle
     assert eng.stats["swap_saves"] > 0
     assert eng.stats["swap_restores"] == eng.stats["swap_saves"]
+    if kv_dtype == "fp32":
+        # fp32 recompute-replay is bit-equivalent to swap restore
+        off, _ = _serve(cfg, params, prompts, gen=12, max_seqs=4,
+                        num_pages=24, swap_bytes=0, **kw)
+        assert off == oracle
 
 
 def test_swap_budget_capped_falls_back_to_recompute():

@@ -127,3 +127,71 @@ def test_key_conv_shift_equivariance(width, seed):
     np.testing.assert_allclose(np.asarray(out_shift[:, :, 4 + width:]),
                                np.asarray(out[:, :, width:-4]),
                                rtol=1e-4, atol=1e-5)
+
+
+# ------------------------------------------------ quantized page pools
+@given(kv_dtype=st.sampled_from(["int8", "fp8"]),
+       scale_exp=st.integers(-30, 20), ps=st.sampled_from([1, 4, 12, 16]),
+       zero=st.booleans(), seed=st.integers(0, 100))
+@settings(**SETTINGS)
+def test_quantize_roundtrip_error_bound(kv_dtype, scale_exp, ps, zero,
+                                        seed):
+    """dequant(quant(x)) stays within the dtype's rounding bound for
+    magnitudes from subnormal-scale to 2^20, single-token pages, and
+    the all-zero page (which must round-trip exactly via scale 1.0)."""
+    from repro.core import quantization as Q
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(3, ps, 2, 4)) * 2.0 ** scale_exp
+    if zero:
+        x[:] = 0.0
+    x = jnp.asarray(x, jnp.float32)
+    scale = Q.compute_scale(x, (1, 3), kv_dtype)
+    s4 = scale[:, None, :, None]
+    back = np.asarray(Q.dequantize(Q.quantize(x, s4, kv_dtype), s4))
+    if zero:
+        assert (np.asarray(scale) == 1.0).all()
+        assert (back == 0.0).all()
+        return
+    err = np.abs(back - np.asarray(x))
+    s = np.asarray(s4)
+    if kv_dtype == "int8":
+        bound = s * (0.5 + 1e-6)
+    else:  # e4m3: half-ulp relative + subnormal absolute floor
+        bound = np.abs(np.asarray(x)) * 2.0 ** -4 + s * 2.0 ** -10
+    assert (err <= bound + np.abs(np.asarray(x)) * 1e-6).all()
+
+
+@given(kv_dtype=st.sampled_from(["int8", "fp8"]),
+       ps=st.sampled_from([3, 7, 12, 16]), n_tok=st.integers(1, 24),
+       seed=st.integers(0, 50))
+@settings(max_examples=12, deadline=None,
+          suppress_health_check=[hypothesis.HealthCheck.too_slow])
+def test_quantized_prefill_roundtrip_any_geometry(kv_dtype, ps, n_tok,
+                                                  seed):
+    """One-shot prefill into a quantized pool, then densify: within the
+    dtype's per-page bound of the fp32 pool for any page_size (incl.
+    ps % sublane != 0) and any ragged length (incl. single tokens)."""
+    from repro.serving import paged_cache as PC
+    from repro.configs import get_smoke_config
+    cfg = get_smoke_config("moba-340m")
+    hkv, d = cfg.num_kv_heads, cfg.resolved_head_dim
+    npg = -(-n_tok // ps)
+    rng = np.random.default_rng(seed)
+    kc = jnp.asarray(rng.normal(size=(1, hkv, npg * ps, d)), jnp.float32)
+    vc = jnp.asarray(rng.normal(size=(1, hkv, npg * ps, d)), jnp.float32)
+    table = jnp.asarray(np.arange(npg, dtype=np.int32)[None])
+    kv_lens = jnp.asarray([n_tok], jnp.int32)
+
+    def densified(kv_dt):
+        pool = PC.init_page_pool(cfg, npg, ps, with_centroids=True,
+                                 dtype=jnp.float32, kv_dtype=kv_dt)
+        pool = PC.paged_append_prefill(pool, table, kv_lens, kc, vc)
+        kf, vf = PC.paged_gather_kv(pool, table)
+        return np.asarray(kf)[:, :, :n_tok], np.asarray(vf)[:, :, :n_tok]
+
+    k0, v0 = densified("fp32")
+    k1, v1 = densified(kv_dtype)
+    tol = {"int8": 5e-2, "fp8": 2e-1}[kv_dtype]
+    rel = max(np.abs(k0).max(), np.abs(v0).max())
+    assert np.abs(k1 - k0).max() <= tol * rel
+    assert np.abs(v1 - v0).max() <= tol * rel
