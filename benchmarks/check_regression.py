@@ -28,6 +28,14 @@ Checked per matched case with a ``metrics`` dict (the serve schema):
   * ``speedup`` (prefix-cache on vs off, a within-run ratio, so
     machine-independent in sign) must stay strictly above 1.0.
 
+Checked per fresh case carrying the adaptive-routing metrics (the
+``table34_adaptive`` schema), within-run and snapshot-free like the
+accuracy ceilings: ``accuracy_adaptive`` must stay within
+``ADAPTIVE_ACC_MARGIN`` (1 point) of ``accuracy_static``, and
+``bytes_ratio`` (adaptive/static selected-page HBM traffic) must stay
+at or under ``ADAPTIVE_BYTES_CEILING`` — the ISSUE's >= 20% reduction
+target on the planted-signal config.
+
 ``wall_us`` and ``tokens_per_s`` are deliberately ignored across
 machines: interpret-mode wall time is not TPU-meaningful (they stay
 informational in the JSON artifacts).
@@ -46,6 +54,11 @@ RATE_KEYS = ("prefix_hit_rate", "prefill_tokens_saved")
 # absolute per-dtype ceilings on max_abs_diff_vs_xla (decode schema);
 # keep in sync with benchmarks.decode_micro.AGREE_TOL
 DIFF_CEILINGS = {"fp32": 1e-3, "int8": 5e-2, "fp8": 2e-1}
+# adaptive routing (table34_adaptive schema): accuracy may trail static
+# by at most 1 point; adaptive/static byte ratio must show the >= 20%
+# selected-page reduction the snapshot was accepted with
+ADAPTIVE_ACC_MARGIN = 0.01
+ADAPTIVE_BYTES_CEILING = 0.80
 
 
 def _index(report):
@@ -80,6 +93,21 @@ def compare(baseline: dict, new: dict, tol: float):
                         f"{diff:.3e} exceeds the "
                         f"{case.get('kv_dtype', 'fp32')} accuracy "
                         f"ceiling {ceiling:.0e}")
+        m = case.get("metrics", {})
+        if "accuracy_adaptive" in m and "accuracy_static" in m:
+            floor = m["accuracy_static"] - ADAPTIVE_ACC_MARGIN
+            if m["accuracy_adaptive"] < floor - 1e-9:
+                problems.append(
+                    f"{name}: accuracy_adaptive "
+                    f"{m['accuracy_adaptive']:.3f} below static "
+                    f"{m['accuracy_static']:.3f} by more than "
+                    f"{ADAPTIVE_ACC_MARGIN:.2f}")
+        if "bytes_ratio" in m and m["bytes_ratio"] > ADAPTIVE_BYTES_CEILING:
+            problems.append(
+                f"{name}: adaptive/static bytes_ratio "
+                f"{m['bytes_ratio']:.3f} exceeds the "
+                f"{ADAPTIVE_BYTES_CEILING:.2f} ceiling (>= 20% "
+                f"selected-page reduction required)")
         base = base_cases.get(name)
         if base is None:
             continue

@@ -6,9 +6,22 @@ accuracy on planted needle batches across context lengths and block sizes,
 with and without key convolution (kconv raises Δμ_eff via clustering, so
 its effect is visible at the router level without 100B-token training).
 Keys here are embeddings of a planted-signal process (App. A model).
+
+``main`` (the CLI) runs the **adaptive-routing harness** on top of the
+same planted-signal generator: a heterogeneous multi-head workload where
+half the query heads carry a strong clustered needle signal and half are
+diffuse noise heads.  It calibrates per-head SNR through the real
+capture hook (`core.adaptive`), inverts the App. A.4 bound into per-head
+budgets, and measures needle accuracy + selected-page HBM traffic for
+static vs adaptive routing.  ``--json`` emits the ``BENCH_adaptive.json``
+schema gated by ``check_regression.py``; ``--route-policy snr:pfail=P``
+narrows the sweep to one failure budget (the CI adaptive leg).
 """
 from __future__ import annotations
 
+import argparse
+import json
+import sys
 import time
 
 import jax
@@ -16,6 +29,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import MoBAConfig
+from repro.core import adaptive as AD
 from repro.core import moba as M
 from repro.core.key_conv import apply_key_conv, init_key_conv
 
@@ -79,5 +93,199 @@ def bench():
              f"B64@4k={small_b:.2f};B256@4k={big_b:.2f}")]
 
 
+# ------------------------------------------------- adaptive harness
+# One planted-signal config (paper App. A constants): d=64, B=32 blocks
+# of a 2048-token context, k_max=8.  Strong heads (g == 0) carry an
+# m=8-token needle cluster at mu_c=0.75 toward the head's query
+# direction — Δμ_eff ≈ m·mu_c/B·sqrt(B·d) ≈ 8.5σ, far above the
+# pfail=0.01 budget for one score slot — while weak heads (g == 1) see
+# pure noise (max-of-63 ≈ 2.9σ, below every bound) and keep k_max.
+SCHEMA_VERSION = 1
+AD_D = 64
+AD_BS = 32
+AD_NB = 64                      # context = AD_NB * AD_BS = 2048 tokens
+AD_KMAX = 8
+AD_HKV = 2
+AD_GROUPS = 2                   # H = 4 query heads; g == 0 strong
+AD_BATCH = 4                    # sequences per decode step
+AD_M_CLUSTER = 8
+AD_MU_C = 0.75
+AD_CALIB_STEPS = 2              # identical in smoke and full runs
+AD_EVAL_STEPS = 6
+AD_SMOKE_EVAL_STEPS = 2
+# fp32 K + V page reads per selected block
+AD_PAGE_BYTES = AD_BS * AD_D * 2 * 4
+
+
+def _adaptive_batch(rng, n):
+    """One heterogeneous planted batch for the adaptive harness.
+
+    Returns q (B, H, 1, d), keys (B, Hkv, n, d), needle block (B, Hkv).
+    Keys are unit rows; per (seq, kv head) an AD_M_CLUSTER-token needle
+    is planted at a random non-final block along a direction u.  Strong
+    query heads (g == 0) ask u; weak heads ask an independent random
+    direction.
+    """
+    d, bs = AD_D, AD_BS
+    nb = n // bs
+    keys = rng.standard_normal((AD_BATCH, AD_HKV, n, d))
+    keys /= np.linalg.norm(keys, axis=-1, keepdims=True)
+    u = rng.standard_normal((AD_BATCH, AD_HKV, d))
+    u /= np.linalg.norm(u, axis=-1, keepdims=True)
+    pos = rng.integers(0, nb - 1, (AD_BATCH, AD_HKV))
+    for b in range(AD_BATCH):
+        for h in range(AD_HKV):
+            t0 = int(pos[b, h]) * bs
+            for i in range(AD_M_CLUSTER):
+                v = keys[b, h, t0 + i]
+                v = v - (v @ u[b, h]) * u[b, h]
+                v /= np.linalg.norm(v)
+                keys[b, h, t0 + i] = (AD_MU_C * u[b, h]
+                                      + np.sqrt(1 - AD_MU_C ** 2) * v)
+    q = rng.standard_normal((AD_BATCH, AD_HKV, AD_GROUPS, d))
+    q /= np.linalg.norm(q, axis=-1, keepdims=True)
+    q[:, :, 0] = u                             # strong retrieval heads
+    q = q.reshape(AD_BATCH, AD_HKV * AD_GROUPS, 1, d)
+    return (jnp.asarray(q, jnp.float32),
+            jnp.asarray(keys, jnp.float32), pos)
+
+
+def _calibrate_heads(cfg, n, pfail, seed):
+    """Measured (Hkv, G) SNR + per-head budgets via the real capture
+    hook — the same estimator `calibrate_profile` runs inside a model."""
+    rng = np.random.default_rng(seed)
+    qpos = jnp.array([n - 1])
+    snrs = []
+    for _ in range(AD_CALIB_STEPS):
+        q, keys, _ = _adaptive_batch(rng, n)
+        with AD.capture_routing_scores() as caps:
+            M.moba_selection(q, keys, cfg, q_positions=qpos)
+        scores, qp = caps[0]
+        snrs.append(AD.estimate_head_snr(np.asarray(scores),
+                                         np.asarray(qp), AD_BS))
+    snr_hat = np.mean(snrs, axis=0)
+    head_top_k = AD.choose_top_k(snr_hat, n // AD_BS, cfg.top_k, pfail)
+    return snr_hat, head_top_k
+
+
+def run_adaptive_case(pfail: float, smoke: bool = False) -> dict:
+    """Calibrate, then measure static vs adaptive routing on fresh
+    planted batches: strong-head needle accuracy + selected-page HBM
+    traffic per decode step (analytic fp32 K/V page reads)."""
+    n = AD_NB * AD_BS
+    nb = AD_NB
+    cfg = MoBAConfig(block_size=AD_BS, top_k=AD_KMAX)
+    snr_hat, head_top_k = _calibrate_heads(cfg, n, pfail, seed=0)
+    htk = jnp.asarray(head_top_k, jnp.int32)
+
+    steps = AD_SMOKE_EVAL_STEPS if smoke else AD_EVAL_STEPS
+    rng = np.random.default_rng(1000)
+    qpos = jnp.array([n - 1])
+    hits = {"static": 0, "adaptive": 0}
+    pages = {"static": 0, "adaptive": 0}
+    total = 0
+    for _ in range(steps):
+        q, keys, pos = _adaptive_batch(rng, n)
+        sels = {
+            "static": np.asarray(
+                M.moba_selection(q, keys, cfg, q_positions=qpos)),
+            "adaptive": np.asarray(
+                M.moba_selection(q, keys, cfg, q_positions=qpos,
+                                 head_top_k=htk)),
+        }
+        for path, sel in sels.items():
+            pages[path] += int((sel < nb).sum())
+            for hk in range(AD_HKV):        # strong heads: g == 0
+                h = hk * AD_GROUPS
+                hit = (sel[:, h, 0, :] == pos[:, hk, None]).any(-1)
+                hits[path] += int(hit.sum())
+        total += AD_BATCH * AD_HKV
+    acc = {p: hits[p] / total for p in hits}
+    page_step = {p: pages[p] / steps for p in pages}
+    bytes_step = {p: page_step[p] * AD_PAGE_BYTES for p in pages}
+    ratio = bytes_step["adaptive"] / bytes_step["static"]
+    agree = (acc["adaptive"] >= acc["static"] - 0.01 - 1e-9
+             and ratio <= 0.80)
+    return {
+        "name": f"niah_adaptive_pf{pfail}_b{AD_BS}_nb{AD_NB}",
+        "pfail": pfail,
+        "block_size": AD_BS, "num_blocks": AD_NB, "d": AD_D,
+        "k_max": AD_KMAX, "heads": AD_HKV * AD_GROUPS,
+        "eval_steps": steps, "needle_trials": total,
+        "snr_hat": np.round(snr_hat, 3).tolist(),
+        "head_top_k": head_top_k.tolist(),
+        "paths": {
+            p: {"hbm_bytes": bytes_step[p],
+                "pages_selected": page_step[p],
+                "accuracy": acc[p]} for p in ("static", "adaptive")
+        },
+        "metrics": {
+            "accuracy_static": acc["static"],
+            "accuracy_adaptive": acc["adaptive"],
+            "bytes_ratio": ratio,
+        },
+        "agree": agree,
+    }
+
+
+def _adaptive_report(cases):
+    return {
+        "benchmark": "table34_adaptive",
+        "schema_version": SCHEMA_VERSION,
+        "dtype": "float32",
+        "jax_version": jax.__version__,
+        "device": jax.default_backend(),
+        "agree": all(c["agree"] for c in cases),
+        "cases": cases,
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--route-policy", default=None,
+                    help='"snr:pfail=P" narrows the sweep to one '
+                         "failure budget (default: 0.01 and 0.05)")
+    ap.add_argument("--json", metavar="OUT",
+                    help="write the machine-readable report here "
+                         "(the BENCH_adaptive.json schema)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="fewer eval steps (the CI adaptive leg); "
+                         "calibration and budgets are identical")
+    ap.add_argument("--router-table", action="store_true",
+                    help="print the original Tables 3/4 router-accuracy "
+                         "sweep instead of the adaptive harness")
+    args = ap.parse_args(argv)
+    if args.router_table:
+        run()
+        return 0
+    pfails = (0.01, 0.05)
+    if args.route_policy:
+        mode, arg = AD.parse_route_policy(args.route_policy)
+        if mode != "snr":
+            ap.error(f"the adaptive harness needs an snr policy, got "
+                     f"{args.route_policy!r}")
+        pfails = (arg,)
+    cases = [run_adaptive_case(pf, smoke=args.smoke) for pf in pfails]
+    report = _adaptive_report(cases)
+    if args.json:
+        with open(args.json, "w", encoding="utf-8") as f:
+            json.dump(report, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {args.json}", file=sys.stderr)
+    print(f"{'case':<34}{'acc_s':>7}{'acc_a':>7}{'bytes_x':>9}"
+          f"{'budgets':>14}")
+    for c in cases:
+        m = c["metrics"]
+        flat = [k for row in c["head_top_k"] for k in row]
+        print(f"{c['name']:<34}{m['accuracy_static']:>7.2f}"
+              f"{m['accuracy_adaptive']:>7.2f}"
+              f"{m['bytes_ratio']:>9.3f}{str(flat):>14}")
+    if not report["agree"]:
+        print("FAIL: adaptive routing lost accuracy or missed the "
+              "byte-reduction target", file=sys.stderr)
+        return 1
+    return 0
+
+
 if __name__ == "__main__":
-    run()
+    raise SystemExit(main())

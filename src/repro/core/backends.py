@@ -84,7 +84,13 @@ class Capabilities:
     ``int8``/``fp8`` pools carry per-page scale leaves the backend must
     dequantize with.  Default is fp32-only — quantized support is an
     explicit opt-in so an unvalidated backend fails at admission, not
-    with silently-garbage attention output."""
+    with silently-garbage attention output.
+
+    ``adaptive_topk`` declares that the backend's paged MoBA paths honor
+    per-(layer, head) ``head_top_k`` budgets (SNR-guided adaptive
+    routing, DESIGN.md §8).  ``sp``/``sp_unrolled`` run the dense-cache
+    context-parallel fallback whose distributed selection has no
+    per-head budget plumbing — they stay static."""
 
     kinds: Tuple[str, ...] = KINDS
     phases: Tuple[str, ...] = PHASES
@@ -92,15 +98,17 @@ class Capabilities:
     key_conv: Tuple[str, ...] = CACHES
     sharded: bool = True
     kv_dtypes: Tuple[str, ...] = ("fp32",)
+    adaptive_topk: bool = True
 
     def supports(self, kind: str, phase: str, cache: str = "dense",
                  key_conv: bool = False, sharded: bool = False,
-                 kv_dtype: str = "fp32") -> bool:
+                 kv_dtype: str = "fp32", adaptive: bool = False) -> bool:
         return (kind in self.kinds and phase in self.phases
                 and cache in self.caches
                 and (not key_conv or cache in self.key_conv)
                 and (not sharded or self.sharded)
-                and kv_dtype in self.kv_dtypes)
+                and kv_dtype in self.kv_dtypes
+                and (not adaptive or self.adaptive_topk))
 
 
 class AttentionBackend:
@@ -160,7 +168,8 @@ class AttentionBackend:
         if kind == "moba":
             return moba_attention_reference(
                 q, k, v, cfg.moba, q_positions=positions,
-                kv_len=post_len[:, None, None, None], scale=cfg.scale)
+                kv_len=post_len[:, None, None, None], scale=cfg.scale,
+                head_top_k=opts.get("head_top_k"))
         from repro.core.attention import dense_attention
         return dense_attention(q, k, v, causal=True, q_positions=positions,
                                kv_len=post_len,
@@ -186,7 +195,8 @@ class AttentionBackend:
                 q, cache["pages_k"], cache["pages_v"], cache["centroids"],
                 block_table, kv_len, q_len, cfg.moba, scale=cfg.scale,
                 scales_k=cache.get("scales_k"),
-                scales_v=cache.get("scales_v"))
+                scales_v=cache.get("scales_v"),
+                head_top_k=opts.get("head_top_k"))
         kf, vf = PC.paged_gather_kv(cache, block_table)
         from repro.core.attention import dense_attention
         return dense_attention(q, kf, vf, causal=True,
@@ -233,7 +243,8 @@ class AttentionBackend:
         return moba_paged_decode_attention(
             q, cache["pages_k"], cache["pages_v"], cache["centroids"],
             block_table, kv_len, cfg.moba, scale=cfg.scale,
-            scales_k=cache.get("scales_k"), scales_v=cache.get("scales_v"))
+            scales_k=cache.get("scales_k"), scales_v=cache.get("scales_v"),
+            head_top_k=opts.get("head_top_k"))
 
 
 # ---------------------------------------------------------------- backends
@@ -319,7 +330,8 @@ class FlashBackend(AttentionBackend):
             block_table, kv_len, cfg.moba, scale=cfg.scale,
             interpret=self._interpret(opts),
             grid=opts.get("grid", self.decode_grid),
-            scales_k=cache.get("scales_k"), scales_v=cache.get("scales_v"))
+            scales_k=cache.get("scales_k"), scales_v=cache.get("scales_v"),
+            head_top_k=opts.get("head_top_k"))
 
 
 class SPBackend(AttentionBackend):
@@ -331,7 +343,7 @@ class SPBackend(AttentionBackend):
 
     name = "sp"
     capabilities = Capabilities(caches=("dense",), key_conv=("dense",),
-                                sharded=False)
+                                sharded=False, adaptive_topk=False)
     use_scan = True
 
     def moba_prefill(self, cfg, q, k, v, *, q_positions=None, **opts):
@@ -469,22 +481,25 @@ def parse_backend_spec(spec: str) -> str:
 
 def resolve(name: str, *, kind: str, phase: str, cache: str = "dense",
             key_conv: bool = False, sharded: bool = False,
-            kv_dtype: str = "fp32") -> AttentionBackend:
+            kv_dtype: str = "fp32", adaptive: bool = False
+            ) -> AttentionBackend:
     """Name + capability query: the single entry point call sites use.
     ``sharded=True`` additionally demands mesh-free per-shard math (the
     sharded serving engine's admission query, DESIGN.md §7);
     ``kv_dtype`` of ``int8``/``fp8`` demands quantized-pool support
-    (per-page scale dequantization in every paged path)."""
+    (per-page scale dequantization in every paged path);
+    ``adaptive=True`` demands per-head ``head_top_k`` routing support
+    (SNR-guided adaptive routing, DESIGN.md §8)."""
     be = get(name)
     if not be.capabilities.supports(kind, phase, cache, key_conv, sharded,
-                                    kv_dtype):
+                                    kv_dtype, adaptive):
         able = [b.name for b in _REGISTRY.values()
                 if b.capabilities.supports(kind, phase, cache, key_conv,
-                                           sharded, kv_dtype)]
+                                           sharded, kv_dtype, adaptive)]
         raise BackendCapabilityError(
             f"backend {be.name!r} does not support kind={kind!r} "
             f"phase={phase!r} cache={cache!r} key_conv={key_conv} "
-            f"sharded={sharded} kv_dtype={kv_dtype!r}; "
+            f"sharded={sharded} kv_dtype={kv_dtype!r} adaptive={adaptive}; "
             f"backends that do: {able}")
     return be
 
@@ -499,13 +514,14 @@ def capability_matrix() -> str:
     """Human-readable support table (also the CI registry-drift check)."""
     lines = [f"{'backend':<14}{'aliases':<22}{'kinds':<18}"
              f"{'phases':<18}{'caches':<14}{'key_conv':<14}"
-             f"{'sharded':<10}kv_dtypes"]
+             f"{'sharded':<10}{'adaptive':<10}kv_dtypes"]
     for be in _REGISTRY.values():
         c = be.capabilities
         lines.append(f"{be.name:<14}{','.join(be.aliases) or '-':<22}"
                      f"{','.join(c.kinds):<18}{','.join(c.phases):<18}"
                      f"{','.join(c.caches):<14}{','.join(c.key_conv):<14}"
                      f"{'yes' if c.sharded else '-':<10}"
+                     f"{'yes' if c.adaptive_topk else '-':<10}"
                      f"{','.join(c.kv_dtypes)}")
     return "\n".join(lines)
 

@@ -22,6 +22,12 @@ from repro.core.key_conv import apply_key_conv
 
 NEG_INF = routing.NEG_INF
 
+# Calibration hook (core.adaptive.capture_routing_scores): when set to a
+# callable, moba_selection feeds it (scores, q_positions) per call.  Only
+# meaningful for eager (unjitted) passes — under jit the hook would see
+# tracers, so the calibration pass always runs eagerly.
+_score_sink = None
+
 
 def _group_queries(q: jax.Array, num_kv_heads: int) -> jax.Array:
     b, h, n, d = q.shape
@@ -29,11 +35,27 @@ def _group_queries(q: jax.Array, num_kv_heads: int) -> jax.Array:
     return q.reshape(b, num_kv_heads, g, n, d)
 
 
+def _truncate_head_topk(idx: jax.Array, sel_valid: jax.Array,
+                        head_top_k: Optional[jax.Array]):
+    """Truncate a score-sorted (B, Hkv, G, L, k) page selection to
+    per-head budgets.  ``head_top_k``: (Hkv, G) int32 in [1, k]; slots
+    ranked >= the head's budget become invalid.  Rank 0 is the forced
+    own page (POS_INF), so budgets >= 1 always keep it."""
+    if head_top_k is None:
+        return idx, sel_valid
+    keep = jnp.arange(idx.shape[-1]) < head_top_k[..., None, None]
+    sel_valid = sel_valid & keep                  # (Hkv,G,1,k) broadcast
+    return jnp.where(sel_valid, idx, 0), sel_valid
+
+
 def moba_selection(q: jax.Array, k: jax.Array, cfg: MoBAConfig,
-                   q_positions: Optional[jax.Array] = None) -> jax.Array:
+                   q_positions: Optional[jax.Array] = None,
+                   head_top_k: Optional[jax.Array] = None) -> jax.Array:
     """Routing only: returns selected block ids (B, H, Nq, top_k).
 
     ``k`` must already be key-conv'd if key conv is enabled.
+    ``head_top_k``: optional (Hkv, G) int32 per-head budgets in
+    [1, top_k]; truncated slots carry the sentinel block id.
     """
     b, hkv, n, d = k.shape
     nq = q.shape[2]
@@ -43,8 +65,11 @@ def moba_selection(q: jax.Array, k: jax.Array, cfg: MoBAConfig,
     qg = _group_queries(q, hkv)                              # (B,Hkv,G,Nq,d)
     scores = jnp.einsum("bhgqd,bhnd->bhgqn", qg.astype(jnp.float32),
                         cents.astype(jnp.float32))
+    if _score_sink is not None:
+        _score_sink((scores, q_positions))
     sel = routing.select_blocks(scores, cfg.top_k, cfg.block_size,
-                                q_positions, causal=cfg.causal)
+                                q_positions, causal=cfg.causal,
+                                head_top_k=head_top_k)
     return sel.reshape(b, -1, nq, cfg.top_k)
 
 
@@ -52,7 +77,9 @@ def moba_attention_reference(q: jax.Array, k: jax.Array, v: jax.Array,
                              cfg: MoBAConfig,
                              q_positions: Optional[jax.Array] = None,
                              kv_len: Optional[jax.Array] = None,
-                             scale: Optional[float] = None) -> jax.Array:
+                             scale: Optional[float] = None,
+                             head_top_k: Optional[jax.Array] = None
+                             ) -> jax.Array:
     """Oracle implementation: O(N^2) masked softmax attention where the
     mask is derived from MoBA block selection.
 
@@ -67,7 +94,8 @@ def moba_attention_reference(q: jax.Array, k: jax.Array, v: jax.Array,
     if scale is None:
         scale = 1.0 / (d ** 0.5)
 
-    sel = moba_selection(q, k, cfg, q_positions)             # (B,H,Nq,k)
+    sel = moba_selection(q, k, cfg, q_positions,
+                         head_top_k=head_top_k)              # (B,H,Nq,k)
     sel_mask = routing.selection_mask(sel, nb)               # (B,H,Nq,nb)
     key_block = jnp.arange(n) // cfg.block_size              # (N,)
     tok_sel = jnp.take_along_axis(
@@ -151,7 +179,8 @@ def _topk_pages(masked: jax.Array, top_k: int):
 def moba_paged_route(q: jax.Array, centroids: jax.Array,
                      block_table: jax.Array, kv_len: jax.Array,
                      cfg: MoBAConfig,
-                     page_size: Optional[int] = None):
+                     page_size: Optional[int] = None,
+                     head_top_k: Optional[jax.Array] = None):
     """Decode-time page routing on the per-page centroid cache.
 
     Shared by the XLA gather path and the Pallas decode kernel wrapper so
@@ -166,7 +195,9 @@ def moba_paged_route(q: jax.Array, centroids: jax.Array,
     kv_len:      (B,) int32 post-append valid lengths
 
     Returns (idx, sel_valid): logical page ids (B, Hkv, G, 1, top_k)
-    int32 (invalid slots 0) and their validity mask.
+    int32 (invalid slots 0) and their validity mask.  ``head_top_k``
+    ((Hkv, G) int32 in [1, top_k]) truncates each head's score-sorted
+    selection to its calibrated budget (DESIGN.md §8).
     """
     b, h, _, d = q.shape
     hkv = centroids.shape[1]
@@ -183,7 +214,8 @@ def moba_paged_route(q: jax.Array, centroids: jax.Array,
     is_own = jnp.arange(npg)[None, :] == own[:, None]        # (B,npg)
     masked = jnp.where(valid[:, None, None, None], scores, NEG_INF)
     masked = jnp.where(is_own[:, None, None, None], routing.POS_INF, masked)
-    return _topk_pages(masked, cfg.top_k)
+    idx, sel_valid = _topk_pages(masked, cfg.top_k)
+    return _truncate_head_topk(idx, sel_valid, head_top_k)
 
 
 def moba_paged_decode_attention(q: jax.Array, pages_k: jax.Array,
@@ -192,7 +224,8 @@ def moba_paged_decode_attention(q: jax.Array, pages_k: jax.Array,
                                 cfg: MoBAConfig,
                                 scale: Optional[float] = None,
                                 scales_k: Optional[jax.Array] = None,
-                                scales_v: Optional[jax.Array] = None
+                                scales_v: Optional[jax.Array] = None,
+                                head_top_k: Optional[jax.Array] = None
                                 ) -> jax.Array:
     """Single-step decode against a paged cache: route on the per-page
     centroid cache, then gather only the ``top_k`` selected pages through
@@ -215,7 +248,8 @@ def moba_paged_decode_attention(q: jax.Array, pages_k: jax.Array,
         scale = 1.0 / (d ** 0.5)
 
     idx, sel_valid = moba_paged_route(q, centroids, block_table, kv_len,
-                                      cfg, page_size=ps)
+                                      cfg, page_size=ps,
+                                      head_top_k=head_top_k)
     qg = _group_queries(q, hkv).astype(jnp.float32)          # (B,Hkv,G,1,d)
     tbl = jnp.maximum(block_table, 0)
     phys = tbl[jnp.arange(b)[:, None, None, None, None], idx]
@@ -253,7 +287,8 @@ def moba_paged_decode_attention(q: jax.Array, pages_k: jax.Array,
 def moba_paged_prefill_route(q: jax.Array, centroids: jax.Array,
                              block_table: jax.Array, kv_len: jax.Array,
                              q_len: jax.Array, cfg: MoBAConfig,
-                             page_size: Optional[int] = None):
+                             page_size: Optional[int] = None,
+                             head_top_k: Optional[jax.Array] = None):
     """Chunked-prefill page routing on the per-page centroid cache.
 
     Multi-token sibling of :func:`moba_paged_route`: query j of row i sits
@@ -291,6 +326,7 @@ def moba_paged_prefill_route(q: jax.Array, centroids: jax.Array,
     masked = jnp.where((future | ~assigned)[:, None, None], NEG_INF, scores)
     masked = jnp.where(is_own[:, None, None], routing.POS_INF, masked)
     idx, sel_valid = _topk_pages(masked, cfg.top_k)
+    idx, sel_valid = _truncate_head_topk(idx, sel_valid, head_top_k)
     # padded query rows (beyond q_len) select nothing
     row_valid = (jnp.arange(nq) < q_len[:, None])            # (B,L)
     sel_valid = sel_valid & row_valid[:, None, None, :, None]
@@ -303,7 +339,8 @@ def moba_paged_prefill_attention(q: jax.Array, pages_k: jax.Array,
                                  q_len: jax.Array, cfg: MoBAConfig,
                                  scale: Optional[float] = None,
                                  scales_k: Optional[jax.Array] = None,
-                                 scales_v: Optional[jax.Array] = None
+                                 scales_v: Optional[jax.Array] = None,
+                                 head_top_k: Optional[jax.Array] = None
                                  ) -> jax.Array:
     """Chunked-prefill MoBA attention against a paged cache.
 
@@ -329,7 +366,8 @@ def moba_paged_prefill_attention(q: jax.Array, pages_k: jax.Array,
 
     idx, sel_valid = moba_paged_prefill_route(q, centroids, block_table,
                                               kv_len, q_len, cfg,
-                                              page_size=ps)
+                                              page_size=ps,
+                                              head_top_k=head_top_k)
     sel_mask = routing.selection_mask(
         jnp.where(sel_valid, idx, npg), npg)                 # (B,Hkv,G,L,npg)
     pos = kv_len[:, None] + jnp.arange(nq)                   # (B,L) abs pos

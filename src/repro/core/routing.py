@@ -72,13 +72,21 @@ def routing_scores(q: jax.Array, centroids: jax.Array) -> jax.Array:
 
 
 def select_blocks(scores: jax.Array, top_k: int, block_size: int,
-                  q_positions: jax.Array, causal: bool = True) -> jax.Array:
+                  q_positions: jax.Array, causal: bool = True,
+                  head_top_k: jax.Array | None = None) -> jax.Array:
     """Top-k block selection with causal masking + forced current block.
 
     scores: (..., Nq, nb); q_positions: (Nq,) absolute token positions.
     Returns int32 (..., Nq, k) of selected block ids, sentinel ``nb`` for
     empty slots.  Current block (if causal) is forced via +inf so it always
     occupies a slot — faithful to MoBA's accounting.
+
+    ``head_top_k`` (optional int32, broadcastable against the leading
+    dims of ``scores``, values in [1, top_k]) truncates each head's
+    selection to its own budget: slots ranked >= head_top_k become
+    sentinels.  ``top_k`` output slots are score-sorted descending with
+    the own block forced first, so keeping the first ``head_top_k`` slots
+    is exactly per-head top-k at static shapes (DESIGN.md §8).
     """
     nb = scores.shape[-1]
     own = q_positions // block_size  # (Nq,)
@@ -98,6 +106,9 @@ def select_blocks(scores: jax.Array, top_k: int, block_size: int,
         pad = jnp.full(top_idx.shape[:-1] + (top_k - kk,), nb,
                        top_idx.dtype)
         top_idx = jnp.concatenate([top_idx, pad], axis=-1)
+    if head_top_k is not None:
+        keep = jnp.arange(top_k) < head_top_k[..., None, None]
+        top_idx = jnp.where(keep, top_idx, nb)
     return top_idx.astype(jnp.int32)
 
 

@@ -352,7 +352,8 @@ def moba_paged_decode_pallas(q: jax.Array, pages_k: jax.Array,
                              interpret: Optional[bool] = None,
                              grid: str = "grouped",
                              scales_k: Optional[jax.Array] = None,
-                             scales_v: Optional[jax.Array] = None
+                             scales_v: Optional[jax.Array] = None,
+                             head_top_k: Optional[jax.Array] = None
                              ) -> jax.Array:
     """Drop-in for `core.moba.moba_paged_decode_attention` (same contract):
 
@@ -384,8 +385,14 @@ def moba_paged_decode_pallas(q: jax.Array, pages_k: jax.Array,
     if not interpret and grid == "grouped":
         check_decode_tiling(ps, d, pages_k.dtype)
 
+    # Per-head budgets (`head_top_k`, adaptive routing) truncate the
+    # score-sorted selection inside the shared route: the flat grid sees
+    # truncated slots as sentinel pages (zero tiles), the grouped grid's
+    # union compaction shrinks n_uniq — real HBM-bytes savings with no
+    # kernel change (DESIGN.md §8).
     idx, sel_valid = moba_paged_route(q, centroids, block_table, kv_len,
-                                      cfg, page_size=ps)
+                                      cfg, page_size=ps,
+                                      head_top_k=head_top_k)
     impl = _decode_grouped if grid == "grouped" else _decode_flat
     return impl(q, pages_k, pages_v, block_table, kv_len, idx, sel_valid,
                 scale=scale, interpret=interpret,

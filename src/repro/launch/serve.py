@@ -43,7 +43,7 @@ def serve(arch: str, batch: int = 4, prompt_len: int = 64, gen: int = 32,
           seed: int = 0, use_engine: str = "auto",
           prefill_chunk: int = 0, shards: int = 0,
           prefix_cache: bool = False, swap_bytes: int = None,
-          kv_dtype: str = "fp32"):
+          kv_dtype: str = "fp32", route_policy: str = "static"):
     """Decode ``gen`` greedy tokens for ``batch`` random prompts.
 
     Routes through the paged continuous-batching engine when the arch
@@ -69,7 +69,7 @@ def serve(arch: str, batch: int = 4, prompt_len: int = 64, gen: int = 32,
         max_seqs=batch, max_seq_len=_round_up(prompt_len + gen, 16),
         max_prefill_batch=min(batch, 4), attn_backend=attn_backend,
         prefill_chunk=prefill_chunk, prefix_cache=prefix_cache,
-        kv_dtype=kv_dtype, **kw),
+        kv_dtype=kv_dtype, route_policy=route_policy, **kw),
         shards)
     reqs = [eng.submit(prompts[i], max_new_tokens=gen)
             for i in range(batch)]
@@ -91,7 +91,8 @@ def serve_stream(arch: str, n_requests: int = 16, rate: float = 8.0,
                  prefill_chunk: int = 0, shards: int = 0,
                  prefix_cache: bool = False,
                  swap_bytes: int = None,
-                 kv_dtype: str = "fp32") -> dict:
+                 kv_dtype: str = "fp32",
+                 route_policy: str = "static") -> dict:
     """Continuous-batching scenario: Poisson arrivals (``rate`` req/s),
     mixed prompt/generation lengths.  Reports tokens/s and p50/p99
     time-to-first-token + end-to-end latency (per shard too when
@@ -109,7 +110,8 @@ def serve_stream(arch: str, n_requests: int = 16, rate: float = 8.0,
     eng = _make_engine(cfg, params, EngineConfig(
         max_seqs=max_seqs, max_seq_len=max_len, num_pages=num_pages,
         attn_backend=attn_backend, prefill_chunk=prefill_chunk,
-        prefix_cache=prefix_cache, kv_dtype=kv_dtype, **kw), shards)
+        prefix_cache=prefix_cache, kv_dtype=kv_dtype,
+        route_policy=route_policy, **kw), shards)
     t = 0.0
     for _ in range(n_requests):
         t += rng.exponential(1.0 / rate)
@@ -259,6 +261,13 @@ def main():
                          "stay fp32.  Backends must declare the dtype in "
                          "Capabilities.kv_dtypes (reference/sp are "
                          "fp32-only)")
+    ap.add_argument("--route-policy", default="static",
+                    help="MoBA routing policy: 'static' (uniform top_k), "
+                         "'snr:pfail=P' (SNR-calibrated per-layer/per-"
+                         "head top_k targeting retrieval-failure budget "
+                         "P, e.g. snr:pfail=0.01), or 'profile:PATH' "
+                         "(load a saved routing-profile artifact) — "
+                         "core/adaptive.py, DESIGN.md §8")
     ap.add_argument("--shards", type=int, default=0,
                     help="page-pool shards over the mesh data axis "
                          "(0 = single-host engine); per-shard sizing "
@@ -300,7 +309,8 @@ def main():
                          shards=args.shards,
                          prefix_cache=args.prefix_cache,
                          swap_bytes=args.swap_bytes,
-                         kv_dtype=args.kv_dtype)
+                         kv_dtype=args.kv_dtype,
+                         route_policy=args.route_policy)
         else:
             serve(args.arch, batch=args.batch or 4,
                   prompt_len=args.prompt_len or 64, gen=args.gen or 32,
@@ -310,7 +320,8 @@ def main():
                   prefill_chunk=args.prefill_chunk, shards=args.shards,
                   prefix_cache=args.prefix_cache,
                   swap_bytes=args.swap_bytes,
-                  kv_dtype=args.kv_dtype)
+                  kv_dtype=args.kv_dtype,
+                  route_policy=args.route_policy)
     except ServingError as e:  # unsupported arch / impossible sizing;
         # genuine internal errors keep their tracebacks
         print(f"error: {e}", file=sys.stderr)

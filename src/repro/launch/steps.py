@@ -122,8 +122,18 @@ def make_decode_step(cfg: ModelConfig, backend: str = "reference",
     return decode_step
 
 
+def _as_route_map(route_map):
+    """Freeze a profile's ``{"slot_i": (n_groups, H)}`` head budgets into
+    int32 device constants.  Embedded in the step closures (not traced
+    arguments), they are jit/shard_map-replicated constants — every step
+    replays exactly the profile's routing decisions (DESIGN.md §8)."""
+    if route_map is None:
+        return None
+    return {k: jnp.asarray(v, jnp.int32) for k, v in route_map.items()}
+
+
 def make_paged_prefill_step(cfg: ModelConfig, backend: str = "reference",
-                            chunked: bool = False):
+                            chunked: bool = False, route_map=None):
     """Ragged prefill into a paged cache: tokens (B, L) right-padded with
     per-row valid length ``q_len``; rows with q_len == 0 are padding.
     ``kv_len`` gives each row's pre-step cache length (all zeros for
@@ -131,9 +141,11 @@ def make_paged_prefill_step(cfg: ModelConfig, backend: str = "reference",
     maps prefill rows to scheduler sequence slots (for the per-slot
     key-conv ring buffer; -1 on padding rows).  ``chunked=True``
     (static) selects the chunk-aware attention path that sees earlier
-    chunks through the block table.  Returns (sampled next token (B,) —
-    meaningful only for rows whose prompt is now fully cached, new
-    caches)."""
+    chunks through the block table.  ``route_map`` carries a calibrated
+    adaptive-routing profile's per-head top_k budgets (None = static).
+    Returns (sampled next token (B,) — meaningful only for rows whose
+    prompt is now fully cached, new caches)."""
+    rmap = _as_route_map(route_map)
 
     def prefill_step(params, tokens, caches, block_table, kv_len, q_len,
                      slots, active):
@@ -145,7 +157,8 @@ def make_paged_prefill_step(cfg: ModelConfig, backend: str = "reference",
         logits, new_caches = T.prefill(params, tokens, cfg, caches,
                                        backend=backend,
                                        page_state=page_state,
-                                       positions=positions)
+                                       positions=positions,
+                                       route_map=rmap)
         last = jnp.maximum(q_len - 1, 0)[:, None, None]      # (B,1,1)
         lg = jnp.take_along_axis(logits, last, axis=1)[:, 0]  # (B,V)
         return jnp.argmax(lg, axis=-1).astype(jnp.int32), new_caches
@@ -153,17 +166,21 @@ def make_paged_prefill_step(cfg: ModelConfig, backend: str = "reference",
     return prefill_step
 
 
-def make_paged_decode_step(cfg: ModelConfig, backend: str = "reference"):
+def make_paged_decode_step(cfg: ModelConfig, backend: str = "reference",
+                           route_map=None):
     """One continuous-batching decode step over all sequence slots:
     token (B,), per-slot pre-step lengths kv_len (B,), active mask (B,).
+    ``route_map`` as in :func:`make_paged_prefill_step`.
     Returns (next token (B,), new caches)."""
+    rmap = _as_route_map(route_map)
 
     def decode_step(params, token, caches, block_table, kv_len, active):
         page_state = {"block_table": block_table, "kv_len": kv_len,
                       "q_len": active.astype(jnp.int32), "active": active}
         logits, new_caches = T.decode_step(params, token[:, None], cfg,
                                            caches, backend=backend,
-                                           page_state=page_state)
+                                           page_state=page_state,
+                                           route_map=rmap)
         return (jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32),
                 new_caches)
 
@@ -196,20 +213,27 @@ def _shard_over_data(fn, mesh, n_host_args: int):
 
 def make_sharded_paged_prefill_step(cfg: ModelConfig, mesh,
                                     backend: str = "reference",
-                                    chunked: bool = False):
+                                    chunked: bool = False,
+                                    route_map=None):
     """Sharded :func:`make_paged_prefill_step`: every array argument
-    gains a leading shard dim (S, ...) laid out over ``data``."""
+    gains a leading shard dim (S, ...) laid out over ``data``.  The
+    adaptive ``route_map`` is a closure constant of the inner step, so
+    it is replicated across shards — every shard routes from the same
+    profile (shard-count invariance, pinned by test)."""
     return _shard_over_data(
-        make_paged_prefill_step(cfg, backend=backend, chunked=chunked),
+        make_paged_prefill_step(cfg, backend=backend, chunked=chunked,
+                                route_map=route_map),
         mesh, n_host_args=7)
 
 
 def make_sharded_paged_decode_step(cfg: ModelConfig, mesh,
-                                   backend: str = "reference"):
+                                   backend: str = "reference",
+                                   route_map=None):
     """Sharded :func:`make_paged_decode_step`: one jitted shard_map
     advances every shard's decode batch in a single dispatch."""
     return _shard_over_data(
-        make_paged_decode_step(cfg, backend=backend), mesh, n_host_args=5)
+        make_paged_decode_step(cfg, backend=backend, route_map=route_map),
+        mesh, n_host_args=5)
 
 
 # -------------------------------------------------------------- shardings

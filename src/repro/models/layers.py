@@ -126,7 +126,8 @@ def apply_attention(p: dict, x: jax.Array, cfg: ModelConfig, kind: str,
                     backend: str = "reference",
                     cross_kv: Optional[jax.Array] = None,
                     causal: bool = True,
-                    page_state: Optional[dict] = None
+                    page_state: Optional[dict] = None,
+                    head_top_k: Optional[jax.Array] = None
                     ) -> Tuple[jax.Array, Optional[dict]]:
     """Self (or cross) attention layer.  Returns (out, updated_cache).
 
@@ -140,6 +141,10 @@ def apply_attention(p: dict, x: jax.Array, cfg: ModelConfig, kind: str,
     ``pages_k`` leaf).  Paged caches additionally need ``page_state`` =
     {block_table (B,npg), kv_len (B,) pre-step lengths, q_len (B,) new
     tokens this step, active (B,) bool} from the scheduler.
+
+    ``head_top_k``: optional (H,) int32 per-query-head routing budgets
+    in [1, moba.top_k] from a calibrated routing profile (DESIGN.md §8).
+    Only the paged MoBA paths consume it; dense/swa/cross ignore it.
     """
     dt = x.dtype
     a = cfg.attention
@@ -177,7 +182,8 @@ def apply_attention(p: dict, x: jax.Array, cfg: ModelConfig, kind: str,
     new_cache = None
     if cache is not None and "pages_k" in cache and cross_kv is None:
         o, new_cache = _paged_attend(q, k, v, cache, page_state, cfg,
-                                     kind, positions, backend, conv_w)
+                                     kind, positions, backend, conv_w,
+                                     head_top_k=head_top_k)
         o = o.transpose(0, 2, 1, 3).reshape(b, n, h * dh)
         out = o @ wcast(p["wo"], dt)
         return out, new_cache
@@ -239,7 +245,7 @@ def apply_attention(p: dict, x: jax.Array, cfg: ModelConfig, kind: str,
 
 
 def _paged_attend(q, k, v, cache, page_state, cfg: ModelConfig, kind: str,
-                  positions, backend: str, conv_w=None):
+                  positions, backend: str, conv_w=None, head_top_k=None):
     """Paged-cache attention: append new K/V through the block table, then
     attend via the backend resolved for (kind, phase, paged).  MoBA decode
     routes on the per-page centroid cache and reads only the selected
@@ -272,6 +278,13 @@ def _paged_attend(q, k, v, cache, page_state, cfg: ModelConfig, kind: str,
     active = page_state["active"]
     post_len = kvl + q_len                     # lengths after this step
     needs_conv = conv_w is not None
+    htk = None
+    adaptive = head_top_k is not None and kind == "moba"
+    if adaptive:
+        # (H,) per-query-head budgets -> the (Hkv, G) grouped-GQA layout
+        # every routing path speaks (h = hkv*G + g, `_group_queries`)
+        hkv, g = cfg.num_kv_heads, cfg.num_heads // cfg.num_kv_heads
+        htk = jnp.asarray(head_top_k, jnp.int32).reshape(hkv, g)
     if needs_conv and "key_conv_state" not in cache:
         from repro.serving.scheduler import UnsupportedFeatureError
         raise UnsupportedFeatureError(
@@ -287,7 +300,7 @@ def _paged_attend(q, k, v, cache, page_state, cfg: ModelConfig, kind: str,
             k, stepped = apply_key_conv_decode(conv_w, k, ring)
             new_ring = jnp.where(active[:, None, None, None], stepped, ring)
         be = B.resolve(backend, kind=kind, phase="decode", cache="paged",
-                       key_conv=needs_conv)
+                       key_conv=needs_conv, adaptive=adaptive)
         new_cache = PC.paged_append_decode(cache, bt, kvl, active, k, v)
         if new_ring is not None:
             new_cache["key_conv_state"] = new_ring
@@ -295,7 +308,7 @@ def _paged_attend(q, k, v, cache, page_state, cfg: ModelConfig, kind: str,
             new_cache = PC.update_key_conv_tails(
                 new_cache, bt, kvl, active.astype(jnp.int32), k_raw)
         o = be.paged_decode(a, kind, q, new_cache, bt, post_len,
-                            positions=positions)
+                            positions=positions, head_top_k=htk)
         return o, new_cache
     # ragged prefill (fresh one-shot, or one chunk of a chunked prompt)
     if needs_conv:
@@ -312,7 +325,7 @@ def _paged_attend(q, k, v, cache, page_state, cfg: ModelConfig, kind: str,
         new_ring = ring.at[write].set(stepped.astype(ring.dtype),
                                       mode="drop")
     be = B.resolve(backend, kind=kind, phase="prefill", cache="paged",
-                   key_conv=needs_conv)
+                   key_conv=needs_conv, adaptive=adaptive)
     new_cache = PC.paged_append_prefill(cache, bt, q_len, k, v, kv_len=kvl)
     if new_ring is not None:
         new_cache["key_conv_state"] = new_ring
@@ -320,10 +333,11 @@ def _paged_attend(q, k, v, cache, page_state, cfg: ModelConfig, kind: str,
         new_cache = PC.update_key_conv_tails(new_cache, bt, kvl, q_len,
                                              k_raw)
     if page_state.get("chunked"):
-        o = be.paged_chunk_prefill(a, kind, q, new_cache, bt, kvl, q_len)
+        o = be.paged_chunk_prefill(a, kind, q, new_cache, bt, kvl, q_len,
+                                   head_top_k=htk)
     else:
         o = be.paged_prefill(a, kind, q, k, v, post_len=post_len,
-                             positions=jnp.arange(n))
+                             positions=jnp.arange(n), head_top_k=htk)
     return o, new_cache
 
 

@@ -58,8 +58,12 @@ def init_block(key, cfg: ModelConfig, kind: str) -> dict:
 
 def apply_block(p: dict, x: jax.Array, cfg: ModelConfig, kind: str, *,
                 positions=None, cache=None, backend="reference",
-                cross_kv=None, causal=True, page_state=None):
-    """Pre-LN block. Returns (x, aux_loss, new_cache)."""
+                cross_kv=None, causal=True, page_state=None,
+                head_top_k=None):
+    """Pre-LN block. Returns (x, aux_loss, new_cache).
+
+    ``head_top_k``: optional (H,) int32 per-head routing budgets for this
+    layer's MoBA attention (adaptive routing profile, DESIGN.md §8)."""
     aux = jnp.zeros((), jnp.float32)
     if kind == "ssm":
         h, new_cache = M.apply_mamba2(p["mamba"], L.rms_norm(
@@ -78,7 +82,8 @@ def apply_block(p: dict, x: jax.Array, cfg: ModelConfig, kind: str, *,
         h, new_cache = L.apply_attention(
             p["attn"], L.rms_norm(x, p["norm1"], cfg.rms_norm_eps), cfg,
             attn_kind, positions=positions, cache=self_cache,
-            backend=backend, causal=causal, page_state=page_state)
+            backend=backend, causal=causal, page_state=page_state,
+            head_top_k=head_top_k)
     x = x + h
     if kind == "decoder":
         h, _ = L.apply_attention(
@@ -157,13 +162,20 @@ def lm_apply(params, tokens: jax.Array, cfg: ModelConfig, *,
              cross_kv: Optional[jax.Array] = None,
              positions: Optional[jax.Array] = None,
              remat: bool = False, unroll: bool = False,
-             page_state: Optional[dict] = None):
+             page_state: Optional[dict] = None,
+             route_map: Optional[dict] = None):
     """tokens (B, S) -> (logits (B, S, V), aux, new_caches).
 
     ``unroll=True`` replaces the layer-group scan with a python loop —
     needed by the dry-run because XLA cost_analysis counts while-loop
     bodies only once (HLO grows O(layers), compile stays tractable via the
-    grouped pattern)."""
+    grouped pattern).
+
+    ``route_map``: optional ``{"slot_i": (n_groups, H) int32}`` per-head
+    MoBA routing budgets from a calibrated profile (DESIGN.md §8) —
+    scanned alongside params/caches so each group's layers see their own
+    (H,) rows.  Slots absent from the map (non-MoBA kinds, or all slots
+    under static routing) run the static ``top_k``."""
     pattern, n_groups = _block_kinds(cfg)
     dt = jnp.dtype(cfg.dtype)
     x = params["embed"].astype(dt)[tokens]
@@ -175,16 +187,18 @@ def lm_apply(params, tokens: jax.Array, cfg: ModelConfig, *,
 
     def group_body(carry, xs):
         x, aux = carry
-        gparams, gcaches = xs
+        gparams, gcaches, groute = xs
         new_gcaches = {}
         for i, kind in enumerate(pattern):
             p_i = (params["shared"] if kind == "shared_attn"
                    else gparams[f"slot_{i}"])
             cache_i = None if gcaches is None else gcaches.get(f"slot_{i}")
+            rt_i = None if groute is None else groute.get(f"slot_{i}")
             x, a, nc = apply_block(p_i, x, cfg, kind,
                                    positions=positions, cache=cache_i,
                                    backend=backend,
                                    page_state=page_state,
+                                   head_top_k=rt_i,
                                    cross_kv=cross_kv
                                    if kind in ("cross", "decoder")
                                    else None)
@@ -201,7 +215,9 @@ def lm_apply(params, tokens: jax.Array, cfg: ModelConfig, *,
             gp = jax.tree.map(lambda a: a[gi], params["blocks"])
             gc = (None if caches is None
                   else jax.tree.map(lambda a: a[gi], caches))
-            carry, y = body(carry, (gp, gc))
+            gr = (None if route_map is None
+                  else jax.tree.map(lambda a: a[gi], route_map))
+            carry, y = body(carry, (gp, gc, gr))
             ys.append(y)
         (x, aux) = carry
         new_caches = (None if ys[0] is None else
@@ -209,7 +225,7 @@ def lm_apply(params, tokens: jax.Array, cfg: ModelConfig, *,
     else:
         (x, aux), new_caches = jax.lax.scan(
             body, (x, jnp.zeros((), jnp.float32)),
-            (params["blocks"], caches))
+            (params["blocks"], caches, route_map))
     x = L.rms_norm(x, params["final_norm"], cfg.rms_norm_eps)
     head = (params["embed"].T if cfg.tie_embeddings
             else params["lm_head"]).astype(dt)
@@ -310,7 +326,7 @@ def init_paged_caches(cfg: ModelConfig, num_pages: int, page_size: int,
 
 def prefill(params, tokens: jax.Array, cfg: ModelConfig, caches,
             backend="reference", cross_kv=None, unroll: bool = False,
-            page_state=None, positions=None):
+            page_state=None, positions=None, route_map=None):
     """``positions`` defaults to [0, S) (fresh prompts); chunked paged
     prefill passes per-row (B, S) offsets instead."""
     if positions is None:
@@ -318,13 +334,13 @@ def prefill(params, tokens: jax.Array, cfg: ModelConfig, caches,
     logits, aux, new_caches = lm_apply(
         params, tokens, cfg, caches=caches, backend=backend,
         cross_kv=cross_kv, unroll=unroll, page_state=page_state,
-        positions=positions)
+        positions=positions, route_map=route_map)
     return logits, new_caches
 
 
 def decode_step(params, token: jax.Array, cfg: ModelConfig, caches,
                 backend="reference", cross_kv=None, unroll: bool = False,
-                page_state=None):
+                page_state=None, route_map=None):
     """token (B, 1) against caches; returns (logits (B,1,V), new_caches).
 
     With a paged cache the per-sequence position is the scheduler's
@@ -336,7 +352,7 @@ def decode_step(params, token: jax.Array, cfg: ModelConfig, caches,
     logits, _, new_caches = lm_apply(
         params, token, cfg, caches=caches, backend=backend,
         cross_kv=cross_kv, positions=pos, unroll=unroll,
-        page_state=page_state)
+        page_state=page_state, route_map=route_map)
     return logits, new_caches
 
 

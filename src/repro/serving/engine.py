@@ -65,13 +65,15 @@ def parse_attn_backend(spec: str) -> str:
 
 def admission_capability_check(cfg: ModelConfig, backend: str,
                                sharded: bool = False,
-                               kv_dtype: str = "fp32") -> None:
+                               kv_dtype: str = "fp32",
+                               adaptive: bool = False) -> None:
     """Admission-time capability query shared by the single-host and
     sharded engines: every layer kind must resolve for both paged
     phases (with key-conv where the config carries it, mesh-free
-    per-shard math when ``sharded``, and quantized-pool support when
-    ``kv_dtype`` is int8/fp8), or the request stream would die inside a
-    jitted step."""
+    per-shard math when ``sharded``, quantized-pool support when
+    ``kv_dtype`` is int8/fp8, and per-head ``head_top_k`` routing when
+    ``adaptive``), or the request stream would die inside a jitted
+    step."""
     a = cfg.attention
     conv = bool(a.moba is not None and a.moba.key_conv_width)
     kinds = {"dense" if k == "shared_attn" else k
@@ -81,10 +83,68 @@ def admission_capability_check(cfg: ModelConfig, backend: str,
             try:
                 B.resolve(backend, kind=kind, phase=phase, cache="paged",
                           key_conv=conv and kind == "moba",
-                          sharded=sharded, kv_dtype=kv_dtype)
+                          sharded=sharded, kv_dtype=kv_dtype,
+                          adaptive=adaptive and kind == "moba")
             except B.BackendCapabilityError as e:
                 raise UnsupportedFeatureError("attn_backend",
                                               str(e)) from e
+
+
+def build_route_profile(cfg: ModelConfig, params, route_policy: str,
+                        pages_per_seq: int):
+    """Resolve ``EngineConfig.route_policy`` into ``(profile,
+    route_map)`` — ``(None, None)`` for static routing.
+
+    ``snr:pfail=P`` runs the calibration pass (``core/adaptive.py``)
+    against this engine's routing universe (``pages_per_seq``);
+    ``profile:PATH`` loads a serialized artifact and validates it
+    against the model's layer pattern and static ``top_k``, so routing
+    decisions always come from the artifact, never recomputed state.
+    Shared by the single-host and sharded engines (the sharded engine
+    replicates one profile across shards)."""
+    from repro.core import adaptive as AD
+
+    try:
+        mode, arg = AD.parse_route_policy(route_policy)
+    except ValueError as e:
+        raise UnsupportedFeatureError("route_policy", str(e)) from e
+    if mode == "static":
+        return None, None
+    a = cfg.attention
+    if a.moba is None or not any(k == "moba" for k in cfg.layer_pattern):
+        raise UnsupportedFeatureError(
+            "route_policy",
+            f"adaptive routing needs a moba slot in the layer pattern; "
+            f"got {cfg.layer_pattern}")
+    if mode == "snr":
+        profile = AD.calibrate_profile(cfg, params, arg,
+                                       num_blocks=pages_per_seq)
+    else:
+        try:
+            profile = AD.RoutingProfile.load(arg)
+        except (OSError, ValueError, KeyError) as e:
+            raise UnsupportedFeatureError(
+                "route_policy", f"cannot load routing profile {arg!r}: "
+                f"{e}") from e
+    pattern = cfg.layer_pattern
+    n_groups = cfg.num_layers // len(pattern)
+    if profile.k_max != a.moba.top_k \
+            or profile.block_size != a.moba.block_size:
+        raise UnsupportedFeatureError(
+            "route_policy",
+            f"routing profile was calibrated for top_k={profile.k_max} "
+            f"block_size={profile.block_size}, model has "
+            f"top_k={a.moba.top_k} block_size={a.moba.block_size}")
+    for slot, arr in profile.top_k.items():
+        i = int(slot.rsplit("_", 1)[1])
+        if i >= len(pattern) or pattern[i] != "moba" \
+                or arr.shape != (n_groups, cfg.num_heads):
+            raise UnsupportedFeatureError(
+                "route_policy",
+                f"routing profile slot {slot!r} (shape {arr.shape}) does "
+                f"not match layer pattern {pattern} x {n_groups} groups "
+                f"x {cfg.num_heads} heads")
+    return profile, profile.route_map()
 
 
 def resolve_pool_sizes(cfg: ModelConfig, ecfg: "EngineConfig"
@@ -291,6 +351,14 @@ class EngineConfig:
     #                                    (centroids, key-conv state)
     #                                    stays fp32 either way
     #                                    (core/quantization.py)
+    route_policy: str = "static"       # MoBA routing policy: "static"
+    #                                    (uniform top_k), "snr:pfail=P"
+    #                                    (calibrate per-(layer, head)
+    #                                    top_k from measured SNR at
+    #                                    engine construction), or
+    #                                    "profile:PATH" (load a saved
+    #                                    routing-profile artifact) —
+    #                                    core/adaptive.py, DESIGN.md §8
     attn_backend: str = ""             # registered backend (core.backends);
     #                                    "" → moba_impl or "reference".
     #                                    A "name:option,..." spec (e.g.
@@ -322,10 +390,22 @@ class Engine:
             raise ServingError(
                 f"unknown kv_dtype {ecfg.kv_dtype!r}; "
                 f"expected one of {Q.KV_DTYPES}")
+        from repro.core.adaptive import parse_route_policy
+        try:
+            route_mode, _ = parse_route_policy(ecfg.route_policy)
+        except ValueError as e:
+            raise UnsupportedFeatureError("route_policy", str(e)) from e
         admission_capability_check(cfg, self.attn_backend,
-                                   kv_dtype=ecfg.kv_dtype)
+                                   kv_dtype=ecfg.kv_dtype,
+                                   adaptive=route_mode != "static")
         self.page_size, self.pages_per_seq, self.num_pages = \
             resolve_pool_sizes(cfg, ecfg)
+        # adaptive routing: calibrate (or load) the per-(layer, head)
+        # top_k profile once at construction; the step functions embed it
+        # as a closure constant, so every prefill/decode — including
+        # preempt-swap-restore replays — routes from the same profile
+        self.route_profile, route_map = build_route_profile(
+            cfg, params, ecfg.route_policy, self.pages_per_seq)
         conv = needs_key_conv(cfg)
         if ecfg.prefix_cache and conv \
                 and cfg.attention.moba.key_conv_width - 1 > self.page_size:
@@ -356,10 +436,12 @@ class Engine:
                                  or ecfg.swap_bytes > 0)
         self._prefill = jax.jit(
             S.make_paged_prefill_step(cfg, backend=self.attn_backend,
-                                      chunked=self._chunk_aware),
+                                      chunked=self._chunk_aware,
+                                      route_map=route_map),
             donate_argnums=(2,))
         self._decode = jax.jit(
-            S.make_paged_decode_step(cfg, backend=self.attn_backend),
+            S.make_paged_decode_step(cfg, backend=self.attn_backend,
+                                     route_map=route_map),
             donate_argnums=(2,))
         self._cur_tok = np.zeros((ecfg.max_seqs,), np.int32)
         self._next_rid = 0

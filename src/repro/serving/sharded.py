@@ -49,11 +49,11 @@ from repro.serving import paged_cache as PC
 from repro.serving.engine import (EngineConfig, HostSwapStore,
                                   admission_capability_check,
                                   build_decode_batch, build_prefill_batch,
-                                  drain_cache_ops, needs_key_conv,
-                                  parse_attn_backend, prefill_bucket,
-                                  prefill_takes, record_decode,
-                                  record_prefill, resolve_pool_sizes,
-                                  unsupported_reason)
+                                  build_route_profile, drain_cache_ops,
+                                  needs_key_conv, parse_attn_backend,
+                                  prefill_bucket, prefill_takes,
+                                  record_decode, record_prefill,
+                                  resolve_pool_sizes, unsupported_reason)
 from repro.serving.scheduler import (Request, Scheduler, ServingError,
                                      UnsupportedFeatureError)
 
@@ -119,10 +119,25 @@ class ShardedEngine:
             raise ServingError(
                 f"unknown kv_dtype {ecfg.kv_dtype!r}; expected one of "
                 f"{Q.KV_DTYPES}")
+        from repro.core.adaptive import parse_route_policy
+        try:
+            route_mode, _ = parse_route_policy(ecfg.route_policy)
+        except ValueError as e:
+            raise UnsupportedFeatureError("route_policy", str(e)) from e
         admission_capability_check(cfg, self.attn_backend, sharded=True,
-                                   kv_dtype=ecfg.kv_dtype)
+                                   kv_dtype=ecfg.kv_dtype,
+                                   adaptive=route_mode != "static")
         self.page_size, self.pages_per_seq, self.num_pages = \
             resolve_pool_sizes(cfg, ecfg)
+        # ONE routing profile, calibrated (or loaded) once and embedded
+        # as a replicated closure constant of the shard_map steps —
+        # every shard routes identically, so a request's tokens cannot
+        # depend on which shard the router picked (shard invariance).
+        # The context-parallel fallback (`_run_cp`, dense caches on the
+        # ``sp`` backend) has no per-head budget plumbing and stays on
+        # static routing — a documented limitation (docs/serving.md).
+        self.route_profile, self._route_map = build_route_profile(
+            cfg, params, ecfg.route_policy, self.pages_per_seq)
         self.params = jax.device_put(params, NamedSharding(mesh, P()))
         conv = needs_key_conv(cfg)
         if ecfg.prefix_cache and conv \
@@ -158,11 +173,12 @@ class ShardedEngine:
         self._prefill = jax.jit(
             S.make_sharded_paged_prefill_step(
                 cfg, mesh, backend=self.attn_backend,
-                chunked=self._chunk_aware),
+                chunked=self._chunk_aware, route_map=self._route_map),
             donate_argnums=(2,))
         self._decode = jax.jit(
             S.make_sharded_paged_decode_step(cfg, mesh,
-                                             backend=self.attn_backend),
+                                             backend=self.attn_backend,
+                                             route_map=self._route_map),
             donate_argnums=(2,))
         self._cur_tok = np.zeros((ns, ecfg.max_seqs), np.int32)
         self._next_rid = 0

@@ -1,0 +1,369 @@
+"""SNR-guided adaptive per-head routing (DESIGN.md §8).
+
+Three layers of pins:
+
+* **Policy core** — `choose_top_k` inversion properties (own-page
+  reservation, monotonicity, the k >= n vacuous-bound guard), policy
+  string parsing, profile artifact round-trip + validation, and the
+  registry capability gate (`adaptive_topk`).
+* **Planted-signal path** — the full calibration pipeline (capture hook
+  → `estimate_head_snr` → `choose_top_k`) on a heterogeneous per-head
+  workload: strong heads keep the needle while their selected-page
+  volume drops >= 20%; weak heads keep the static budget.
+* **Engine equivalence** — `route_policy="static"`, a uniform profile
+  artifact, and an snr policy that provably resolves to uniform budgets
+  are token-exact against the baseline engine across the flash grouped
+  grid, the xla flat grid, key-conv, chunked prefill, and quantized
+  pools; a *non*-uniform profile decodes identically across backends,
+  across 1/2/4 shards (subprocess device mesh, same trick as
+  test_sharded_serving.py), and through preempt-swap-restore replay.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.configs.base import MoBAConfig
+from repro.core import adaptive as AD
+from repro.core import backends as B
+from repro.core import moba as M
+from repro.models import transformer as T
+from repro.serving.engine import Engine, EngineConfig
+from repro.serving.scheduler import UnsupportedFeatureError
+
+_ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _run(code: str):
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               JAX_PLATFORMS="cpu",
+               PYTHONPATH=os.path.join(_ROOT, "src"))
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, env=env,
+                       timeout=900)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    return r.stdout
+
+
+# ------------------------------------------------------------ policy core
+def test_choose_top_k_reserves_own_page_slot():
+    # rank 0 is the forced own page; a head with overwhelming SNR still
+    # needs one score slot on top of it, so the floor is 2, never 1
+    k = AD.choose_top_k(np.array([100.0]), num_blocks=64, k_max=8,
+                        pfail=0.01)
+    assert k.tolist() == [2]
+    # unless the static budget itself is 1
+    assert AD.choose_top_k(np.array([100.0]), 64, 1, 0.01).tolist() == [1]
+
+
+def test_choose_top_k_monotone_and_bounded():
+    snrs = np.linspace(0.0, 12.0, 49)
+    ks = AD.choose_top_k(snrs, num_blocks=64, k_max=8, pfail=0.01)
+    assert ks.min() >= 1 and ks.max() <= 8
+    assert all(a >= b for a, b in zip(ks, ks[1:]))   # more SNR, fewer k
+    assert ks[0] == 8                                 # no signal: static
+    assert ks[-1] == 2                                # strong: own + top1
+    # a tighter failure budget never chooses a smaller k
+    loose = AD.choose_top_k(snrs, 64, 8, pfail=0.05)
+    tight = AD.choose_top_k(snrs, 64, 8, pfail=0.001)
+    assert np.all(tight >= loose)
+
+
+def test_choose_top_k_guards():
+    with pytest.raises(ValueError, match="k_max"):
+        AD.choose_top_k(np.array([1.0]), 64, 0, 0.01)
+    # k >= num_blocks is a vacuous bound, not a ppf domain error
+    ks = AD.choose_top_k(np.array([0.0, 50.0]), num_blocks=4, k_max=8,
+                         pfail=0.01)
+    assert ks.min() >= 1 and ks.max() <= 8
+
+
+def test_parse_route_policy():
+    assert AD.parse_route_policy("static") == ("static", None)
+    assert AD.parse_route_policy("") == ("static", None)
+    mode, p = AD.parse_route_policy("snr:pfail=0.01")
+    assert mode == "snr" and p == pytest.approx(0.01)
+    mode, path = AD.parse_route_policy("profile:/tmp/x.json")
+    assert mode == "profile" and path == "/tmp/x.json"
+    for bad in ("snr", "snr:pfail=0.7", "snr:pfail=-1", "snr:p=0.1",
+                "profile:", "greedy"):
+        with pytest.raises(ValueError):
+            AD.parse_route_policy(bad)
+
+
+def test_profile_roundtrip_and_validation(tmp_path):
+    cfg = get_smoke_config("moba-340m")
+    prof = AD.RoutingProfile.uniform(cfg)
+    assert prof.is_uniform
+    arrs = list(prof.top_k.values())
+    arrs[0][:, ::2] = 1                        # make it non-uniform
+    assert not prof.is_uniform
+    path = str(tmp_path / "prof.json")
+    prof.save(path)
+    back = AD.RoutingProfile.load(path)
+    assert back.k_max == prof.k_max
+    assert set(back.top_k) == set(prof.top_k)
+    for s in prof.top_k:
+        np.testing.assert_array_equal(back.top_k[s], prof.top_k[s])
+    # load-time validation: budgets outside [1, k_max] are rejected
+    import json
+    doc = json.load(open(path))
+    doc["top_k"][next(iter(doc["top_k"]))][0][0] = 0
+    bad = str(tmp_path / "bad.json")
+    json.dump(doc, open(bad, "w"))
+    with pytest.raises(ValueError, match="top_k"):
+        AD.RoutingProfile.load(bad)
+
+
+def test_capability_gate_adaptive_topk():
+    # paged backends route adaptively; the sequence-parallel fallback
+    # keeps static budgets (dense caches, no per-head truncation)
+    assert B.resolve("xla", kind="moba", phase="decode",
+                     cache="paged", adaptive=True)
+    assert B.resolve("flash", kind="moba", phase="decode",
+                     cache="paged", adaptive=True)
+    assert not B.get("sp").capabilities.adaptive_topk
+    with pytest.raises(B.BackendCapabilityError, match="adaptive"):
+        B.resolve("sp", kind="moba", phase="prefill", adaptive=True)
+
+
+def test_engine_rejects_bad_route_policy():
+    cfg = get_smoke_config("moba-340m")
+    params = T.init_lm(jax.random.PRNGKey(0), cfg)
+    for bad in ("snr:pfail=0.9", "profile:/nonexistent.json", "greedy"):
+        with pytest.raises(UnsupportedFeatureError):
+            Engine(cfg, params, EngineConfig(max_seqs=1, max_seq_len=64,
+                                             route_policy=bad))
+
+
+# --------------------------------------------------- planted-signal path
+def _planted_batch(rng, n, d, bs, m_cluster=8, mu_c=0.75):
+    """(q (B,H,1,d), keys (B,1,n,d), needle block (B,)): one kv head,
+    two query heads — g=0 asks the planted direction, g=1 pure noise."""
+    batch = 4
+    nb = n // bs
+    keys = rng.standard_normal((batch, 1, n, d))
+    keys /= np.linalg.norm(keys, axis=-1, keepdims=True)
+    u = rng.standard_normal((batch, d))
+    u /= np.linalg.norm(u, axis=-1, keepdims=True)
+    pos = rng.integers(0, nb - 1, batch)
+    for b in range(batch):
+        t0 = int(pos[b]) * bs
+        for i in range(m_cluster):
+            v = keys[b, 0, t0 + i]
+            v = v - (v @ u[b]) * u[b]
+            v /= np.linalg.norm(v)
+            keys[b, 0, t0 + i] = mu_c * u[b] + np.sqrt(
+                1 - mu_c ** 2) * v
+    q = rng.standard_normal((batch, 2, 1, d))
+    q /= np.linalg.norm(q, axis=-1, keepdims=True)
+    q[:, 0, 0] = u
+    return (jnp.asarray(q, jnp.float32), jnp.asarray(keys, jnp.float32),
+            pos)
+
+
+def test_planted_signal_adaptive_cuts_pages_keeps_needle():
+    """The full pipeline on a heterogeneous workload: the strong head's
+    budget shrinks to own+top1, the noise head keeps k_max, every
+    needle stays retrieved, and selected-page volume drops >= 20%."""
+    d, bs, nb = 64, 32, 32
+    n = nb * bs
+    cfg = MoBAConfig(block_size=bs, top_k=8)
+    rng = np.random.default_rng(0)
+    qpos = jnp.array([n - 1])
+
+    q, keys, _ = _planted_batch(rng, n, d, bs)
+    with AD.capture_routing_scores() as caps:
+        M.moba_selection(q, keys, cfg, q_positions=qpos)
+    assert len(caps) == 1
+    scores, qp = caps[0]
+    assert np.asarray(scores).shape == (4, 1, 2, 1, nb)
+    snr = AD.estimate_head_snr(np.asarray(scores), np.asarray(qp), bs)
+    htk = AD.choose_top_k(snr, nb, cfg.top_k, pfail=0.01)
+    assert snr[0, 0] > snr[0, 1]           # planted head measures hotter
+    assert htk[0, 0] == 2                  # own page + the needle slot
+    assert htk[0, 1] == cfg.top_k          # noise head: never adapted
+
+    hits = {"static": 0, "adaptive": 0}
+    pages = {"static": 0, "adaptive": 0}
+    trials = 0
+    for _ in range(4):
+        q, keys, pos = _planted_batch(rng, n, d, bs)
+        sels = {"static": M.moba_selection(q, keys, cfg,
+                                           q_positions=qpos),
+                "adaptive": M.moba_selection(
+                    q, keys, cfg, q_positions=qpos,
+                    head_top_k=jnp.asarray(htk))}
+        for path, sel in sels.items():
+            sel = np.asarray(sel)
+            pages[path] += int((sel < nb).sum())
+            hit = (sel[:, 0, 0, :] == pos[:, None]).any(-1)
+            hits[path] += int(hit.sum())
+        trials += len(pos)
+    assert hits["adaptive"] == hits["static"] == trials
+    assert pages["adaptive"] <= 0.8 * pages["static"]
+
+
+def test_estimate_head_snr_short_context_never_adapts():
+    # fewer noise blocks than MIN_NOISE_BLOCKS: SNR reports 0, so the
+    # inversion keeps the static budget
+    s = np.random.default_rng(0).standard_normal((2, 1, 2, 1, 3))
+    snr = AD.estimate_head_snr(s, np.array([3 * 16 - 1]), 16)
+    assert np.all(snr == 0.0)
+    assert np.all(AD.choose_top_k(snr, 3, 4, 0.01) == 4)
+
+
+# ------------------------------------------------------ engine equivalence
+def _outs(cfg, params, prompts, gen, **ekw):
+    eng = Engine(cfg, params, EngineConfig(
+        max_seqs=len(prompts), max_seq_len=64, **ekw))
+    reqs = [eng.submit(p, max_new_tokens=gen) for p in prompts]
+    eng.run()
+    return [r.out for r in reqs], eng
+
+
+def test_static_and_uniform_profiles_token_exact(tmp_path):
+    """route_policy="static", a saved uniform profile, and an snr policy
+    (provably uniform at k_max=2: every budget is min(score+1, 2) = 2)
+    decode byte-identical greedy streams across both decode grids,
+    chunked prefill, and quantized pools."""
+    cfg = get_smoke_config("moba-340m")
+    params = T.init_lm(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(0, cfg.vocab_size, p, dtype=np.int32)
+               for p in (40, 33, 21)]
+    upath = str(tmp_path / "uniform.json")
+    AD.RoutingProfile.uniform(cfg).save(upath)
+
+    for ekw in ({}, {"attn_backend": "flash"}, {"prefill_chunk": 7},
+                {"kv_dtype": "int8", "attn_backend": "xla"},
+                {"kv_dtype": "fp8", "attn_backend": "flash"},
+                {"attn_backend": "flash", "prefill_chunk": 24}):
+        base, _ = _outs(cfg, params, prompts, 8, **ekw)
+        for policy in (f"profile:{upath}", "snr:pfail=0.01"):
+            outs, eng = _outs(cfg, params, prompts, 8,
+                              route_policy=policy, **ekw)
+            assert eng.route_profile.is_uniform, (policy, ekw)
+            assert outs == base, (policy, ekw)
+
+
+def test_static_and_uniform_profiles_token_exact_key_conv(tmp_path):
+    cfg = get_smoke_config("moba-340m", key_conv_width=3)
+    params = T.init_lm(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(8)
+    prompts = [rng.integers(0, cfg.vocab_size, p, dtype=np.int32)
+               for p in (40, 21)]
+    upath = str(tmp_path / "uniform.json")
+    AD.RoutingProfile.uniform(cfg).save(upath)
+    for ekw in ({}, {"attn_backend": "flash", "prefill_chunk": 16}):
+        base, _ = _outs(cfg, params, prompts, 8, **ekw)
+        outs, _ = _outs(cfg, params, prompts, 8,
+                        route_policy=f"profile:{upath}", **ekw)
+        assert outs == base, ekw
+
+
+def _nonuniform_profile(cfg, tmp_path):
+    """Half the heads of every moba slot drop to budget 1 (own page
+    only) — a real routing change, not a no-op."""
+    prof = AD.RoutingProfile.uniform(cfg)
+    for arr in prof.top_k.values():
+        arr[:, ::2] = 1
+    path = str(tmp_path / "nonuniform.json")
+    prof.save(path)
+    return path
+
+
+def test_nonuniform_profile_same_tokens_across_backends(tmp_path):
+    """A profile that truncates budgets changes the output stream, but
+    both decode grids must agree on the changed stream — truncation is
+    grid-independent."""
+    cfg = get_smoke_config("moba-340m")
+    params = T.init_lm(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(9)
+    prompts = [rng.integers(0, cfg.vocab_size, p, dtype=np.int32)
+               for p in (40, 33)]
+    path = _nonuniform_profile(cfg, tmp_path)
+    static, _ = _outs(cfg, params, prompts, 8)
+    xla, ex = _outs(cfg, params, prompts, 8,
+                    route_policy=f"profile:{path}")
+    flash, _ = _outs(cfg, params, prompts, 8,
+                     route_policy=f"profile:{path}",
+                     attn_backend="flash")
+    chunked, _ = _outs(cfg, params, prompts, 8,
+                       route_policy=f"profile:{path}", prefill_chunk=7)
+    assert not ex.route_profile.is_uniform
+    assert xla == flash == chunked
+    assert xla != static        # the truncation actually bit
+
+
+def test_preemption_replay_under_adaptive_profile(tmp_path):
+    """Preempt-swap-restore with a non-uniform profile: the profile is a
+    jit-closure constant, so recompute replay must reproduce each
+    request's solo greedy stream exactly — same routing decisions before
+    and after eviction."""
+    cfg = get_smoke_config("moba-340m")
+    params = T.init_lm(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(4)
+    prompts = [rng.integers(0, cfg.vocab_size, p, dtype=np.int32)
+               for p in (40, 35, 30)]
+    path = _nonuniform_profile(cfg, tmp_path)
+    policy = f"profile:{path}"
+    eng = Engine(cfg, params, EngineConfig(max_seqs=3, max_seq_len=64,
+                                           num_pages=8,
+                                           route_policy=policy))
+    reqs = [eng.submit(p, max_new_tokens=14) for p in prompts]
+    eng.run()
+    assert eng.stats["preemptions"] > 0, "test should exercise preemption"
+    for p, r in zip(prompts, reqs):
+        solo = Engine(cfg, params, EngineConfig(max_seqs=1,
+                                                max_seq_len=64,
+                                                route_policy=policy))
+        rs = solo.submit(p, max_new_tokens=14)
+        solo.run()
+        assert r.out == rs.out, (r.rid, r.out, rs.out)
+
+
+def test_sharded_profile_shard_count_invariance(tmp_path):
+    """One profile replicated across shards: greedy tokens are identical
+    on 1, 2, and 4 shards under a non-uniform adaptive profile."""
+    path = str(tmp_path / "prof.json")
+    _run(f"""
+    import jax, numpy as np
+    from repro.configs import get_smoke_config
+    from repro.core import adaptive as AD
+    from repro.models import transformer as T
+    from repro.serving.engine import Engine, EngineConfig
+    from repro.serving.sharded import ShardedEngine
+    cfg = get_smoke_config("moba-340m")
+    params = T.init_lm(jax.random.PRNGKey(0), cfg)
+    prof = AD.RoutingProfile.uniform(cfg)
+    for arr in prof.top_k.values():
+        arr[:, ::2] = 1
+    prof.save({path!r})
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(0, cfg.vocab_size, n, dtype=np.int32)
+               for n in (40, 33, 21, 38)]
+    ecfg = dict(max_seqs=2, max_seq_len=64,
+                route_policy="profile:" + {path!r})
+    one = Engine(cfg, params, EngineConfig(max_seqs=4, max_seq_len=64,
+                                           route_policy=ecfg[
+                                               "route_policy"]))
+    reqs = [one.submit(p, max_new_tokens=8) for p in prompts]
+    one.run()
+    want = [r.out for r in reqs]
+    for shards in (2, 4):
+        sh = ShardedEngine(cfg, params, EngineConfig(**ecfg),
+                           n_shards=shards)
+        sreqs = [sh.submit(p, max_new_tokens=8) for p in prompts]
+        sh.run()
+        assert [r.out for r in sreqs] == want, shards
+        assert not sh.route_profile.is_uniform
+        print("OK", shards, "shards")
+    """)

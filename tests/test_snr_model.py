@@ -1,0 +1,172 @@
+"""Pins for the paper's SNR model (`core/snr.py`), App. A.
+
+`_norm_ppf` is the load-bearing primitive — `required_snr` and the
+adaptive `choose_top_k` inversion both stand on it — so it gets direct
+coverage here: domain errors, inverse accuracy against the forward
+normal CDF, the two rational-approximation branch boundaries (0.02425),
+plus monotonicity/edge pins for the formula layer.  Property-based
+sweeps run under hypothesis when it is installed; the deterministic
+sweeps below cover the same ground either way.
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.snr import (
+    _norm_ppf,
+    effective_gap,
+    p_fail,
+    required_snr,
+    snr,
+)
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYP = True
+except ImportError:          # container has no hypothesis; sweeps below
+    HAVE_HYP = False
+
+
+def _phi(x: float) -> float:
+    """Forward standard-normal CDF (exact, vs the ppf approximation)."""
+    return 0.5 * math.erfc(-x / math.sqrt(2.0))
+
+
+# ------------------------------------------------------------ _norm_ppf
+@pytest.mark.parametrize("p", [0.0, 1.0, -0.1, 1.1, 2.0])
+def test_norm_ppf_domain(p):
+    with pytest.raises(ValueError, match="p in"):
+        _norm_ppf(p)
+
+
+@pytest.mark.parametrize("p", np.concatenate([
+    np.linspace(1e-6, 0.02424, 7),          # lower tail branch
+    np.linspace(0.02426, 1 - 0.02426, 11),  # central branch
+    np.linspace(1 - 0.02424, 1 - 1e-6, 7),  # upper tail branch
+]).tolist())
+def test_norm_ppf_inverts_phi(p):
+    # Acklam quotes |relative error| < 4.5e-4; round-tripping through
+    # the exact forward CDF must land back on p to the same order
+    assert _phi(_norm_ppf(p)) == pytest.approx(p, rel=2e-3, abs=1e-7)
+
+
+def test_norm_ppf_branch_boundaries_continuous():
+    # the approximation switches branches at plow = 0.02425; both
+    # crossings must be continuous to approximation accuracy
+    for edge in (0.02425, 1 - 0.02425):
+        lo = _norm_ppf(edge - 1e-9)
+        hi = _norm_ppf(edge + 1e-9)
+        assert abs(hi - lo) < 1e-4
+
+
+def test_norm_ppf_known_values():
+    assert _norm_ppf(0.5) == pytest.approx(0.0, abs=1e-9)
+    assert _norm_ppf(0.975) == pytest.approx(1.959964, abs=1e-3)
+    assert _norm_ppf(0.025) == pytest.approx(-1.959964, abs=1e-3)
+    # symmetry holds in both tail branches
+    for p in (1e-4, 0.01, 0.2, 0.4):
+        assert _norm_ppf(p) == pytest.approx(-_norm_ppf(1 - p), abs=1e-6)
+
+
+def test_norm_ppf_monotone():
+    ps = np.linspace(1e-5, 1 - 1e-5, 400)
+    xs = [_norm_ppf(p) for p in ps]
+    assert all(a < b for a, b in zip(xs, xs[1:]))
+
+
+# -------------------------------------------- required_snr / p_fail
+def test_required_snr_is_ppf_inverse():
+    # required_snr(n, k) is definitionally Φ⁻¹(1 − k/n): retrieval at
+    # that SNR fails a single pairwise comparison with probability k/n
+    for n, k in [(64, 1), (64, 8), (128, 4), (1024, 16), (16, 8)]:
+        need = required_snr(n, k)
+        assert need == pytest.approx(_norm_ppf(1.0 - k / n), abs=0)
+        assert _phi(-need) == pytest.approx(k / n, rel=2e-3)
+
+
+def test_required_snr_roundtrip_through_p_fail():
+    # p_fail(d, B, Δμ_eff) = Φ(−SNR); feeding the required SNR back
+    # through the failure model recovers k/n
+    d, bs = 64, 32
+    for n, k in [(64, 2), (256, 8)]:
+        need = required_snr(n, k)
+        # invert snr() for the Δμ_eff that realizes exactly `need`
+        gap = need / math.sqrt(d / (2.0 * bs))
+        assert p_fail(d, bs, gap) == pytest.approx(k / n, rel=2e-3)
+
+
+def test_required_snr_monotone_in_k_and_n():
+    # easier target (larger k) → smaller required SNR; more competitors
+    # (larger n at fixed k) → larger required SNR
+    needs_k = [required_snr(64, k) for k in (1, 2, 4, 8, 16, 32)]
+    assert all(a > b for a, b in zip(needs_k, needs_k[1:]))
+    needs_n = [required_snr(n, 4) for n in (8, 16, 64, 256, 1024)]
+    assert all(a < b for a, b in zip(needs_n, needs_n[1:]))
+
+
+def test_required_snr_k_equals_n_rejected():
+    # k == n gives q = 0, outside the ppf domain — callers must guard
+    # (choose_top_k treats k >= n as a vacuous bound)
+    with pytest.raises(ValueError):
+        required_snr(64, 64)
+
+
+# --------------------------------------------------- snr / effective_gap
+def test_snr_monotone_in_d_and_block_size():
+    # SNR = Δμ_eff·sqrt(d/2B): grows with head dim, shrinks with block
+    by_d = [snr(d, 64, 1.0) for d in (16, 32, 64, 128, 256)]
+    assert all(a < b for a, b in zip(by_d, by_d[1:]))
+    by_b = [snr(64, bs, 1.0) for bs in (16, 32, 64, 128, 256)]
+    assert all(a > b for a, b in zip(by_b, by_b[1:]))
+    # exact scaling pins, paper Eq. (3)
+    assert snr(64, 32, 2.0) == pytest.approx(2.0 * math.sqrt(1.0))
+    assert snr(256, 32, 1.0) == pytest.approx(4.0 * snr(16, 32, 1.0))
+
+
+def test_p_fail_monotone_in_gap():
+    fails = [p_fail(64, 32, g) for g in (0.0, 0.5, 1.0, 2.0, 4.0)]
+    assert fails[0] == pytest.approx(0.5)      # no signal: coin flip
+    assert all(a > b for a, b in zip(fails, fails[1:]))
+    assert fails[-1] < 1e-4
+
+
+def test_effective_gap_edge_cases():
+    # m=1: no clustering term regardless of the cluster affinities
+    assert effective_gap(0.7, m=1, mu_cluster=0.9, mu_noise=0.1) == 0.7
+    # mu_cluster == mu_noise: clustering adds nothing for any m
+    assert effective_gap(0.7, m=8, mu_cluster=0.3, mu_noise=0.3) == 0.7
+    # the paper's linear-in-m growth, Eq. after (2)
+    assert effective_gap(0.5, m=4, mu_cluster=0.4, mu_noise=0.1) == (
+        pytest.approx(0.5 + 3 * 0.3))
+    # anti-clustered keys (mu_cluster < mu_noise) reduce the gap
+    assert effective_gap(0.5, m=4, mu_cluster=0.0,
+                         mu_noise=0.2) < 0.5
+
+
+if HAVE_HYP:
+    @settings(max_examples=200, deadline=None)
+    @given(st.floats(min_value=1e-6, max_value=1 - 1e-6))
+    def test_hyp_norm_ppf_inverts_phi(p):
+        assert _phi(_norm_ppf(p)) == pytest.approx(p, rel=2e-3,
+                                                   abs=1e-7)
+
+    @settings(max_examples=100, deadline=None)
+    @given(st.integers(min_value=2, max_value=4096),
+           st.data())
+    def test_hyp_required_snr_roundtrip(n, data):
+        k = data.draw(st.integers(min_value=1, max_value=n - 1))
+        assert _phi(-required_snr(n, k)) == pytest.approx(
+            k / n, rel=2e-3, abs=1e-7)
+
+    @settings(max_examples=100, deadline=None)
+    @given(st.floats(min_value=0.0, max_value=4.0),
+           st.integers(min_value=1, max_value=64),
+           st.floats(min_value=-1.0, max_value=1.0),
+           st.floats(min_value=-1.0, max_value=1.0))
+    def test_hyp_effective_gap_linear(delta, m, mu_c, mu_n):
+        gap = effective_gap(delta, m=m, mu_cluster=mu_c, mu_noise=mu_n)
+        assert gap == pytest.approx(delta + (m - 1) * (mu_c - mu_n))
