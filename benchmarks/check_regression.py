@@ -36,9 +36,18 @@ accuracy ceilings: ``accuracy_adaptive`` must stay within
 at or under ``ADAPTIVE_BYTES_CEILING`` — the ISSUE's >= 20% reduction
 target on the planted-signal config.
 
-``wall_us`` and ``tokens_per_s`` are deliberately ignored across
-machines: interpret-mode wall time is not TPU-meaningful (they stay
-informational in the JSON artifacts).
+Checked per matched case with the open-loop serve metrics
+(``sustained_tokens_per_s`` / ``ttft_p99_ms``): wall-derived but gated
+against WIDE cross-machine bands rather than ``--tol`` — sustained
+tokens/s must stay above snapshot / ``OPEN_LOOP_BAND`` and p99 TTFT
+below snapshot × ``OPEN_LOOP_BAND``.  A 3× band never trips on CI-vs-
+workstation speed differences but catches the pathologies this exists
+for: a dispatch-ahead regression serializing every decode step, or an
+admission bug stalling arrivals for whole pipeline depths.
+
+``wall_us`` and the prefix traces' ``tokens_per_s`` are deliberately
+ignored across machines: interpret-mode wall time is not TPU-meaningful
+(they stay informational in the JSON artifacts).
 
 Exit 0 = clean; exit 1 = regression or disagreement, with a table of
 every violation on stderr.
@@ -59,6 +68,9 @@ DIFF_CEILINGS = {"fp32": 1e-3, "int8": 5e-2, "fp8": 2e-1}
 # selected-page reduction the snapshot was accepted with
 ADAPTIVE_ACC_MARGIN = 0.01
 ADAPTIVE_BYTES_CEILING = 0.80
+# open-loop serve traces: wall-derived metrics compared across machines
+# only against this wide multiplicative band (see module docstring)
+OPEN_LOOP_BAND = 3.0
 
 
 def _index(report):
@@ -143,6 +155,25 @@ def compare(baseline: dict, new: dict, tol: float):
                 problems.append(
                     f"{name}: prefix-cache speedup {metrics['speedup']:.3f}"
                     f" <= 1.0 (cache-on run must beat cache-off)")
+            key = "sustained_tokens_per_s"
+            if key in metrics and key in base_metrics:
+                floor = base_metrics[key] / OPEN_LOOP_BAND
+                if metrics[key] < floor:
+                    problems.append(
+                        f"{name}: {key} {metrics[key]:.1f} below the "
+                        f"snapshot/{OPEN_LOOP_BAND:.0f} floor "
+                        f"{floor:.1f} (snapshot "
+                        f"{base_metrics[key]:.1f})")
+            key = "ttft_p99_ms"
+            if "sustained_tokens_per_s" in metrics \
+                    and key in metrics and key in base_metrics:
+                ceiling = base_metrics[key] * OPEN_LOOP_BAND
+                if metrics[key] > ceiling:
+                    problems.append(
+                        f"{name}: {key} {metrics[key]:.0f}ms above the "
+                        f"snapshot×{OPEN_LOOP_BAND:.0f} ceiling "
+                        f"{ceiling:.0f}ms (snapshot "
+                        f"{base_metrics[key]:.0f}ms)")
     if matched == 0:
         problems.append(
             "no case/path names in common between the fresh run and the "

@@ -26,6 +26,17 @@ carry ``tokens_per_s``, ``latency_p50_ms`` / ``latency_p99_ms``,
 ``pages_in_use_peak``.  Wall-time-derived numbers are informational on
 CPU; the gated signals are exactness, the hit/saved rates (pure
 scheduler accounting) and the within-run on/off speedup ratio.
+
+``--traces open-loop`` selects the staged-API open-loop traces instead
+(the CI ``serve-smoke`` leg): requests arrive on a fixed decode-step
+schedule through ``serving.frontend.run_open_loop`` with dispatch-ahead
+decode, token-compared against the legacy closed loop on the identical
+workload.  Per-case ``metrics`` carry ``sustained_tokens_per_s``,
+``ttft_p50_ms`` / ``ttft_p99_ms``, ``tpot_p50_ms`` / ``tpot_p99_ms``,
+``dispatch_depth_peak`` and ``preemptions``; the within-run gates are
+exactness + pipeline depth (+ preemptions on undersized pools), and
+``check_regression.py`` holds the wall-derived numbers only to loose
+cross-machine bands (tokens/s floor, TTFT ceiling).
 """
 from __future__ import annotations
 
@@ -59,6 +70,24 @@ FULL_TRACES = SMOKE_TRACES + [
          max_seqs=4, num_pages=0),
     dict(kind="prefix_misaligned", n=64, prefix_len=2053, sfx=16, gen=8,
          max_seqs=4, num_pages=0),
+]
+
+# open-loop traces: requests arrive every ``every`` decode steps via the
+# staged API (serving.frontend.run_open_loop) with dispatch-ahead
+# decode; the gated signals are token-exactness vs the legacy closed
+# loop on the identical workload and pipeline-depth evidence that
+# dispatch-ahead engaged (both within-run, machine-independent).
+# ``num_pages`` nonzero undersizes the pool so admission + preemption
+# replay happen mid-pipeline.
+OPEN_LOOP_SMOKE = [
+    dict(kind="open_loop", n=8, plen=40, sfx=8, gen=8, every=2,
+         max_seqs=4, num_pages=0, dispatch_ahead=1),
+    dict(kind="open_loop_preempt", n=6, plen=40, sfx=8, gen=12, every=2,
+         max_seqs=2, num_pages=6, dispatch_ahead=2),
+]
+OPEN_LOOP_FULL = OPEN_LOOP_SMOKE + [
+    dict(kind="open_loop", n=24, plen=96, sfx=16, gen=16, every=3,
+         max_seqs=8, num_pages=0, dispatch_ahead=2),
 ]
 
 
@@ -251,8 +280,81 @@ def _prefix_case(tr) -> dict:
     }
 
 
+# ------------------------------------------------- open-loop JSON mode
+def _open_loop_case(tr) -> dict:
+    """One open-loop trace: the staged-API driver with dispatch-ahead vs
+    the legacy closed loop on the identical workload, token-compared.
+    Reports sustained tokens/s + TTFT/TPOT percentiles for the staged
+    run (wall-derived, informational on CPU; check_regression holds
+    them only to loose cross-machine floors/ceilings)."""
+    import jax
+    from repro.configs import get_smoke_config
+    from repro.models import transformer as T
+    from repro.serving.engine import Engine, EngineConfig
+    from repro.serving import frontend as FE
+
+    cfg = get_smoke_config(ARCH)
+    params = T.init_lm(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(42)
+    prompts = [rng.integers(0, cfg.vocab_size,
+                            tr["plen"] + 1 + int(rng.integers(tr["sfx"])),
+                            dtype=np.int32) for _ in range(tr["n"])]
+    max_len = _round_up(tr["plen"] + tr["sfx"] + tr["gen"] + 1, 16)
+
+    def mk(da):
+        return Engine(cfg, T.init_lm(jax.random.PRNGKey(0), cfg),
+                      EngineConfig(max_seqs=tr["max_seqs"],
+                                   max_seq_len=max_len,
+                                   num_pages=tr["num_pages"],
+                                   dispatch_ahead=da))
+
+    legacy = mk(0)
+    base = [legacy.submit(p, max_new_tokens=tr["gen"]) for p in prompts]
+    w0 = time.perf_counter()
+    legacy.run(realtime=False)
+    legacy_wall = time.perf_counter() - w0
+
+    da = tr["dispatch_ahead"]
+    staged = mk(da)
+    trace = [FE.TraceItem(prompt=p, max_new_tokens=tr["gen"],
+                          arrival_step=i * tr["every"])
+             for i, p in enumerate(prompts)]
+    m = FE.time_open_loop(staged, trace)
+    reqs = m.pop("_requests")
+    exact = [list(r.out) for r in reqs] == [list(r.out) for r in base]
+    # within-run gates: token exactness, the pipeline actually ran at
+    # the configured depth, and undersized-pool traces really preempted
+    agree = exact and m["dispatch_depth_peak"] >= da
+    if tr["num_pages"]:
+        agree = agree and m["preemptions"] > 0
+    metrics = {
+        "sustained_tokens_per_s": m["sustained_tokens_per_s"],
+        "ttft_p50_ms": m["ttft_p50_ms"],
+        "ttft_p99_ms": m["ttft_p99_ms"],
+        "tpot_p50_ms": m["tpot_p50_ms"],
+        "tpot_p99_ms": m["tpot_p99_ms"],
+        "dispatch_depth_peak": m["dispatch_depth_peak"],
+        "preemptions": m["preemptions"],
+    }
+    return {
+        "name": f"serve_{tr['kind']}_da{da}",
+        "trace": dict(tr),
+        "exact": exact,
+        "agree": agree,
+        "metrics": metrics,
+        "paths": {
+            "legacy": {"wall_us": legacy_wall * 1e6},
+            "staged": {"wall_us": m["wall_s"] * 1e6,
+                       "decode_steps": m["decode_steps"],
+                       "pipeline_drains": m["pipeline_drains"]},
+        },
+    }
+
+
 def run_cases(traces):
-    return [_prefix_case(tr) for tr in traces]
+    return [_prefix_case(tr) if tr["kind"].startswith("prefix")
+            or tr["kind"] == "preempt_swap" else _open_loop_case(tr)
+            for tr in traces]
 
 
 def _report(cases):
@@ -270,8 +372,15 @@ def _report(cases):
     }
 
 
+def _select_traces(args):
+    prefix = SMOKE_TRACES if args.smoke else FULL_TRACES
+    open_loop = OPEN_LOOP_SMOKE if args.smoke else OPEN_LOOP_FULL
+    return {"prefix": prefix, "open-loop": open_loop,
+            "all": prefix + open_loop}[args.traces]
+
+
 def _json_main(args) -> int:
-    cases = run_cases(SMOKE_TRACES if args.smoke else FULL_TRACES)
+    cases = run_cases(_select_traces(args))
     report = _report(cases)
     if args.json:
         with open(args.json, "w", encoding="utf-8") as f:
@@ -280,13 +389,20 @@ def _json_main(args) -> int:
         print(f"wrote {args.json}", file=sys.stderr)
     for c in cases:
         m = c["metrics"]
+        if "sustained_tokens_per_s" in m:       # open-loop case
+            print(f"{c['name']},{c['paths']['staged']['wall_us']:.1f},"
+                  f"exact={c['exact']};"
+                  f"depth_peak={m['dispatch_depth_peak']};"
+                  f"tok_s={m['sustained_tokens_per_s']:.1f};"
+                  f"ttft_p99={m['ttft_p99_ms']:.0f}ms")
+            continue
         hit = m.get("prefix_hit_rate", m.get("prefix_hit_rate_info", 0))
         print(f"{c['name']},{c['paths']['prefix_on']['wall_us']:.1f},"
               f"exact={c['exact']};hit_rate={hit:.2f};"
               f"tok_s={m['tokens_per_s']:.1f}")
     if not report["agree"]:
         bad = [c["name"] for c in cases if not c["agree"]]
-        print(f"PREFIX-CACHE DISAGREEMENT: {bad}", file=sys.stderr)
+        print(f"SERVE-TRACE DISAGREEMENT: {bad}", file=sys.stderr)
         return 1
     return 0
 
@@ -304,8 +420,13 @@ def _main():
                          "BENCH_serve.json schema); bare --json prints "
                          "the CSV rows only")
     ap.add_argument("--smoke", action="store_true",
-                    help="small prefix-cache traces only (the CI "
-                         "bench-smoke leg); implies the JSON mode")
+                    help="small traces only (the CI bench-smoke / "
+                         "serve-smoke legs); implies the JSON mode")
+    ap.add_argument("--traces", default="all",
+                    choices=["all", "prefix", "open-loop"],
+                    help="JSON mode trace family: prefix-cache traces, "
+                         "staged-API open-loop traces (dispatch-ahead "
+                         "vs the legacy closed loop), or both")
     args = ap.parse_args()
     if args.json is not None or args.smoke:
         args.json = args.json or None

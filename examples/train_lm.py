@@ -25,7 +25,7 @@ def main():
     print("== MoBA (B=16, k=2 smoke) ==")
     _, moba_losses = train("moba-340m", steps=args.steps, batch=4,
                            seq=256, smoke=not args.full,
-                           moba_impl="sparse", lr=3e-3,
+                           attn_backend="sparse", lr=3e-3,
                            ckpt_dir="/tmp/moba_train_example",
                            resume="auto", save_interval=25)
     print(f"final loss: {moba_losses[-1]:.4f} "

@@ -479,6 +479,26 @@ def parse_backend_spec(spec: str) -> str:
     return name
 
 
+def resolve_backend_spec(spec: Optional[str], *,
+                         default: str = "reference") -> str:
+    """THE backend-spec resolver every surface shares — ``Engine``,
+    ``ShardedEngine``, and the train/serve CLIs all funnel through this
+    one function so their spec handling cannot drift.
+
+    An empty/None ``spec`` falls back to ``default`` (each surface's
+    documented default backend); otherwise the ``name[:option,...]``
+    string is parsed by :func:`parse_backend_spec` (applying options to
+    the registry instance) and the name is validated eagerly against
+    the registry, so an unknown backend fails at config time with a
+    :class:`BackendCapabilityError` instead of inside the first jitted
+    step.  Returns the backend name as given (aliases preserved —
+    ``get`` canonicalizes at use)."""
+    spec = (spec or "").strip() or default
+    name = parse_backend_spec(spec)
+    get(name)
+    return name
+
+
 def resolve(name: str, *, kind: str, phase: str, cache: str = "dense",
             key_conv: bool = False, sharded: bool = False,
             kv_dtype: str = "fp32", adaptive: bool = False

@@ -174,6 +174,147 @@ def serve_stream(arch: str, n_requests: int = 16, rate: float = 8.0,
     return metrics
 
 
+def serve_openloop(arch: str, n_requests: int = 16, every: int = 4,
+                   prompt_range=(16, 96), gen_range=(8, 48),
+                   max_seqs: int = 8, num_pages: int = 0,
+                   smoke: bool = True, attn_backend: str = "reference",
+                   seed: int = 0, prefill_chunk: int = 0,
+                   shards: int = 0, prefix_cache: bool = False,
+                   swap_bytes: int = None, kv_dtype: str = "fp32",
+                   route_policy: str = "static",
+                   dispatch_ahead: int = 1) -> dict:
+    """Open-loop scenario over the STAGED API: one request arrives every
+    ``every`` decode steps whether or not the engine keeps up, driven by
+    ``serving.frontend.run_open_loop`` with dispatch-ahead decode.
+    Reports sustained tokens/s plus TTFT/TPOT percentiles."""
+    from repro.serving import frontend as FE
+    cfg = configs.get_smoke_config(arch) if smoke else configs.get_config(arch)
+    params = T.init_lm(jax.random.PRNGKey(seed), cfg)
+    rng = np.random.default_rng(seed)
+    max_len = _round_up(prompt_range[1] + gen_range[1], 16)
+    kw = {} if swap_bytes is None else {"swap_bytes": swap_bytes}
+    eng = _make_engine(cfg, params, EngineConfig(
+        max_seqs=max_seqs, max_seq_len=max_len, num_pages=num_pages,
+        attn_backend=attn_backend, prefill_chunk=prefill_chunk,
+        prefix_cache=prefix_cache, kv_dtype=kv_dtype,
+        route_policy=route_policy, dispatch_ahead=dispatch_ahead, **kw),
+        shards)
+    trace = [FE.TraceItem(
+        prompt=rng.integers(0, cfg.vocab_size,
+                            int(rng.integers(*prompt_range)),
+                            dtype=np.int32),
+        max_new_tokens=int(rng.integers(*gen_range)),
+        arrival_step=i * every) for i in range(n_requests)]
+    metrics = FE.time_open_loop(eng, trace)
+    metrics.pop("_requests")
+    print(f"open-loop: {metrics['requests']} requests, "
+          f"{metrics['generated_tokens']} tokens in "
+          f"{metrics['wall_s']:.2f}s "
+          f"({metrics['sustained_tokens_per_s']:.1f} tok/s sustained); "
+          f"ttft p50/p99 {metrics['ttft_p50_ms']:.0f}/"
+          f"{metrics['ttft_p99_ms']:.0f} ms; "
+          f"tpot p50/p99 {metrics['tpot_p50_ms']:.1f}/"
+          f"{metrics['tpot_p99_ms']:.1f} ms; "
+          f"pipeline depth peak {metrics['dispatch_depth_peak']} "
+          f"(dispatch_ahead={dispatch_ahead}); "
+          f"{metrics['preemptions']} preemptions")
+    return metrics
+
+
+def serve_http(arch: str, port: int, host: str = "127.0.0.1",
+               max_seqs: int = 8, num_pages: int = 0, smoke: bool = True,
+               attn_backend: str = "reference", seed: int = 0,
+               prefill_chunk: int = 0, shards: int = 0,
+               prefix_cache: bool = False, swap_bytes: int = None,
+               kv_dtype: str = "fp32", route_policy: str = "static",
+               dispatch_ahead: int = 1,
+               max_seq_len: int = 512) -> None:
+    """Minimal stdlib-asyncio HTTP front end over :class:`AsyncFrontend`.
+
+      POST /generate  {"prompt": [ids...], "max_new_tokens": N}
+        → JSON lines, one {"token": t} per generated token, then a
+          final {"done": true, "tokens": [...], "ttft_ms": ...} record
+          (Connection: close framing — curl streams it as it decodes).
+      GET /stats → engine stats snapshot.
+
+    Serves until interrupted.  One engine, many concurrent connections:
+    the frontend's pump task interleaves their requests through the
+    staged API with dispatch-ahead decode."""
+    import asyncio
+    import json
+
+    from repro.serving import frontend as FE
+    cfg = configs.get_smoke_config(arch) if smoke else configs.get_config(arch)
+    params = T.init_lm(jax.random.PRNGKey(seed), cfg)
+    kw = {} if swap_bytes is None else {"swap_bytes": swap_bytes}
+    eng = _make_engine(cfg, params, EngineConfig(
+        max_seqs=max_seqs, max_seq_len=_round_up(max_seq_len, 16),
+        num_pages=num_pages, attn_backend=attn_backend,
+        prefill_chunk=prefill_chunk, prefix_cache=prefix_cache,
+        kv_dtype=kv_dtype, route_policy=route_policy,
+        dispatch_ahead=dispatch_ahead, **kw), shards)
+    fe = FE.AsyncFrontend(eng)
+
+    def _resp(writer, status: str, body: bytes,
+              ctype: str = "application/json") -> None:
+        writer.write(
+            f"HTTP/1.1 {status}\r\nContent-Type: {ctype}\r\n"
+            f"Content-Length: {len(body)}\r\n"
+            f"Connection: close\r\n\r\n".encode() + body)
+
+    async def handle(reader, writer):
+        try:
+            head = await reader.readuntil(b"\r\n\r\n")
+            line, _, rest = head.partition(b"\r\n")
+            method, path, _ = line.decode().split(" ", 2)
+            clen = 0
+            for h in rest.decode().split("\r\n"):
+                if h.lower().startswith("content-length:"):
+                    clen = int(h.split(":", 1)[1])
+            body = await reader.readexactly(clen) if clen else b""
+            if method == "GET" and path == "/stats":
+                _resp(writer, "200 OK",
+                      json.dumps(eng.stats).encode() + b"\n")
+            elif method == "POST" and path == "/generate":
+                spec = json.loads(body)
+                req = fe.submit(
+                    np.asarray(spec["prompt"], np.int32),
+                    max_new_tokens=int(spec.get("max_new_tokens", 32)),
+                    eos_id=spec.get("eos_id"))
+                writer.write(b"HTTP/1.1 200 OK\r\n"
+                             b"Content-Type: application/json\r\n"
+                             b"Connection: close\r\n\r\n")
+                async for tok in fe.stream(req):
+                    writer.write(json.dumps({"token": tok}).encode()
+                                 + b"\n")
+                    await writer.drain()
+                writer.write(json.dumps(
+                    {"done": True, "tokens": list(req.out),
+                     "ttft_ms": (req.t_first - req.arrival) * 1e3,
+                     "preempted": req.n_preempt > 0}).encode() + b"\n")
+            else:
+                _resp(writer, "404 Not Found", b'{"error": "not found"}\n')
+            await writer.drain()
+        except (asyncio.IncompleteReadError, ConnectionError):
+            pass
+        finally:
+            writer.close()
+
+    async def main_async():
+        await fe.start()
+        server = await asyncio.start_server(handle, host, port)
+        addr = server.sockets[0].getsockname()
+        print(f"serving {arch} on http://{addr[0]}:{addr[1]} "
+              f"(POST /generate, GET /stats)")
+        async with server:
+            await server.serve_forever()
+
+    try:
+        asyncio.run(main_async())
+    except KeyboardInterrupt:
+        pass
+
+
 def serve_fixed(arch: str, batch: int = 4, prompt_len: int = 64,
                 gen: int = 32, smoke: bool = True,
                 attn_backend: str = "reference", seed: int = 0):
@@ -181,7 +322,8 @@ def serve_fixed(arch: str, batch: int = 4, prompt_len: int = 64,
     decode.  Baseline for benchmarks and the fallback for recurrent /
     enc-dec / cross-attention archs the paged engine does not cover."""
     from repro.core import backends as B
-    attn_backend = B.parse_backend_spec(attn_backend)
+    attn_backend = B.resolve_backend_spec(attn_backend,
+                                          default="reference")
     cfg = configs.get_smoke_config(arch) if smoke else configs.get_config(arch)
     params = T.init_lm(jax.random.PRNGKey(seed), cfg)
     rng = np.random.default_rng(seed)
@@ -227,7 +369,7 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-0.6b")
     ap.add_argument("--mode", default="stream",
-                    choices=["stream", "batch", "fixed"])
+                    choices=["stream", "openloop", "batch", "fixed"])
     ap.add_argument("--batch", type=int, default=None,
                     help="batch/fixed modes only (default 4)")
     ap.add_argument("--prompt-len", type=int, default=None,
@@ -237,6 +379,17 @@ def main():
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--rate", type=float, default=8.0,
                     help="stream mode: Poisson arrival rate, req/s")
+    ap.add_argument("--every", type=int, default=4,
+                    help="openloop mode: one request arrives every N "
+                         "decode steps (deterministic open-loop load)")
+    ap.add_argument("--dispatch-ahead", type=int, default=1,
+                    help="decode steps the host enqueues before blocking "
+                         "on the previous step's tokens (0 = fully "
+                         "synchronous dispatch)")
+    ap.add_argument("--http", type=int, default=0, metavar="PORT",
+                    help="serve an asyncio HTTP front end on this port "
+                         "instead of running a canned scenario "
+                         "(POST /generate streams JSON-lines tokens)")
     ap.add_argument("--max-seqs", type=int, default=8)
     ap.add_argument("--num-pages", type=int, default=0,
                     help="page pool size (0 = fully provisioned); "
@@ -285,15 +438,40 @@ def main():
                          "REPRO_PALLAS_INTERPRET env var, else compiled "
                          "on TPU hosts and interpret elsewhere")
     ap.add_argument("--moba-impl", default=None,
-                    help="deprecated alias for --attn-backend")
+                    help=argparse.SUPPRESS)   # removed: structured error
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
-    backend = args.attn_backend or args.moba_impl or "reference"
-    if args.moba_impl:
-        print("warning: --moba-impl is deprecated; use --attn-backend",
-              file=sys.stderr)
+    backend = args.attn_backend or "reference"
     try:
-        if args.mode == "stream":
+        if args.moba_impl is not None:
+            raise ServingError(
+                f"--moba-impl was removed; use --attn-backend "
+                f"{args.moba_impl} (same values — no silent precedence "
+                f"between the two flags)")
+        if args.http:
+            serve_http(args.arch, port=args.http,
+                       max_seqs=args.max_seqs, num_pages=args.num_pages,
+                       smoke=args.smoke, attn_backend=backend,
+                       seed=args.seed, prefill_chunk=args.prefill_chunk,
+                       shards=args.shards,
+                       prefix_cache=args.prefix_cache,
+                       swap_bytes=args.swap_bytes,
+                       kv_dtype=args.kv_dtype,
+                       route_policy=args.route_policy,
+                       dispatch_ahead=args.dispatch_ahead)
+        elif args.mode == "openloop":
+            serve_openloop(args.arch, n_requests=args.requests,
+                           every=args.every, max_seqs=args.max_seqs,
+                           num_pages=args.num_pages, smoke=args.smoke,
+                           attn_backend=backend, seed=args.seed,
+                           prefill_chunk=args.prefill_chunk,
+                           shards=args.shards,
+                           prefix_cache=args.prefix_cache,
+                           swap_bytes=args.swap_bytes,
+                           kv_dtype=args.kv_dtype,
+                           route_policy=args.route_policy,
+                           dispatch_ahead=args.dispatch_ahead)
+        elif args.mode == "stream":
             ignored = [n for n, v in (("--batch", args.batch),
                                       ("--prompt-len", args.prompt_len),
                                       ("--gen", args.gen)) if v is not None]

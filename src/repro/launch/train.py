@@ -29,14 +29,19 @@ from repro.optim import adamw
 
 
 def train(arch: str, steps: int = 50, batch: int = 8, seq: int = 512,
-          smoke: bool = True, moba_impl: str = "sparse",
-          attn_backend: str = "",
+          smoke: bool = True, attn_backend: str = "sparse",
+          moba_impl: Optional[str] = None,
           ckpt_dir: str = "", resume: str = "none",
           save_interval: int = 20, lr: float = 6e-4, seed: int = 0,
           microbatch: int = 0, log_every: int = 10,
           block_size: int = 0, top_k: int = 0, key_conv_width: int = 0,
           remat: bool = False, on_step=None, stop_at_step: int = 0,
           total_steps_override: int = 0):
+    if moba_impl is not None:
+        raise ValueError(
+            f"train(moba_impl=...) was removed; pass "
+            f"attn_backend={moba_impl!r} instead (same values — see "
+            f"core.backends.resolve_backend_spec)")
     kw = {}
     if block_size:
         kw["block_size"] = block_size
@@ -70,12 +75,10 @@ def train(arch: str, steps: int = 50, batch: int = 8, seq: int = 512,
             start_step = extra.get("data_step", ck_step)
             print(f"[resume] restored step {ck_step} from {ckpt_dir}")
 
-    backend = moba_impl
-    if attn_backend:
-        # full spec string, e.g. "flash:compiled,flat,kb_tile=64" —
-        # options apply process-wide to the named backend instance
-        from repro.core import backends as B
-        backend = B.parse_backend_spec(attn_backend)
+    # full spec strings allowed, e.g. "flash:compiled,flat,kb_tile=64" —
+    # options apply process-wide to the named backend instance
+    from repro.core import backends as B
+    backend = B.resolve_backend_spec(attn_backend, default="sparse")
     step_fn = jax.jit(S.make_train_step(cfg, tcfg, backend=backend,
                                         remat=remat),
                       donate_argnums=(0, 1))
@@ -132,13 +135,12 @@ def main():
     ap.add_argument("--seq", type=int, default=512)
     ap.add_argument("--smoke", action="store_true",
                     help="reduced config (CPU-scale)")
-    ap.add_argument("--moba-impl", default="sparse",
-                    choices=["reference", "sparse", "kernel", "sp"])
-    ap.add_argument("--attn-backend", default="",
-                    help="backend spec overriding --moba-impl, e.g. "
-                         "flash:compiled | flash:flat | "
-                         "flash:grouped,kb_tile=64 "
-                         "(see core.backends.parse_backend_spec)")
+    ap.add_argument("--moba-impl", default=None,
+                    help=argparse.SUPPRESS)   # removed: structured error
+    ap.add_argument("--attn-backend", default="sparse",
+                    help="backend spec, e.g. sparse | flash:compiled | "
+                         "flash:flat | flash:grouped,kb_tile=64 "
+                         "(see core.backends.resolve_backend_spec)")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--resume", default="none", choices=["none", "auto"])
     ap.add_argument("--save-interval", type=int, default=20)
@@ -149,9 +151,11 @@ def main():
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--key-conv", type=int, default=0)
     args = ap.parse_args()
+    if args.moba_impl is not None:
+        ap.error(f"--moba-impl was removed; use "
+                 f"--attn-backend {args.moba_impl} (same values)")
     train(args.arch, steps=args.steps, batch=args.batch, seq=args.seq,
-          smoke=args.smoke, moba_impl=args.moba_impl,
-          attn_backend=args.attn_backend,
+          smoke=args.smoke, attn_backend=args.attn_backend,
           ckpt_dir=args.ckpt_dir, resume=args.resume,
           save_interval=args.save_interval, lr=args.lr, seed=args.seed,
           microbatch=args.microbatch, block_size=args.block_size,

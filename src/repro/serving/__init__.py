@@ -12,16 +12,23 @@ Layering (DESIGN.md §4):
     per-shard pools over the mesh ``data`` axis, a least-loaded host
     router, shard_map step functions, and a context-parallel fallback
     for requests longer than one shard's pool.
+  * :mod:`repro.serving.frontend` — drivers over the staged API
+    (``prefill`` / ``insert`` / ``generate_step``): the deterministic
+    open-loop trace harness and the asyncio streaming front end.
 """
-__all__ = ["Engine", "EngineConfig", "Request", "Router", "Scheduler",
-           "ShardedEngine"]
+__all__ = ["AsyncFrontend", "Engine", "EngineConfig", "Prefix",
+           "Request", "Router", "Scheduler", "ShardedEngine",
+           "TraceItem", "run_open_loop"]
 
 
 def __getattr__(name):  # lazy: models.layers imports paged_cache at call
     # time; pulling the engine in eagerly would cycle back into models.
-    if name in ("Engine", "EngineConfig"):
+    if name in ("Engine", "EngineConfig", "Prefix"):
         from repro.serving import engine
         return getattr(engine, name)
+    if name in ("AsyncFrontend", "TraceItem", "run_open_loop"):
+        from repro.serving import frontend
+        return getattr(frontend, name)
     if name in ("Router", "ShardedEngine"):
         from repro.serving import sharded
         return getattr(sharded, name)

@@ -2,8 +2,26 @@
 
 The engine owns the device state (params + paged caches) and two jitted
 step functions; the scheduler owns the host state (free pages, block
-table, request queues).  Each :meth:`step` runs at most one ragged
-prefill batch and one decode batch over every running sequence slot.
+table, request queues).  The public surface is STAGED (DESIGN.md §9):
+
+  * :meth:`Engine.prefill` — admit one request, cache its whole context
+    (all chunks, applying any COW/swap/ring cache ops admission
+    scheduled) and sample its first token; returns a :class:`Prefix`
+    handle, or None when the pool cannot host it right now.
+  * :meth:`Engine.insert` — bind a prefilled request into the decode
+    batch at its slot.  Cheap and pipeline-safe: it only flips state
+    and patches the device current-token vector.
+  * :meth:`Engine.generate_step` — plan growth/preemption, dispatch one
+    decode step over every bound slot, and return newly observed
+    ``(request, token)`` pairs.  With ``dispatch_ahead > 0`` the host
+    enqueues up to that many decode steps before blocking on the oldest
+    one's tokens (JAX async dispatch keeps the device busy while the
+    host plans); tokens then surface one pipeline-depth later.
+
+The legacy closed loop — :meth:`step` / :meth:`run` — is reimplemented
+on top of the stages as a thin synchronous driver (admission via
+``Scheduler.plan_prefills``, drain every step), so both drive patterns
+produce bit-identical greedy streams.
 
 Shapes are kept jit-stable: the decode batch is always the full
 ``max_seqs`` slot array with an active mask, and prefill batches are
@@ -19,10 +37,11 @@ buffers, DESIGN.md §4), and chunked prefill (DESIGN.md §6).  Recurrent
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import math
 import time
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -52,13 +71,14 @@ def prefill_bucket(n: int, page_size: int) -> int:
     return b
 
 
-def parse_attn_backend(spec: str) -> str:
-    """``core.backends.parse_backend_spec`` with admission-style errors:
-    a bad option string (e.g. ``flash:typo``) fails engine construction
-    as a structured :class:`UnsupportedFeatureError`, like every other
-    admission-time backend problem."""
+def resolve_engine_backend(spec: str, default: str) -> str:
+    """``core.backends.resolve_backend_spec`` with admission-style
+    errors: an unknown name or bad option string (e.g. ``flash:typo``)
+    fails engine construction as a structured
+    :class:`UnsupportedFeatureError`, like every other admission-time
+    backend problem."""
     try:
-        return B.parse_backend_spec(spec)
+        return B.resolve_backend_spec(spec, default=default)
     except B.BackendCapabilityError as e:
         raise UnsupportedFeatureError("attn_backend", str(e)) from e
 
@@ -186,11 +206,14 @@ def build_prefill_batch(sched, reqs: List[Request], takes: List[int],
 
 
 def build_decode_batch(reqs: List[Request], max_seqs: int):
-    """Per-slot (kv_len, active) arrays for one decode step."""
+    """Per-slot (kv_len, active) arrays for one decode step.  ``kv_len``
+    counts dispatched-ahead steps still in flight: they already wrote
+    the positions past ``cache_len``, so the next step attends over (and
+    writes after) them.  Zero in-flight reduces to the legacy batch."""
     kv_len = np.zeros((max_seqs,), np.int32)
     active = np.zeros((max_seqs,), bool)
     for r in reqs:
-        kv_len[r.slot] = r.cache_len
+        kv_len[r.slot] = r.cache_len + r.dispatched
         active[r.slot] = True
     return kv_len, active
 
@@ -209,14 +232,6 @@ def record_prefill(reqs: List[Request], takes: List[int], tok: np.ndarray,
         cur_tok[r.slot] = tok[i]
         if r.t_first is None:
             r.t_first = wall
-
-
-def record_decode(reqs: List[Request], tok: np.ndarray,
-                  cur_tok: np.ndarray) -> None:
-    for r in reqs:
-        r.cache_len += 1
-        r.out.append(int(tok[r.slot]))
-        cur_tok[r.slot] = tok[r.slot]
 
 
 def needs_key_conv(cfg: ModelConfig) -> bool:
@@ -360,15 +375,48 @@ class EngineConfig:
     #                                    routing-profile artifact) —
     #                                    core/adaptive.py, DESIGN.md §8
     attn_backend: str = ""             # registered backend (core.backends);
-    #                                    "" → moba_impl or "reference".
-    #                                    A "name:option,..." spec (e.g.
+    #                                    "" → "reference" ("sharded" for
+    #                                    the sharded engine).  A
+    #                                    "name:option,..." spec (e.g.
     #                                    "flash:compiled" or
     #                                    "flash:flat,kb_tile=64")
     #                                    configures the registry instance
     #                                    PROCESS-WIDE — the last spec
     #                                    parsed wins for every engine
     #                                    sharing the process
-    moba_impl: str = ""                # deprecated alias for attn_backend
+    dispatch_ahead: int = 1            # decode steps the host may enqueue
+    #                                    before blocking on the oldest
+    #                                    one's tokens (generate_step
+    #                                    pipelining; 0 = fully
+    #                                    synchronous).  The legacy
+    #                                    step()/run() driver drains every
+    #                                    iteration regardless.
+    # moba_impl was removed (the long-deprecated alias for attn_backend);
+    # the InitVar keeps the keyword rejectable with a shaped error
+    # instead of a bare TypeError
+    moba_impl: dataclasses.InitVar[Optional[str]] = None
+
+    def __post_init__(self, moba_impl):
+        if moba_impl:
+            raise UnsupportedFeatureError(
+                "moba_impl",
+                f"EngineConfig.moba_impl was removed; pass "
+                f"attn_backend={moba_impl!r} instead (same values — see "
+                f"core.backends.resolve_backend_spec)")
+
+
+@dataclasses.dataclass
+class Prefix:
+    """Handle returned by :meth:`Engine.prefill`: the request's whole
+    context is cached in the paged pool at ``slot`` and its first token
+    is sampled (``token`` — stream it immediately; it is the TTFT
+    token).  Pass to :meth:`Engine.insert` to join the decode batch.
+    The handle goes stale if the request is preempted before insertion
+    (``insert`` then returns False and the caller re-prefills)."""
+    req: Request
+    token: int
+    slot: int
+    shard: int = -1    # owning shard (sharded engine); -1 = single-host
 
 
 class Engine:
@@ -380,12 +428,14 @@ class Engine:
         self.cfg = cfg
         self.params = params
         self.ecfg = ecfg = ecfg or EngineConfig()
-        # same precedence as the serve.py CLI shim: an explicitly set
-        # attn_backend always wins; the deprecated alias applies only
-        # when the new field is unset.  Spec options ("flash:compiled")
-        # are applied to the backend instance here.
-        self.attn_backend = parse_attn_backend(
-            ecfg.attn_backend or ecfg.moba_impl or "reference")
+        # one resolver for every surface (CLIs included): empty spec
+        # falls back to the engine default; options ("flash:compiled")
+        # are applied to the backend instance here
+        self.attn_backend = resolve_engine_backend(ecfg.attn_backend,
+                                                   "reference")
+        if ecfg.dispatch_ahead < 0:
+            raise ServingError(
+                f"dispatch_ahead must be >= 0, got {ecfg.dispatch_ahead}")
         if ecfg.kv_dtype not in Q.KV_DTYPES:
             raise ServingError(
                 f"unknown kv_dtype {ecfg.kv_dtype!r}; "
@@ -447,24 +497,47 @@ class Engine:
         self._next_rid = 0
         self._t0 = None
         self.finished: List[Request] = []
+        # dispatch-ahead pipeline: (batch membership, device tokens) per
+        # dispatched-but-unobserved decode step, oldest first.  _tok_dev
+        # is the device-resident current-token vector the chain feeds on
+        # (None = rebuild from the host copy, which is only safe when
+        # the pipeline is empty).
+        self._inflight: Deque[Tuple[List[Request], jax.Array]] = \
+            collections.deque()
+        self._tok_dev = None
+        self._emitted: List[Tuple[Request, int]] = []
+        self.sched.before_preempt = self._sync_for_preempt
         # perf counters (wall seconds / token counts); the prefix/swap
         # keys mirror the scheduler's counters each step so the dict is
         # one stable, benchmark-consumable schema
         self.stats = {"prefill_s": 0.0, "decode_s": 0.0,
                       "prefill_tokens": 0, "decode_steps": 0,
                       "decode_tokens": 0, "preemptions": 0,
-                      "tree_evictions": 0, "pages_in_use_peak": 0}
+                      "tree_evictions": 0, "pages_in_use_peak": 0,
+                      "dispatch_depth_peak": 0, "pipeline_drains": 0}
         self.stats.update(self.sched.stats)
 
     # ------------------------------------------------------------- intake
-    def submit(self, prompt: Sequence[int], max_new_tokens: int,
-               arrival: float = 0.0, eos_id: Optional[int] = None
-               ) -> Request:
+    def make_request(self, prompt: Sequence[int], max_new_tokens: int,
+                     arrival: float = 0.0, eos_id: Optional[int] = None
+                     ) -> Request:
+        """Build (and validate, but do NOT queue) a request — the staged
+        intake.  Feed it to :meth:`prefill` when the caller decides, or
+        to ``self.sched.submit`` via :meth:`submit` for the legacy
+        closed loop."""
         req = Request(rid=self._next_rid,
                       prompt=np.asarray(prompt, np.int32),
                       max_new_tokens=max_new_tokens, arrival=arrival,
                       eos_id=eos_id)
         self._next_rid += 1
+        self.sched.validate(req)
+        return req
+
+    def submit(self, prompt: Sequence[int], max_new_tokens: int,
+               arrival: float = 0.0, eos_id: Optional[int] = None
+               ) -> Request:
+        req = self.make_request(prompt, max_new_tokens, arrival=arrival,
+                                eos_id=eos_id)
         self.sched.submit(req)
         return req
 
@@ -496,59 +569,238 @@ class Engine:
         self.stats["prefill_tokens"] += int(sum(takes))
         record_prefill(reqs, takes, tok, self._cur_tok, self._wall())
 
-    def _run_decode(self, reqs: List[Request], now: float) -> None:
-        kv_len, active = build_decode_batch(reqs, self.ecfg.max_seqs)
-        t0 = time.perf_counter()
-        tok, self.caches = self._decode(
-            self.params, jnp.asarray(self._cur_tok), self.caches,
-            jnp.asarray(self.sched.block_table), jnp.asarray(kv_len),
-            jnp.asarray(active))
-        tok = np.asarray(tok)
-        self.stats["decode_s"] += time.perf_counter() - t0
-        self.stats["decode_steps"] += 1
-        self.stats["decode_tokens"] += len(reqs)
-        record_decode(reqs, tok, self._cur_tok)
-
     def _wall(self) -> float:
         return (0.0 if self._t0 is None
                 else time.perf_counter() - self._t0)
 
-    def step(self, now: float = float("inf")) -> Dict:
-        """One engine iteration: admit (applying COW copies, swap
-        restores and ring loads the plan scheduled) + prefill, then
-        decode all running."""
-        plan = self.sched.plan_step(now)
-        self.stats["preemptions"] += len(plan.preempted)
-        self.caches = drain_cache_ops(self.caches, self.sched,
-                                      self.swap_store, self.page_size)
-        if plan.prefills:
-            self._run_prefill(plan.prefills, now)
-            for r in plan.prefills:       # newly cached full pages join
-                self.sched.note_cached(r)  # the prefix tree immediately
-        # recomputed after prefill so every request whose context
-        # completed this step — one-shot admissions and final chunks
-        # alike — joins the decode batch in the same iteration
-        decodes = [r for r in self.sched.running
-                   if r.state == "running" and not r.done]
-        if decodes:
-            self._run_decode(decodes, now)
-            if self.ecfg.prefix_cache:
-                for r in decodes:         # page-boundary crossings make
-                    if r.cache_len % self.page_size == 0:   # a page full
-                        self.sched.note_cached(r)
-        done = [r for r in list(self.sched.running) if r.done]
-        for r in done:
+    # ------------------------------------------- dispatch-ahead pipeline
+    def _dispatch_decode(self, reqs: List[Request]) -> None:
+        """Enqueue one jitted decode step over ``reqs`` WITHOUT blocking
+        on its tokens.  The current-token vector chains on device
+        (``jnp.where`` keeps inactive slots), so back-to-back dispatches
+        never round-trip through the host."""
+        kv_len, active = build_decode_batch(reqs, self.ecfg.max_seqs)
+        if self._tok_dev is None:       # pipeline empty: host copy is
+            self._tok_dev = jnp.asarray(self._cur_tok)   # authoritative
+        t0 = time.perf_counter()
+        tok, self.caches = self._decode(
+            self.params, self._tok_dev, self.caches,
+            jnp.asarray(self.sched.block_table), jnp.asarray(kv_len),
+            jnp.asarray(active))
+        self._tok_dev = jnp.where(jnp.asarray(active), tok, self._tok_dev)
+        self.stats["decode_s"] += time.perf_counter() - t0
+        self.stats["decode_steps"] += 1
+        for r in reqs:
+            r.dispatched += 1
+        self._inflight.append((list(reqs), tok))
+        self.stats["dispatch_depth_peak"] = max(
+            self.stats["dispatch_depth_peak"], len(self._inflight))
+
+    def _observe_one(self) -> None:
+        """Block on the OLDEST in-flight decode step and fold its tokens
+        into host state.  Requests that hit EOS at an earlier
+        observation skip recording: their overrun steps computed (and
+        wrote KV for) garbage past the stream's end, all inside pages
+        still reserved for them and past every offset the prefix tree
+        publishes — discarded, not replayed."""
+        reqs, tok_dev = self._inflight.popleft()
+        t0 = time.perf_counter()
+        tok = np.asarray(tok_dev)       # the only host-device sync point
+        self.stats["decode_s"] += time.perf_counter() - t0
+        for r in reqs:
+            r.dispatched -= 1
+            if r.state != "running" or r.done:
+                continue
+            r.cache_len += 1
+            t = int(tok[r.slot])
+            r.out.append(t)
+            self._cur_tok[r.slot] = t
+            self.stats["decode_tokens"] += 1
+            if r.t_first is None:
+                r.t_first = self._wall()
+            if self.ecfg.prefix_cache \
+                    and r.cache_len % self.page_size == 0:
+                self.sched.note_cached(r)   # page-boundary crossing
+            self._emitted.append((r, t))
+        if not self._inflight:
+            # pipeline empty → the host vector is authoritative again;
+            # drop the device chain so the next dispatch rebuilds it
+            # (new tenants of recycled slots get their prefill token,
+            # not the previous occupant's last one)
+            self._tok_dev = None
+
+    def drain(self) -> None:
+        """Observe every in-flight decode step.  Afterwards host
+        bookkeeping (``cache_len``, ``out``, ``_cur_tok``) is consistent
+        with device state — required before preemption snapshots, and
+        what the legacy ``step()`` does each iteration for synchronous
+        semantics."""
+        if self._inflight:
+            self.stats["pipeline_drains"] += 1
+        while self._inflight:
+            self._observe_one()
+
+    def _sync_for_preempt(self) -> None:
+        """``Scheduler.before_preempt`` hook: drain the pipeline and
+        retire finished requests (freeing their pages) so preemption
+        decisions see host-consistent state — and may become moot."""
+        self.drain()
+        self._finish_done()
+
+    def _finish_done(self) -> None:
+        for r in [r for r in self.sched.running
+                  if r.state == "running" and r.done
+                  and r.dispatched == 0]:
             self.sched.finish(r)
             r.t_done = self._wall()
             self.finished.append(r)
+
+    def _update_stats(self) -> None:
         self.stats.update(self.sched.stats)
         if self.sched.tree is not None:
             self.stats["tree_evictions"] = self.sched.tree.evictions
         self.stats["pages_in_use_peak"] = max(
             self.stats["pages_in_use_peak"],
             self.num_pages - self.sched.alloc.available)
-        return {"prefilled": len(plan.prefills), "decoded": len(decodes),
-                "finished": len(done), "preempted": len(plan.preempted)}
+
+    # ------------------------------------------------------------- stages
+    def prefill(self, req: Request, now: float = float("inf")
+                ) -> Optional[Prefix]:
+        """Stage 1: admit ``req``, cache its whole context (all chunks
+        under chunked prefill, with admission's COW copies / swap
+        restores / ring loads applied first) and sample its first token.
+        Returns None when the pool or slots cannot host it right now —
+        retry after :meth:`generate_step` frees capacity.  Accepts both
+        fresh requests (:meth:`make_request`) and preempted ones waiting
+        for replay; pipeline-safe, so admission never stalls decode."""
+        if req.state not in ("waiting",) or req.slot >= 0:
+            raise ServingError(
+                f"request {req.rid}: prefill() on state {req.state!r} "
+                f"(slot {req.slot}); only waiting requests stage")
+        if self._t0 is None:
+            self._t0 = time.perf_counter()
+        queued = req in self.sched.waiting      # preemption replay
+        if queued:
+            self.sched.waiting.remove(req)
+        ok = self.sched.admit(req)
+        if not ok:
+            # finished-but-unobserved requests may be holding the pages
+            self._sync_for_preempt()
+            ok = self.sched.admit(req)
+        if not ok:
+            if queued:      # keep the victim's replay priority
+                self.sched.waiting.appendleft(req)
+            return None
+        # snapshot: the final chunk's record_prefill appends the sampled
+        # token to ``out``, growing ``context`` by one — the live value
+        # would never satisfy the loop condition
+        target = len(req.context)
+        first = True
+        while req.cache_len < target:
+            if not first:
+                # between chunks the plan-time tail-ownership guarantee:
+                # cannot fail, every page was reserved at admission
+                ok = self.sched._cow_tail(req)
+                assert ok, "chunk continuation pages reserved at admission"
+            self.caches = drain_cache_ops(self.caches, self.sched,
+                                          self.swap_store, self.page_size)
+            self._run_prefill([req], now)
+            self.sched.note_cached(req)
+            first = False
+        req.state = "prefilled"
+        self._update_stats()
+        return Prefix(req=req, token=int(req.out[-1]), slot=req.slot)
+
+    def insert(self, prefix: Prefix, slot: Optional[int] = None) -> bool:
+        """Stage 2: bind a prefilled request into the decode batch.
+        Returns False when the handle went stale (the request was
+        preempted between prefill and insert — re-prefill it).  ``slot``
+        is accepted for API symmetry but must match the slot admission
+        bound at prefill: pages were written there."""
+        req = prefix.req
+        if slot is not None and slot != req.slot:
+            raise ServingError(
+                f"request {req.rid}: insert at slot {slot} but its pages "
+                f"live at slot {req.slot}; slots bind at prefill")
+        if req.state != "prefilled":
+            return False
+        req.state = "running"
+        tok = int(req.out[-1])
+        self._cur_tok[req.slot] = tok
+        if self._tok_dev is not None:   # patch mid-pipeline: in-flight
+            # steps never reference this slot, so a point update is safe
+            self._tok_dev = self._tok_dev.at[req.slot].set(tok)
+        return True
+
+    def generate_step(self, now: float = float("inf")
+                      ) -> List[Tuple[Request, int]]:
+        """Stage 3: plan growth/preemption over the bound slots,
+        dispatch one decode step, and return the ``(request, token)``
+        pairs observed this call.  With ``dispatch_ahead > 0`` the
+        dispatched step is only awaited once more than that many are in
+        flight, so tokens surface one pipeline-depth later (keep
+        calling with an empty batch to flush the tail).  Tokens per
+        request are identical to the legacy ``run()`` loop's — greedy
+        decode is independent of batch composition."""
+        preempted = self.sched.plan_decode(now)
+        self.stats["preemptions"] += len(preempted)
+        self.caches = drain_cache_ops(self.caches, self.sched,
+                                      self.swap_store, self.page_size)
+        decodes = [r for r in self.sched.running
+                   if r.state == "running" and not r.budget_spent]
+        if decodes:
+            self._dispatch_decode(decodes)
+        depth = self.ecfg.dispatch_ahead if decodes else 0
+        while len(self._inflight) > depth:
+            self._observe_one()
+        self._finish_done()
+        self._update_stats()
+        out, self._emitted = self._emitted, []
+        return out
+
+    def has_work(self) -> bool:
+        """Queued, running, or in-flight work remains (in-flight counts:
+        the pipeline tail still owes observations)."""
+        return self.sched.has_work() or bool(self._inflight)
+
+    @property
+    def preempted_waiting(self) -> List[Request]:
+        """Preemption victims awaiting re-prefill, in replay order —
+        the staged driver's signal to call :meth:`prefill` again (the
+        legacy loop re-admits them itself)."""
+        return [r for r in self.sched.waiting if r.n_preempt > 0]
+
+    # ------------------------------------------------- legacy closed loop
+    def step(self, now: float = float("inf")) -> Dict:
+        """One legacy engine iteration, now a thin driver over the
+        stages: admit + prefill (applying COW copies, swap restores and
+        ring loads the plan scheduled), dispatch one decode step over
+        all running, observe it synchronously."""
+        self.drain()    # synchronous semantics if stages interleaved
+        preempted = self.sched.plan_decode(now)
+        self.stats["preemptions"] += len(preempted)
+        prefills = self.sched.plan_prefills(now)
+        self.caches = drain_cache_ops(self.caches, self.sched,
+                                      self.swap_store, self.page_size)
+        if prefills:
+            self._run_prefill(prefills, now)
+            for r in prefills:            # newly cached full pages join
+                self.sched.note_cached(r)  # the prefix tree immediately
+        # recomputed after prefill so every request whose context
+        # completed this step — one-shot admissions and final chunks
+        # alike — joins the decode batch in the same iteration
+        decodes = [r for r in self.sched.running
+                   if r.state == "running" and not r.budget_spent]
+        if decodes:
+            self._dispatch_decode(decodes)
+            self.drain()
+        n0 = len(self.finished)
+        self._finish_done()
+        n_done = len(self.finished) - n0
+        self._emitted.clear()      # step() reports counts, not streams
+        self._update_stats()
+        return {"prefilled": len(prefills), "decoded": len(decodes),
+                "finished": n_done, "preempted": len(preempted)}
 
     # ---------------------------------------------------------------- run
     def run(self, realtime: bool = False) -> List[Request]:
@@ -560,7 +812,7 @@ class Engine:
         n0 = len(self.finished)
         if self._t0 is None:     # keep one clock base across run() calls
             self._t0 = time.perf_counter()
-        while self.sched.has_work():
+        while self.has_work():
             now = self._wall() if realtime else float("inf")
             self.step(now=now)
             if realtime and not self.sched.running \

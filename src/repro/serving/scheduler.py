@@ -67,13 +67,23 @@ class Request:
     eos_id: Optional[int] = None
     # runtime state
     out: List[int] = dataclasses.field(default_factory=list)
-    state: str = "waiting"              # waiting | prefill | running | done
+    state: str = "waiting"              # waiting | prefill | prefilled |
+    #                                     running | done
     #   "prefill": admitted under chunked prefill with context tokens
     #   still to cache; holds a slot and pages but does not decode yet.
+    #   "prefilled": staged-API holding state — context fully cached and
+    #   first token sampled (engine.prefill), awaiting engine.insert;
+    #   holds its slot and pages but does not decode yet.
     slot: int = -1
     shard: int = -1                     # owning shard (sharded engine);
     #   -1 = single-host or context-parallel fallback
     cache_len: int = 0                  # tokens whose KV is in the cache
+    #   and *observed* by the host; dispatch-ahead decode steps that are
+    #   still in flight have written further — see ``dispatched``
+    dispatched: int = 0                 # decode steps dispatched to the
+    #   device but not yet observed (dispatch-ahead pipelining).  Each
+    #   wrote one KV position past ``cache_len``; observation moves it
+    #   into ``cache_len``/``out``.  Always 0 between synchronous steps.
     n_preempt: int = 0
     prefix_len: int = 0                 # tokens served from the prefix
     #   cache at the most recent admission (0 = no hit / cache off)
@@ -98,6 +108,17 @@ class Request:
             return True
         return (self.eos_id is not None and self.out
                 and self.out[-1] == self.eos_id)
+
+    @property
+    def budget_spent(self) -> bool:
+        """Generation budget exhausted *counting in-flight steps*: a
+        request whose observed tokens plus dispatched-ahead decode steps
+        cover ``max_new_tokens`` (or that already hit EOS) must not
+        enter another decode batch — the pipeline would overrun its
+        reserved pages.  Equals :attr:`done` when nothing is in flight,
+        so the synchronous driver is unchanged."""
+        return (self.done
+                or len(self.out) + self.dispatched >= self.max_new_tokens)
 
 
 class PagePool:
@@ -224,9 +245,17 @@ class Scheduler:
                       "prefix_hit_tokens": 0, "prefix_prompt_tokens": 0,
                       "cow_copies": 0, "swap_saves": 0,
                       "swap_restores": 0, "swap_fallbacks": 0}
+        # dispatch-ahead hook: called once per plan before the first
+        # preemption (and before the victim's pages are snapshotted), so
+        # the engine can observe in-flight decode steps and retire
+        # finished requests first — preemption then always sees
+        # host-consistent state and may even become unnecessary
+        self.before_preempt = None
 
     # ------------------------------------------------------------- intake
-    def submit(self, req: Request) -> None:
+    def validate(self, req: Request) -> None:
+        """Raise a shaped error when ``req`` can never be served by this
+        scheduler's pool, no matter how empty it gets."""
         need = len(req.prompt) + req.max_new_tokens
         cap = self.max_pages_per_seq * self.page_size
         if need > cap:
@@ -238,6 +267,9 @@ class Scheduler:
                 f"request {req.rid} can never fit: needs "
                 f"{self._pages_for(need)} pages, pool has "
                 f"{self.alloc.num_pages}")
+
+    def submit(self, req: Request) -> None:
+        self.validate(req)
         self.waiting.append(req)
 
     def has_work(self) -> bool:
@@ -322,10 +354,13 @@ class Scheduler:
         caller preempts and retries).  Page-aligned positions always
         open a freshly allocated page, so only mid-page writes can hit a
         shared page."""
-        off = req.cache_len % self.page_size
+        # next write position counts dispatched-ahead steps still in
+        # flight — they already wrote the positions past cache_len
+        pos = req.cache_len + req.dispatched
+        off = pos % self.page_size
         if off == 0:
             return True
-        j = req.cache_len // self.page_size
+        j = pos // self.page_size
         pages = self._seq_pages[req.slot]
         if j >= len(pages) or self.alloc.refcount(pages[j]) == 1:
             return True
@@ -357,6 +392,13 @@ class Scheduler:
         for victim in reversed(self.running):
             if victim is spare and len(self.running) > 1:
                 continue
+            # the before_preempt hook drained the pipeline, so the
+            # victim's host state (cache_len, out) is authoritative —
+            # an in-flight victim would lose unobserved tokens from its
+            # swap snapshot and corrupt the observation bookkeeping
+            assert victim.dispatched == 0, \
+                f"preempting request {victim.rid} with " \
+                f"{victim.dispatched} in-flight decode steps"
             self.running.remove(victim)
             saved = False
             if self.swap is not None and victim.cache_len > 0 \
@@ -407,9 +449,16 @@ class Scheduler:
         return ops
 
     # --------------------------------------------------------------- plan
-    def _admit(self, req: Request) -> bool:
-        """Admission attempt: prefix-match, reserve pages, map shared
-        ones.  False = insufficient pages (FIFO head-of-line blocks)."""
+    def admit(self, req: Request) -> bool:
+        """Admission attempt: prefix-match, reserve pages for the whole
+        context plus one decode token, map shared ones.  False =
+        insufficient pages right now (the legacy planner's FIFO
+        head-of-line blocks; the staged API retries after capacity
+        frees).  The caller owns queue membership — ``req`` must NOT be
+        on ``waiting`` (``plan_prefills`` pops it on success; the staged
+        ``Engine.prefill`` admits arbitrary requests directly)."""
+        if not self._free_slots:
+            return False
         ctx = len(req.context)
         swapped = req.swap_data is not None
         matched_pages: List[int] = []
@@ -432,7 +481,6 @@ class Scheduler:
             for p in full_pages:
                 self.alloc.deref(p)
             return False
-        self.waiting.popleft()
         req.slot = self._free_slots.pop()
         seq_pages = self._seq_pages[req.slot]
         for j, p in enumerate(full_pages):
@@ -474,18 +522,35 @@ class Scheduler:
         self.running.append(req)
         return True
 
-    def plan_step(self, now: float = float("inf")) -> StepPlan:
+    def plan_decode(self, now: float = float("inf")) -> List[Request]:
+        """Growth half of the plan, callable at decode cadence without
+        admitting anyone: every running sequence that will decode next
+        step gets room for one more token — and exclusive ownership of
+        the page it writes into (COW) — preempting from the back under
+        pressure (oldest survives).  Requests whose generation budget is
+        already covered by dispatched-ahead steps are skipped: they
+        never decode again, so growing them would waste pages (and
+        could preempt someone for nothing).  Returns the victims."""
         preempted: List[Request] = []
-
-        # 1. growth: every running sequence gets room for one more token
-        #    — and exclusive ownership of the page it writes into (COW)
-        #    — preempting from the back under pressure (oldest survives).
+        drained = False
         for req in list(self.running):
             if req.state not in ("running", "prefill"):
                 continue
-            while not (self._cow_tail(req)
-                       and (req.state != "running"
-                            or self._grow_to(req, req.cache_len + 1))):
+            if req.state == "running" and req.budget_spent:
+                continue
+            while req.state in ("running", "prefill") and not (
+                    self._cow_tail(req)
+                    and (req.state != "running"
+                         or self._grow_to(
+                             req, req.cache_len + req.dispatched + 1))):
+                if not drained and self.before_preempt is not None:
+                    # observe the in-flight pipeline (retiring finished
+                    # requests frees their pages) before evicting anyone
+                    # — the retry below may then succeed without a
+                    # victim, and any victim has nothing in flight
+                    self.before_preempt()
+                    drained = True
+                    continue
                 victim = self._preempt_youngest(spare=req)
                 if victim is None or victim is req:
                     if victim is None:       # cannot happen: req holds pages
@@ -493,17 +558,20 @@ class Scheduler:
                     preempted.append(victim)
                     break
                 preempted.append(victim)
-            if req.state not in ("running", "prefill"):
-                continue                     # req itself was the victim
+        return preempted
 
-        # 2. chunk continuation: admitted requests with context still to
+    def plan_prefills(self, now: float = float("inf")) -> List[Request]:
+        """Admission half of the plan, decoupled from decode cadence —
+        the legacy ``step()`` calls it every iteration, the staged API
+        not at all (``Engine.prefill`` admits directly)."""
+        # 1. chunk continuation: admitted requests with context still to
         #    cache run their next chunk before any new admission (they
         #    already hold slots and pages); overflow waits a step.
         prefills: List[Request] = [r for r in self.running
                                    if r.state == "prefill"
                                    ][:self.max_prefill_batch]
 
-        # 3. admission (FIFO, arrivals only): whole context + one decode
+        # 2. admission (FIFO, arrivals only): whole context + one decode
         #    token must fit (chunking spreads the *compute*, not the
         #    reservation); prefix hits map cached pages and reserve only
         #    the rest.
@@ -511,10 +579,17 @@ class Scheduler:
                and len(prefills) < self.max_prefill_batch
                and self.waiting[0].arrival <= now):
             req = self.waiting[0]
-            if not self._admit(req):
+            if not self.admit(req):
                 break                        # FIFO head-of-line blocking
+            self.waiting.popleft()
             prefills.append(req)
+        return prefills
 
+    def plan_step(self, now: float = float("inf")) -> StepPlan:
+        """Legacy one-shot plan: growth + admission in one call — kept
+        as the compatibility surface over the decoupled halves."""
+        preempted = self.plan_decode(now)
+        prefills = self.plan_prefills(now)
         decodes = [r for r in self.running if r.state == "running"]
         return StepPlan(prefills=prefills, decodes=decodes,
                         preempted=preempted)

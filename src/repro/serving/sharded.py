@@ -33,7 +33,7 @@ from __future__ import annotations
 
 import collections
 import time
-from typing import Deque, Dict, List, Optional, Sequence
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -46,13 +46,13 @@ from repro.distributed import sharding as shmod
 from repro.launch import steps as S
 from repro.models import transformer as T
 from repro.serving import paged_cache as PC
-from repro.serving.engine import (EngineConfig, HostSwapStore,
+from repro.serving.engine import (EngineConfig, HostSwapStore, Prefix,
                                   admission_capability_check,
                                   build_decode_batch, build_prefill_batch,
                                   build_route_profile, drain_cache_ops,
-                                  needs_key_conv, parse_attn_backend,
-                                  prefill_bucket, prefill_takes,
-                                  record_decode, record_prefill,
+                                  needs_key_conv, prefill_bucket,
+                                  prefill_takes, record_prefill,
+                                  resolve_engine_backend,
                                   resolve_pool_sizes, unsupported_reason)
 from repro.serving.scheduler import (Request, Scheduler, ServingError,
                                      UnsupportedFeatureError)
@@ -98,8 +98,11 @@ class ShardedEngine:
             raise UnsupportedFeatureError(*reason)
         self.cfg = cfg
         self.ecfg = ecfg = ecfg or EngineConfig()
-        self.attn_backend = parse_attn_backend(
-            ecfg.attn_backend or ecfg.moba_impl or "sharded")
+        self.attn_backend = resolve_engine_backend(
+            ecfg.attn_backend, "sharded")
+        if ecfg.dispatch_ahead < 0:
+            raise ServingError(
+                f"dispatch_ahead must be >= 0, got {ecfg.dispatch_ahead}")
         if mesh is None:
             if n_shards > len(jax.devices()):
                 raise ServingError(
@@ -184,11 +187,21 @@ class ShardedEngine:
         self._next_rid = 0
         self._t0 = None
         self.finished: List[Request] = []
+        # dispatch-ahead pipeline (mirrors Engine's): entries are
+        # (per_shard request lists, the step's (ns, max_seqs) token
+        # array still on device)
+        self._inflight: Deque[Tuple[List[List[Request]], jax.Array]] = \
+            collections.deque()
+        self._tok_dev = None
+        self._emitted: List[Tuple[Request, int]] = []
+        for sch in self.scheds:
+            sch.before_preempt = self._sync_for_preempt
         self.stats = {"prefill_s": 0.0, "decode_s": 0.0,
                       "prefill_tokens": 0, "decode_steps": 0,
                       "decode_tokens": 0, "preemptions": 0,
                       "cp_requests": 0, "cp_tokens": 0, "cp_s": 0.0,
-                      "tree_evictions": 0, "pages_in_use_peak": 0}
+                      "tree_evictions": 0, "pages_in_use_peak": 0,
+                      "dispatch_depth_peak": 0, "pipeline_drains": 0}
         for k in self.scheds[0].stats:
             self.stats[k] = 0
         self.shard_stats = [{"prefill_tokens": 0, "decode_tokens": 0,
@@ -204,14 +217,24 @@ class ShardedEngine:
         self._cp_decode = None
 
     # ------------------------------------------------------------- intake
-    def submit(self, prompt: Sequence[int], max_new_tokens: int,
-               arrival: float = 0.0, eos_id: Optional[int] = None
-               ) -> Request:
+    def make_request(self, prompt: Sequence[int], max_new_tokens: int,
+                     arrival: float = 0.0, eos_id: Optional[int] = None
+                     ) -> Request:
+        """Build a request WITHOUT queueing it — the staged intake.
+        Routing happens at :meth:`prefill`; over-long requests that only
+        the context-parallel fallback can serve must go through
+        :meth:`submit` + the legacy loop instead."""
         req = Request(rid=self._next_rid,
                       prompt=np.asarray(prompt, np.int32),
                       max_new_tokens=max_new_tokens, arrival=arrival,
                       eos_id=eos_id)
         self._next_rid += 1
+        return req
+
+    def submit(self, prompt: Sequence[int], max_new_tokens: int,
+               arrival: float = 0.0, eos_id: Optional[int] = None
+               ) -> Request:
+        req = self.make_request(prompt, max_new_tokens, arrival, eos_id)
         shard = self.router.pick(req)
         if shard < 0:
             need = len(req.prompt) + max_new_tokens
@@ -276,66 +299,80 @@ class ShardedEngine:
             record_prefill(per_shard[s], takes[s], tok[s],
                            self._cur_tok[s], wall)
 
-    def _run_decode(self, per_shard: List[List[Request]]) -> None:
+    def _wall(self) -> float:
+        return (0.0 if self._t0 is None
+                else time.perf_counter() - self._t0)
+
+    # ------------------------------------------- dispatch-ahead pipeline
+    def _dispatch_decode(self, per_shard: List[List[Request]]) -> None:
+        """Enqueue one shard_map decode step across ALL shards without
+        blocking on its tokens (see ``Engine._dispatch_decode``)."""
         ns, ms = self.n_shards, self.ecfg.max_seqs
         rows = [build_decode_batch(reqs, ms) for reqs in per_shard]
         kv_len = np.stack([r[0] for r in rows])
         active = np.stack([r[1] for r in rows])
         table = np.stack([sch.block_table for sch in self.scheds])
+        if self._tok_dev is None:
+            self._tok_dev = jnp.asarray(self._cur_tok)
         t0 = time.perf_counter()
         tok, self.caches = self._decode(
-            self.params, jnp.asarray(self._cur_tok), self.caches,
+            self.params, self._tok_dev, self.caches,
             jnp.asarray(table), jnp.asarray(kv_len), jnp.asarray(active))
-        tok = np.asarray(tok)
+        self._tok_dev = jnp.where(jnp.asarray(active), tok, self._tok_dev)
         self.stats["decode_s"] += time.perf_counter() - t0
         self.stats["decode_steps"] += 1
-        for s in range(ns):
-            self.stats["decode_tokens"] += len(per_shard[s])
-            self.shard_stats[s]["decode_tokens"] += len(per_shard[s])
-            record_decode(per_shard[s], tok[s], self._cur_tok[s])
+        for reqs in per_shard:
+            for r in reqs:
+                r.dispatched += 1
+        self._inflight.append(([list(reqs) for reqs in per_shard], tok))
+        self.stats["dispatch_depth_peak"] = max(
+            self.stats["dispatch_depth_peak"], len(self._inflight))
 
-    def _wall(self) -> float:
-        return (0.0 if self._t0 is None
-                else time.perf_counter() - self._t0)
+    def _observe_one(self) -> None:
+        per_shard, tok_dev = self._inflight.popleft()
+        t0 = time.perf_counter()
+        tok = np.asarray(tok_dev)
+        self.stats["decode_s"] += time.perf_counter() - t0
+        for s, reqs in enumerate(per_shard):
+            for r in reqs:
+                r.dispatched -= 1
+                if r.state != "running" or r.done:
+                    continue        # EOS overrun under dispatch-ahead
+                r.cache_len += 1
+                t = int(tok[s][r.slot])
+                r.out.append(t)
+                self._cur_tok[s, r.slot] = t
+                self.stats["decode_tokens"] += 1
+                self.shard_stats[s]["decode_tokens"] += 1
+                if r.t_first is None:
+                    r.t_first = self._wall()
+                if self.ecfg.prefix_cache \
+                        and r.cache_len % self.page_size == 0:
+                    self.scheds[s].note_cached(r)
+                self._emitted.append((r, t))
+        if not self._inflight:
+            self._tok_dev = None    # host vector authoritative again
 
-    def step(self, now: float = float("inf")) -> Dict:
-        """One fleet iteration: at most one arrived context-parallel
-        request (they are served solo and synchronously), then per-shard
-        admission plans and at most one shard_map prefill + one
-        shard_map decode across shards."""
-        n_cp = 0
-        if self._cp_queue and self._cp_queue[0].arrival <= now:
-            self._run_cp(self._cp_queue.popleft())
-            n_cp = 1
-        plans = [sch.plan_step(now) for sch in self.scheds]
-        self.stats["preemptions"] += sum(len(p.preempted) for p in plans)
-        for s, sch in enumerate(self.scheds):
-            self.caches = drain_cache_ops(self.caches, sch,
-                                          self.swap_stores[s],
-                                          self.page_size, shard=s)
-        prefills = [p.prefills for p in plans]
-        if any(prefills):
-            self._run_prefill(prefills)
-            for s, sch in enumerate(self.scheds):
-                for r in prefills[s]:
-                    sch.note_cached(r)
-        decodes = [[r for r in sch.running
-                    if r.state == "running" and not r.done]
-                   for sch in self.scheds]
-        if any(decodes):
-            self._run_decode(decodes)
-            if self.ecfg.prefix_cache:
-                for s, sch in enumerate(self.scheds):
-                    for r in decodes[s]:
-                        if r.cache_len % self.page_size == 0:
-                            sch.note_cached(r)
-        n_done = 0
+    def drain(self) -> None:
+        if self._inflight:
+            self.stats["pipeline_drains"] += 1
+        while self._inflight:
+            self._observe_one()
+
+    def _sync_for_preempt(self) -> None:
+        self.drain()
+        self._finish_done()
+
+    def _finish_done(self) -> None:
         for sch in self.scheds:
-            for r in [r for r in list(sch.running) if r.done]:
+            for r in [r for r in sch.running
+                      if r.state == "running" and r.done
+                      and r.dispatched == 0]:
                 sch.finish(r)
                 r.t_done = self._wall()
                 self.finished.append(r)
-                n_done += 1
+
+    def _update_stats(self) -> None:
         for key in self.scheds[0].stats:
             self.stats[key] = sum(sch.stats[key] for sch in self.scheds)
         self.stats["tree_evictions"] = sum(
@@ -345,10 +382,161 @@ class ShardedEngine:
             self.stats["pages_in_use_peak"],
             sum(self.num_pages - sch.alloc.available
                 for sch in self.scheds))
+
+    # ------------------------------------------------------------- stages
+    def prefill(self, req: Request, now: float = float("inf")
+                ) -> Optional[Prefix]:
+        """Stage 1 over shard boundaries: route ``req`` (preemption
+        replays keep their original shard — its swap store and prefix
+        tree hold their state), admit it on that shard's scheduler, and
+        cache + sample exactly as the single-shard engine.  Returns None
+        when the shard cannot host it right now.  Raises for requests
+        only the context-parallel fallback could serve: CP decode is
+        synchronous and solo, so it is not staged — use :meth:`submit` +
+        :meth:`run` for those."""
+        if req.state not in ("waiting",) or req.slot >= 0:
+            raise ServingError(
+                f"request {req.rid}: prefill() on state {req.state!r} "
+                f"(slot {req.slot}); only waiting requests stage")
+        if self._t0 is None:
+            self._t0 = time.perf_counter()
+        fresh = req.shard < 0
+        shard = self.router.pick(req) if fresh else req.shard
+        if shard < 0:
+            raise ServingError(
+                f"request {req.rid}: no shard can page "
+                f"{len(req.prompt)} + {req.max_new_tokens} tokens; the "
+                f"context-parallel fallback is not staged — submit() + "
+                f"run() serve it synchronously")
+        sch = self.scheds[shard]
+        queued = req in sch.waiting         # preemption replay
+        if queued:
+            sch.waiting.remove(req)
+        ok = sch.admit(req)
+        if not ok:
+            self._sync_for_preempt()
+            ok = sch.admit(req)
+        if not ok:
+            if queued:
+                sch.waiting.appendleft(req)
+            return None
+        req.shard = shard
+        if fresh:
+            self.shard_stats[shard]["requests"] += 1
+        # snapshot: the final chunk's record_prefill grows ``context``
+        # by the sampled token (see Engine.prefill)
+        target = len(req.context)
+        first = True
+        while req.cache_len < target:
+            if not first:
+                ok = sch._cow_tail(req)
+                assert ok, "chunk continuation pages reserved at admission"
+            self.caches = drain_cache_ops(self.caches, sch,
+                                          self.swap_stores[shard],
+                                          self.page_size, shard=shard)
+            per = [[] for _ in range(self.n_shards)]
+            per[shard] = [req]
+            self._run_prefill(per)
+            sch.note_cached(req)
+            first = False
+        req.state = "prefilled"
+        self._update_stats()
+        return Prefix(req=req, token=int(req.out[-1]), slot=req.slot,
+                      shard=shard)
+
+    def insert(self, prefix: Prefix, slot: Optional[int] = None) -> bool:
+        """Stage 2: bind a prefilled request into its shard's decode
+        batch.  False when the handle went stale (preempted since
+        prefill) — re-prefill it."""
+        req = prefix.req
+        if slot is not None and slot != req.slot:
+            raise ServingError(
+                f"request {req.rid}: insert at slot {slot} but its pages "
+                f"live at slot {req.slot} on shard {req.shard}; slots "
+                f"bind at prefill")
+        if req.state != "prefilled":
+            return False
+        req.state = "running"
+        tok = int(req.out[-1])
+        self._cur_tok[req.shard, req.slot] = tok
+        if self._tok_dev is not None:
+            self._tok_dev = self._tok_dev.at[req.shard, req.slot].set(tok)
+        return True
+
+    def generate_step(self, now: float = float("inf")
+                      ) -> List[Tuple[Request, int]]:
+        """Stage 3: per-shard growth/preemption plans, ONE shard_map
+        decode dispatch across all shards, and the ``(request, token)``
+        pairs observed this call (one pipeline-depth behind dispatch
+        when ``dispatch_ahead > 0``)."""
+        preempted = 0
+        for sch in self.scheds:
+            preempted += len(sch.plan_decode(now))
+        self.stats["preemptions"] += preempted
+        for s, sch in enumerate(self.scheds):
+            self.caches = drain_cache_ops(self.caches, sch,
+                                          self.swap_stores[s],
+                                          self.page_size, shard=s)
+        decodes = [[r for r in sch.running
+                    if r.state == "running" and not r.budget_spent]
+                   for sch in self.scheds]
+        if any(decodes):
+            self._dispatch_decode(decodes)
+        depth = self.ecfg.dispatch_ahead if any(decodes) else 0
+        while len(self._inflight) > depth:
+            self._observe_one()
+        self._finish_done()
+        self._update_stats()
+        out, self._emitted = self._emitted, []
+        return out
+
+    @property
+    def preempted_waiting(self) -> List[Request]:
+        """Preemption victims awaiting re-prefill, across all shards."""
+        return [r for sch in self.scheds for r in sch.waiting
+                if r.n_preempt > 0]
+
+    # ------------------------------------------------- legacy closed loop
+    def step(self, now: float = float("inf")) -> Dict:
+        """One fleet iteration of the legacy driver, now layered on the
+        stages: at most one arrived context-parallel request (served
+        solo and synchronously), then per-shard admission plans and at
+        most one shard_map prefill + one shard_map decode across shards,
+        observed synchronously."""
+        self.drain()
+        n_cp = 0
+        if self._cp_queue and self._cp_queue[0].arrival <= now:
+            self._run_cp(self._cp_queue.popleft())
+            n_cp = 1
+        n_pre = 0
+        for sch in self.scheds:
+            n_pre += len(sch.plan_decode(now))
+        self.stats["preemptions"] += n_pre
+        prefills = [sch.plan_prefills(now) for sch in self.scheds]
+        for s, sch in enumerate(self.scheds):
+            self.caches = drain_cache_ops(self.caches, sch,
+                                          self.swap_stores[s],
+                                          self.page_size, shard=s)
+        if any(prefills):
+            self._run_prefill(prefills)
+            for s, sch in enumerate(self.scheds):
+                for r in prefills[s]:
+                    sch.note_cached(r)
+        decodes = [[r for r in sch.running
+                    if r.state == "running" and not r.budget_spent]
+                   for sch in self.scheds]
+        if any(decodes):
+            self._dispatch_decode(decodes)
+            self.drain()
+        n0 = len(self.finished)
+        self._finish_done()
+        n_done = len(self.finished) - n0
+        self._emitted.clear()
+        self._update_stats()
         return {"prefilled": sum(len(p) for p in prefills),
                 "decoded": sum(len(d) for d in decodes),
                 "finished": n_done + n_cp, "cp_served": n_cp,
-                "preempted": sum(len(p.preempted) for p in plans)}
+                "preempted": n_pre}
 
     # ------------------------------------------- context-parallel fallback
     def _cp_setup(self):
@@ -408,7 +596,7 @@ class ShardedEngine:
     # ---------------------------------------------------------------- run
     def has_work(self) -> bool:
         return (any(sch.has_work() for sch in self.scheds)
-                or bool(self._cp_queue))
+                or bool(self._cp_queue) or bool(self._inflight))
 
     def run(self, realtime: bool = False) -> List[Request]:
         """Drain all submitted requests (paged shards + CP fallback, in

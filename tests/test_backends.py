@@ -525,19 +525,26 @@ def test_unpageable_backend_rejected_at_admission():
         Engine(cfg, params, EngineConfig(attn_backend="typo"))
 
 
-def test_engine_config_legacy_moba_impl_alias():
+def test_engine_config_moba_impl_removed():
+    """The long-deprecated ``moba_impl`` alias is gone: constructing an
+    EngineConfig with it raises the structured error pointing at
+    ``attn_backend`` instead of silently resolving a precedence."""
     cfg = get_smoke_config("moba-340m")
     params = T.init_lm(jax.random.PRNGKey(0), cfg)
-    eng = Engine(cfg, params, EngineConfig(moba_impl="xla"))
-    assert eng.attn_backend == "xla"
-    # an explicitly set new field always wins (same precedence as the
-    # CLI shim), including an explicit "reference"
-    eng = Engine(cfg, params, EngineConfig(attn_backend="flash",
-                                           moba_impl="xla"))
-    assert eng.attn_backend == "flash"
-    eng = Engine(cfg, params, EngineConfig(attn_backend="reference",
-                                           moba_impl="xla"))
-    assert eng.attn_backend == "reference"
+    with pytest.raises(UnsupportedFeatureError) as ei:
+        EngineConfig(moba_impl="xla")
+    assert ei.value.feature == "moba_impl"
+    assert "attn_backend='xla'" in str(ei.value)
+    assert isinstance(ei.value, ServingError)  # CLI handling unchanged
+    with pytest.raises(UnsupportedFeatureError):
+        EngineConfig(attn_backend="flash", moba_impl="xla")
+    # the InitVar leaves no field behind: replace() round-trips without
+    # resurrecting the alias, and the default backend is unchanged
+    import dataclasses
+    ecfg = dataclasses.replace(EngineConfig(attn_backend="flash"),
+                               max_seqs=2)
+    assert ecfg.attn_backend == "flash" and ecfg.max_seqs == 2
+    assert "moba_impl" not in {f.name for f in dataclasses.fields(ecfg)}
     assert Engine(cfg, params, EngineConfig()).attn_backend == "reference"
 
 

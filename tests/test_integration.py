@@ -10,7 +10,7 @@ from repro.launch.serve import serve
 
 def test_train_loss_decreases(tmp_path):
     _, losses = train("moba-340m", steps=30, batch=4, seq=128, smoke=True,
-                      moba_impl="sparse", lr=3e-3)
+                      attn_backend="sparse", lr=3e-3)
     assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.1
 
 
@@ -67,5 +67,5 @@ def test_serve_ssm_arch():
 def test_kernel_impl_in_training_step():
     """One full train step through the Pallas (interpret) kernel path."""
     _, losses = train("moba-340m", steps=2, batch=2, seq=128, smoke=True,
-                      moba_impl="kernel", lr=1e-3)
+                      attn_backend="kernel", lr=1e-3)
     assert np.isfinite(losses).all()

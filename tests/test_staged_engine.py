@@ -1,0 +1,305 @@
+"""Staged engine API (DESIGN.md §9): prefill / insert / generate_step.
+
+Pins the PR acceptance surface: tokens produced by driving the stages
+manually — including with dispatch-ahead decode in flight — are exactly
+the tokens from the legacy ``run()`` closed loop, across attention
+backends, chunked prefill, the prefix cache, preemption replay, and
+1/2/4 shards (shard-count invariance runs in a subprocess on the
+simulated 8-device mesh, same trick as test_sharded_serving.py).  Also
+covers the staged-protocol contracts (stale ``Prefix`` handles, slot
+binding, state guards), the open-loop trace driver and its metrics, the
+asyncio streaming front end, the unified backend-spec resolver, and the
+shaped errors left behind by the ``moba_impl`` removal.
+"""
+import asyncio
+import collections
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import backends as B
+from repro.models import transformer as T
+from repro.serving import frontend as FE
+from repro.serving.engine import (Engine, EngineConfig,
+                                  resolve_engine_backend)
+from repro.serving.scheduler import ServingError, UnsupportedFeatureError
+
+_ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke_config("moba-340m")
+    params = T.init_lm(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _prompts(cfg, lens, seed=0, shared_prefix=0):
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(0, cfg.vocab_size, shared_prefix, dtype=np.int32)
+    return [np.concatenate([prefix[:min(n, shared_prefix)],
+                            rng.integers(0, cfg.vocab_size,
+                                         max(n - shared_prefix, 0),
+                                         dtype=np.int32)])
+            for n in lens]
+
+
+def _legacy_tokens(cfg, params, ecfg, prompts, gen, eos_id=None):
+    """Reference stream: the legacy closed loop, fully synchronous."""
+    eng = Engine(cfg, params,
+                 dataclasses.replace(ecfg, dispatch_ahead=0))
+    reqs = [eng.submit(p, gen, eos_id=eos_id) for p in prompts]
+    eng.run()
+    return [list(r.out) for r in reqs], eng
+
+
+def _staged_tokens(cfg, params, ecfg, prompts, gen, eos_id=None):
+    """Drive the three stages by hand: admit everything that fits, one
+    generate_step per iteration, replay preemption victims first."""
+    eng = Engine(cfg, params, ecfg)
+    reqs = [eng.make_request(p, gen, eos_id=eos_id) for p in prompts]
+    pending = collections.deque(reqs)
+    while pending or eng.has_work():
+        for r in list(eng.preempted_waiting):
+            p = eng.prefill(r)
+            if p is None:
+                break
+            assert eng.insert(p)
+        while pending:
+            p = eng.prefill(pending[0])
+            if p is None:
+                break
+            assert eng.insert(p)
+            pending.popleft()
+        eng.generate_step()
+    return [list(r.out) for r in reqs], eng
+
+
+# ------------------------------------------------ staged == legacy matrix
+@pytest.mark.parametrize("kw", [
+    dict(dispatch_ahead=0),
+    dict(attn_backend="xla", prefill_chunk=16, dispatch_ahead=1),
+    dict(attn_backend="flash", dispatch_ahead=2),
+    dict(prefix_cache=True, prefill_chunk=24, dispatch_ahead=2),
+], ids=["ref-sync", "xla-chunked-da1", "flash-da2", "prefix-da2"])
+def test_staged_matches_legacy(setup, kw):
+    """Acceptance: manual prefill/insert/generate_step driving — with
+    the decode pipeline as deep as configured — reproduces the legacy
+    run() loop token-for-token on the same EngineConfig."""
+    cfg, params = setup
+    prompts = _prompts(cfg, (40, 33, 21), seed=1, shared_prefix=24)
+    ecfg = EngineConfig(max_seqs=4, max_seq_len=96, **kw)
+    want, _ = _legacy_tokens(cfg, params, ecfg, prompts, gen=10)
+    got, eng = _staged_tokens(cfg, params, ecfg, prompts, gen=10)
+    assert got == want
+    da = kw.get("dispatch_ahead", 1)
+    if da:   # the pipeline must actually have been in flight
+        assert eng.stats["dispatch_depth_peak"] >= da
+    else:
+        assert eng.stats["dispatch_depth_peak"] <= 1
+    if kw.get("prefix_cache"):
+        assert eng.stats["prefix_hits"] > 0
+
+
+def test_staged_eos_overrun_discarded(setup):
+    """With dispatch_ahead > 1 the pipeline overruns EOS by up to a
+    depth of steps; the overrun tokens must be observed and DISCARDED,
+    leaving the same post-EOS cut as the synchronous loop."""
+    cfg, params = setup
+    prompts = _prompts(cfg, (36,), seed=2)
+    ecfg = EngineConfig(max_seqs=2, max_seq_len=96)
+    base, _ = _legacy_tokens(cfg, params, ecfg, prompts, gen=12)
+    eos = base[0][5]               # a token the stream provably emits
+    want, _ = _legacy_tokens(cfg, params, ecfg, prompts, gen=12,
+                             eos_id=eos)
+    assert len(want[0]) < len(base[0])       # EOS actually cut the run
+    got, _ = _staged_tokens(
+        cfg, params, dataclasses.replace(ecfg, dispatch_ahead=2),
+        prompts, gen=12, eos_id=eos)
+    assert got == want
+
+
+# --------------------------------------------- open-loop trace + replay
+def test_open_loop_preemption_replay_exact(setup):
+    """Open-loop arrivals on an undersized pool with dispatch_ahead=2:
+    preemption drains the pipeline mid-flight, victims replay through
+    prefill(), and every request still matches the legacy stream."""
+    cfg, params = setup
+    prompts = _prompts(cfg, (40, 38, 35, 33, 30), seed=3)
+    ecfg = EngineConfig(max_seqs=2, max_seq_len=64, num_pages=6,
+                        dispatch_ahead=2)
+    want, _ = _legacy_tokens(cfg, params, ecfg, prompts, gen=10)
+    eng = Engine(cfg, params, ecfg)
+    trace = [FE.TraceItem(prompt=p, max_new_tokens=10, arrival_step=2 * i)
+             for i, p in enumerate(prompts)]
+    m = FE.time_open_loop(eng, trace)
+    reqs = m.pop("_requests")
+    assert [list(r.out) for r in reqs] == want
+    assert eng.stats["preemptions"] > 0, "trace should exercise replay"
+    assert eng.stats["pipeline_drains"] > 0
+    assert m["dispatch_depth_peak"] >= 2
+    assert m["requests"] == len(prompts)
+    assert m["generated_tokens"] == sum(len(t) for t in want)
+    assert m["sustained_tokens_per_s"] > 0
+    for key in ("ttft_p50_ms", "ttft_p99_ms", "tpot_p50_ms",
+                "tpot_p99_ms", "decode_steps"):
+        assert m[key] >= 0
+    assert m["ttft_p99_ms"] >= m["ttft_p50_ms"]
+
+
+# -------------------------------------------------- protocol contracts
+def test_insert_contract_and_stale_handles(setup):
+    """Slot binding, state guards, and handle staleness: insert() at the
+    wrong slot is an error, prefill() on a running request is an error,
+    and a Prefix whose request was preempted before insertion returns
+    False (the caller re-prefills via preempted_waiting)."""
+    cfg, params = setup
+    prompts = _prompts(cfg, (47, 37), seed=4)
+    eng = Engine(cfg, params, EngineConfig(max_seqs=2, max_seq_len=64,
+                                           num_pages=6))
+    ra = eng.make_request(prompts[0], 12)
+    pa = eng.prefill(ra)
+    assert pa is not None and pa.slot == ra.slot and ra.state == "prefilled"
+    assert pa.token == ra.out[-1]
+    with pytest.raises(ServingError, match="slot"):
+        eng.insert(pa, slot=pa.slot + 1)
+    assert eng.insert(pa) and ra.state == "running"
+    with pytest.raises(ServingError, match="state"):
+        eng.prefill(ra)                       # running requests don't stage
+    # B is prefilled but never inserted; A's page growth on the
+    # exhausted pool preempts it (youngest), invalidating the handle
+    rb = eng.make_request(prompts[1], 12)
+    pb = eng.prefill(rb)
+    assert pb is not None and rb.state == "prefilled"
+    for _ in range(8):
+        eng.generate_step()
+        if rb.n_preempt > 0:
+            break
+    assert rb.n_preempt > 0 and rb.state == "waiting"
+    assert eng.insert(pb) is False            # stale: pages were released
+    assert rb in eng.preempted_waiting
+    eng.run()            # legacy driver interop: re-admits the victim
+    assert ra.done and rb.done
+    assert eng.generate_step() == []          # idle engine: clean no-op
+
+
+def test_async_frontend_streams_match_legacy(setup):
+    """The asyncio front end streams exactly the legacy tokens, first
+    token from prefill and the rest from pipelined generate_steps."""
+    cfg, params = setup
+    prompts = _prompts(cfg, (40, 33, 21, 28), seed=5)
+    ecfg = EngineConfig(max_seqs=4, max_seq_len=96, dispatch_ahead=1)
+    want, _ = _legacy_tokens(cfg, params, ecfg, prompts, gen=10)
+
+    async def main():
+        eng = Engine(cfg, params, ecfg)
+        fe = FE.AsyncFrontend(eng)
+        await fe.start()
+        reqs = [fe.submit(p, 10) for p in prompts]
+        outs = []
+        for r in reqs:
+            toks = []
+            async for t in fe.stream(r):
+                toks.append(t)
+            outs.append(toks)
+        await fe.close()
+        return outs, reqs
+
+    outs, reqs = asyncio.run(main())
+    assert outs == want
+    assert [list(r.out) for r in reqs] == want
+    assert all(r.t_first >= r.arrival for r in reqs)
+
+
+# -------------------------------------------- backend-spec resolution
+def test_resolve_backend_spec_unified():
+    """One resolver for every surface: empty specs fall back to the
+    caller's default, names validate eagerly, engine surfaces wrap the
+    registry error in the serving-error hierarchy."""
+    assert B.resolve_backend_spec("", default="reference") == "reference"
+    assert B.resolve_backend_spec(None, default="sparse") == "sparse"
+    assert B.resolve_backend_spec("  xla  ") == "xla"
+    assert B.resolve_backend_spec("flash:interpret") == "flash"
+    with pytest.raises(B.BackendCapabilityError):
+        B.resolve_backend_spec("no-such-backend")
+    assert resolve_engine_backend("", "reference") == "reference"
+    with pytest.raises(UnsupportedFeatureError) as ei:
+        resolve_engine_backend("no-such-backend", "reference")
+    assert ei.value.feature == "attn_backend"
+
+
+def test_moba_impl_removed_everywhere(setup):
+    """The moba_impl deprecation is finished: every surface rejects it
+    with a shaped error naming the attn_backend replacement."""
+    from repro.launch.train import train
+    with pytest.raises(ValueError, match="attn_backend='xla'"):
+        train("moba-340m", moba_impl="xla")
+    with pytest.raises(UnsupportedFeatureError, match="attn_backend"):
+        EngineConfig(moba_impl="sparse")
+
+
+@pytest.mark.parametrize("module", ["repro.launch.train",
+                                    "repro.launch.serve"])
+def test_moba_impl_cli_flag_rejected(module):
+    """Both CLIs fail fast (exit 2) on --moba-impl with a message that
+    names the --attn-backend replacement — no silent precedence."""
+    env = dict(os.environ, JAX_PLATFORMS="cpu",
+               PYTHONPATH=os.path.join(_ROOT, "src"))
+    r = subprocess.run(
+        [sys.executable, "-m", module, "--moba-impl", "xla"],
+        capture_output=True, text=True, env=env, timeout=300)
+    assert r.returncode == 2, (r.stdout, r.stderr)
+    err = r.stderr + r.stdout
+    assert "--moba-impl was removed" in err
+    assert "--attn-backend xla" in err
+
+
+# ------------------------------------------- shard-count invariance
+def test_sharded_staged_shard_count_invariance():
+    """Staged driving over 1/2/4 shards (open-loop arrivals, dispatch-
+    ahead on) reproduces the single-host legacy stream — subprocess on
+    the simulated 8-device mesh, as the device count must be fixed
+    before jax initializes."""
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               JAX_PLATFORMS="cpu",
+               PYTHONPATH=os.path.join(_ROOT, "src"))
+    code = textwrap.dedent("""
+    import jax, numpy as np
+    from repro.configs import get_smoke_config
+    from repro.models import transformer as T
+    from repro.serving import frontend as FE
+    from repro.serving.engine import Engine, EngineConfig
+    from repro.serving.sharded import ShardedEngine
+    cfg = get_smoke_config("moba-340m")
+    params = T.init_lm(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(6)
+    prompts = [rng.integers(0, cfg.vocab_size, n, dtype=np.int32)
+               for n in (40, 33, 21, 28)]
+    base = Engine(cfg, params, EngineConfig(max_seqs=4, max_seq_len=64,
+                                            dispatch_ahead=0))
+    reqs = [base.submit(p, max_new_tokens=8) for p in prompts]
+    base.run()
+    want = [list(r.out) for r in reqs]
+    trace = [FE.TraceItem(prompt=p, max_new_tokens=8, arrival_step=i)
+             for i, p in enumerate(prompts)]
+    for ns in (1, 2, 4):
+        sh = ShardedEngine(cfg, params,
+                           EngineConfig(max_seqs=2, max_seq_len=64,
+                                        dispatch_ahead=1), n_shards=ns)
+        sreqs = FE.run_open_loop(sh, trace)
+        assert [list(r.out) for r in sreqs] == want, ns
+        assert sh.stats["dispatch_depth_peak"] >= 1, ns
+        print("OK", ns, "shards:", sorted({r.shard for r in sreqs}))
+    """)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env, timeout=900)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    assert r.stdout.count("OK") == 3
